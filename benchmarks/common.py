@@ -1,0 +1,81 @@
+"""Shared harness for the paper-figure benchmarks.
+
+The paper trains a small CNN on CIFAR-10 over N wireless workers
+(4x GTX1080Ti, PyTorch). Offline substitution (DESIGN.md): an MLP on the
+synthetic CIFAR-shaped classification task, Dirichlet non-IID partition,
+identical protocol/channel parameters. Scale is reduced (input 256-d,
+64-hidden MLP) so the full 5-figure suite runs on one CPU core in minutes;
+the *comparisons* (P, N, ε sweeps; scheme A vs B) are what reproduce the
+paper's claims, not absolute accuracies.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.core import protocol as P
+from repro.data import classification_dataset, dirichlet_partition, FederatedBatcher
+import repro.models.mlp as mlp
+
+INPUT_DIM = 256
+HIDDEN = 64
+BATCH = 32
+DATA_N = 6000
+
+
+def run_protocol(scheme: str, *, n_workers: int, epsilon: float,
+                 p_dbm: float = 60.0, steps: int = 250, gamma: float = 0.02,
+                 eta: float = 0.4, clip: float = 1.0, seed: int = 0,
+                 eval_every: int = 0, participation: float = 1.0) -> Dict:
+    cfg = get_arch("dwfl-paper").replace(d_model=HIDDEN)
+    proto = P.ProtocolConfig(scheme=scheme, n_workers=n_workers, gamma=gamma,
+                             eta=eta, clip=clip, p_dbm=p_dbm, seed=seed,
+                             target_epsilon=epsilon,
+                             participation=participation)
+    chan = proto.channel()
+    rep = P.epsilon_report(proto, chan)
+
+    x, y = classification_dataset(DATA_N, input_dim=INPUT_DIM, seed=seed)
+    parts = dirichlet_partition(y, n_workers, alpha=0.5, seed=seed)
+    bat = FederatedBatcher(x, y, parts, batch_size=BATCH, seed=seed)
+
+    key = jax.random.PRNGKey(seed)
+    params = mlp.init(key, cfg, input_dim=INPUT_DIM)
+    wp = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n_workers,) + a.shape), params)
+    step = jax.jit(P.make_train_step(cfg, proto))
+    evaluate = jax.jit(P.make_eval_fn(cfg))
+
+    curve: List = []
+    # warmup/compile
+    key, sk = jax.random.split(key)
+    wp, _ = step(wp, bat.next(), sk)
+    t0 = time.perf_counter()
+    for t in range(steps):
+        key, sk = jax.random.split(key)
+        wp, metrics = step(wp, bat.next(), sk)
+        if eval_every and t % eval_every == 0:
+            el, ea = evaluate(wp, bat.full(128))
+            curve.append((t, float(el), float(ea)))
+    jax.tree_util.tree_leaves(wp)[0].block_until_ready()
+    us_per_step = (time.perf_counter() - t0) / steps * 1e6
+
+    ev_loss, ev_acc = evaluate(wp, bat.full(128))
+    return {
+        "us_per_call": us_per_step,
+        "final_loss": float(ev_loss),
+        "final_acc": float(ev_acc),
+        "epsilon": rep["epsilon_worst"],
+        "epsilon_sampled": rep.get("epsilon_sampled"),
+        "sigma": rep["sigma"],
+        "curve": curve,
+    }
+
+
+def row(name: str, res: Dict, derived_key: str = "final_acc") -> str:
+    return f"{name},{res['us_per_call']:.1f},{res[derived_key]:.4f}"

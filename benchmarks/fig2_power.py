@@ -1,0 +1,20 @@
+"""Fig. 2: convergence of DWFL as transmit power P varies.
+
+Paper claim: stronger transmit power -> faster convergence (better
+channel-noise resistance at fixed privacy level)."""
+from benchmarks.common import row, run_protocol
+
+POWERS = [20.0, 40.0, 60.0, 80.0]
+
+
+def main(steps: int = 250):
+    rows = []
+    for p in POWERS:
+        res = run_protocol("dwfl", n_workers=10, epsilon=0.5, p_dbm=p,
+                           steps=steps, seed=1)
+        rows.append(row(f"fig2/dwfl_P{int(p)}dBm", res))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,21 @@
+"""Fig. 3: convergence of DWFL as the worker count N varies.
+
+Paper claim: DWFL performs better with more workers (the per-worker privacy
+budget decays as 1/sqrt(N), so less noise per worker at the same ε)."""
+from benchmarks.common import row, run_protocol
+
+WORKERS = [5, 10, 20, 30]
+
+
+def main(steps: int = 250):
+    rows = []
+    for eps in (0.1, 0.5):
+        for n in WORKERS:
+            res = run_protocol("dwfl", n_workers=n, epsilon=eps,
+                               steps=steps, seed=1)
+            rows.append(row(f"fig3/dwfl_N{n}_eps{eps}", res))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,20 @@
+"""Fig. 4: convergence of DWFL as the privacy budget ε varies.
+
+Paper claim: smaller ε (more noise) dampens learning; larger ε converges
+better."""
+from benchmarks.common import row, run_protocol
+
+EPSILONS = [0.1, 0.25, 0.5, 1.0]
+
+
+def main(steps: int = 250):
+    rows = []
+    for eps in EPSILONS:
+        res = run_protocol("dwfl", n_workers=10, epsilon=eps,
+                           steps=steps, seed=1)
+        rows.append(row(f"fig4/dwfl_eps{eps}", res))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

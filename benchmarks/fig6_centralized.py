@@ -1,0 +1,20 @@
+"""Fig. 6: decentralized (DWFL) vs centralized parameter-server topology.
+
+Paper claim: the decentralized algorithm is more robust and converges
+better than the centralized PS scheme at the same privacy level (and has no
+single point of failure)."""
+from benchmarks.common import row, run_protocol
+
+
+def main(steps: int = 250):
+    rows = []
+    for n in (10, 30):
+        for scheme in ("dwfl", "centralized"):
+            res = run_protocol(scheme, n_workers=n, epsilon=0.5,
+                               steps=steps, seed=1)
+            rows.append(row(f"fig6/{scheme}_N{n}", res))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,72 @@
+"""Dev loop: fast forward/backward smoke over every reduced arch."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS, get_arch
+from repro.models import model as M
+from repro.configs import dwfl_paper
+
+def batch_for(cfg, B=2, S=64):
+    key = jax.random.PRNGKey(0)
+    b = {}
+    if cfg.family == "mlp":
+        return {"x": jax.random.normal(key, (B, dwfl_paper.INPUT_DIM)),
+                "y": jnp.zeros((B,), jnp.int32)}
+    if cfg.embedding_inputs and cfg.is_encoder_decoder:
+        b["embeds"] = jax.random.normal(key, (B, cfg.encoder_seq_len, cfg.d_model)) * 0.02
+        b["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    elif cfg.embedding_inputs:
+        b["embeds"] = jax.random.normal(key, (B, S, cfg.d_model)) * 0.02
+        b["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    else:
+        b["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return b
+
+
+def main():
+    names = sys.argv[1:] or list(ARCHS)
+    for name in names:
+        cfg = get_arch(name).reduced()
+        key = jax.random.PRNGKey(42)
+        params = M.init_params(key, cfg)
+        n = M.count_params(params)
+        batch = batch_for(cfg)
+        loss, grads = jax.value_and_grad(M.loss_fn)(params, batch, cfg)
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree_util.tree_leaves(grads)))
+        ok_nan = bool(jnp.isfinite(loss)) and bool(jnp.isfinite(gnorm))
+        print(f"{name:24s} params={n/1e6:7.2f}M loss={float(loss):8.4f} gnorm={float(gnorm):9.3f} finite={ok_nan}")
+
+        if cfg.family != "mlp":
+            # prefill + one decode step
+            pf_batch = dict(batch)
+            logits, cache = M.prefill(params, pf_batch, cfg)
+            S = batch.get("tokens", batch.get("embeds")).shape[1]
+            if cfg.is_encoder_decoder:
+                dec_batch = {"tokens": batch["tokens"][:, :1]}
+                full_cache = M.init_cache(cfg, 2, 128)
+                full_cache["enc_out"] = cache["enc_out"]
+                # splice prefill self-kv into the max-len cache
+                def splice(dst, src):
+                    return dst.at[:, :, :src.shape[2]].set(src)
+                full_cache["self"] = jax.tree_util.tree_map(splice, full_cache["self"], cache["self"])
+                lg, c2 = M.decode_step(params, dec_batch, full_cache, S, cfg)
+            else:
+                dec_batch = {k: (v[:, :1] if v.ndim > 1 else v) for k, v in batch.items()
+                             if k in ("tokens", "embeds")}
+                full_cache = M.init_cache(cfg, 2, 128)
+                def splice(dst, src):
+                    if dst.ndim == src.ndim and dst.shape != src.shape:
+                        # attention kv: pad time dim
+                        sl = tuple(slice(0, s) for s in src.shape)
+                        return dst.at[sl].set(src)
+                    return src.astype(dst.dtype) if dst.shape == src.shape else dst
+                full_cache = jax.tree_util.tree_map(splice, full_cache, cache)
+                lg, c2 = M.decode_step(params, dec_batch, full_cache, S, cfg)
+            print(f"{'':24s} decode logits {lg.shape} finite={bool(jnp.all(jnp.isfinite(lg)))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Hillclimb helper: re-lower one (arch, shape) pair, print the three
+roofline terms + top collective ops, store JSON under experiments/perf.
+
+    PYTHONPATH=src python scripts/perf_iter.py qwen2-72b train_4k iter1 [--top]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+import re
+import sys
+
+import jax
+
+from repro.launch import mesh as mesh_lib
+from repro.launch.specs import build_case
+from repro.utils import hlo_cost
+from repro.utils import roofline as rl
+
+
+def top_ops(txt, kind="collective", n=12):
+    comps = hlo_cost.parse_computations(txt)
+    entry = comps["__entry__"]
+    rows = []
+
+    def walk(comp, mult):
+        for op in comp.ops:
+            if op.opcode == "while":
+                mb = re.search(r"condition=%([\w.\-]+)", op.rest)
+                bb = re.search(r"body=%([\w.\-]+)", op.rest)
+                trips = hlo_cost._trip_count(comps[mb.group(1)]) if mb else 1
+                if bb and bb.group(1) in comps:
+                    walk(comps[bb.group(1)], mult * trips)
+                continue
+            if op.opcode in ("call", "conditional") or (
+                    op.opcode == "fusion" and "kind=kCall" in op.rest):
+                for t in re.findall(r"(?:to_apply|calls)=%([\w.\-]+)", op.rest):
+                    if t in comps:
+                        walk(comps[t], mult)
+                continue
+            is_coll = any(op.opcode.startswith(c) for c in
+                          ("all-reduce", "all-gather", "reduce-scatter",
+                           "all-to-all", "collective-permute"))
+            if kind == "collective" and not is_coll:
+                continue
+            b, _ = hlo_cost._parse_shape(op.shape_str)
+            rows.append((mult * b, op.opcode, op.shape_str[:70], mult))
+
+    walk(entry, 1.0)
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def main():
+    arch, shape, tag = sys.argv[1], sys.argv[2], sys.argv[3]
+    show_top = "--top" in sys.argv
+    mesh = mesh_lib.make_production_mesh()
+    case = build_case(arch, shape, mesh)
+    with mesh:
+        compiled = case.jit().lower(*case.args).compile()
+    txt = compiled.as_text()
+    cost = hlo_cost.analyze(txt)
+    roof = rl.from_analysis(case.name, {"flops": cost.flops,
+                                        "bytes accessed": cost.bytes},
+                            cost.collective_link_total,
+                            model_flops=case.model_flops, n_chips=256)
+    mem = compiled.memory_analysis()
+    hbm = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+           - mem.alias_size_in_bytes + mem.temp_size_in_bytes) / 1e9
+    rec = {"arch": arch, "shape": shape, "tag": tag, "hbm_gb": hbm,
+           "roofline": roof.as_dict(), "collectives": {
+               "counts": cost.collective_counts,
+               "link_bytes": cost.collective_link}}
+    os.makedirs("experiments/perf", exist_ok=True)
+    with open(f"experiments/perf/{arch}__{shape}__{tag}.json", "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    r = roof
+    print(f"{arch} {shape} [{tag}]  hbm={hbm:.1f}GB")
+    print(f"  compute={r.compute_s:.3e}s memory={r.memory_s:.3e}s "
+          f"collective={r.collective_s:.3e}s dom={r.dominant} "
+          f"mfu_bound={100*(r.mfu_bound or 0):.2f}%")
+    print(f"  colls: { {k: f'{v/1e9:.0f}GB' for k, v in cost.collective_link.items()} }")
+    if show_top:
+        for b, opc, shp, mult in top_ops(txt):
+            print(f"  {b/1e9:8.1f}GB {opc:22s} x{mult:<6g} {shp}")
+
+
+if __name__ == "__main__":
+    main()

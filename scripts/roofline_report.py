@@ -1,0 +1,58 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run JSONs."""
+import glob
+import json
+import os
+import sys
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(out_dir="experiments/dryrun", pod="singlepod"):
+    recs = {}
+    for f in glob.glob(os.path.join(out_dir, f"*__{pod}.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fixnote(rec):
+    r = rec["roofline"]
+    dom = r["dominant"]
+    if dom == "collective":
+        return "seq-parallel/comm-overlap to cut TP all-reduces"
+    if dom == "memory":
+        if rec["shape"] == "decode_32k" or rec["shape"] == "long_500k":
+            return "KV/state layout + fused decode kernels"
+        return "fuse elementwise chains; cut fp32 upcasts; remat policy"
+    return "larger per-chip tiles / batch to lift MXU utilization"
+
+
+def main():
+    pod = sys.argv[1] if len(sys.argv) > 1 else "singlepod"
+    recs = load(pod=pod)
+    archs = sorted({a for a, _ in recs})
+    print(f"| arch | shape | kind | params | compile s | HBM GB/chip | fits 16G | "
+          f"compute s | memory s | collective s | dominant | useful-FLOP ratio | MFU bound | one-line fix |")
+    print("|" + "---|" * 14)
+    for a in archs:
+        for s in ORDER:
+            rec = recs.get((a, s))
+            if rec is None:
+                continue
+            if not rec.get("ok"):
+                print(f"| {a} | {s} | - | - | - | - | - | - | - | - | FAIL | - | - | {rec.get('error','')[:60]} |")
+                continue
+            r = rec["roofline"]
+            m = rec["memory"]
+            ufr = r["useful_flop_ratio"] or 0.0
+            mfu = r["mfu_bound"] or 0.0
+            print(f"| {a} | {s} | {rec['kind']} | {rec['n_params']/1e9:.2f}B | "
+                  f"{rec['compile_s']:.0f} | {m['per_chip_gb']:.1f} | "
+                  f"{'Y' if m['fits_v5e_16gb'] else 'N'} | "
+                  f"{r['compute_s']:.2e} | {r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+                  f"**{r['dominant']}** | "
+                  f"{ufr:.2f} | {mfu*100 if mfu else 0:.1f}% | {fixnote(rec)} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpoint import save, restore  # noqa: F401

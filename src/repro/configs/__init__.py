@@ -1,0 +1,1 @@
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES  # noqa: F401

@@ -1,0 +1,23 @@
+"""The paper's own experimental scale: a small model trained with DWFL.
+
+The paper trains a small CNN on CIFAR-10 with N in {10..30} workers on
+4x GTX1080Ti. Offline substitution (DESIGN.md): an MLP classifier on a
+synthetic non-IID dataset of the same dimensionality (32*32*3 = 3072 -> 10).
+The transformer-shaped fields are unused for this config; ``repro.models``
+dispatches `family == "mlp"` to a plain MLP classifier.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dwfl-paper",
+    family="mlp",
+    source="this paper, Sec. V (CIFAR-10 -> synthetic substitution)",
+    num_layers=2,          # hidden layers
+    d_model=256,           # hidden width
+    num_heads=1,
+    num_kv_heads=1,
+    d_ff=256,
+    vocab_size=10,         # num classes
+)
+
+INPUT_DIM = 3072  # 32*32*3, CIFAR-shaped

@@ -1,0 +1,20 @@
+"""olmo-1b [dense]: non-parametric LayerNorm, no biases.
+
+16L d_model=2048 16H (kv=16) d_ff=8192 vocab=50304. [arXiv:2402.00838]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo-1b",
+    family="dense",
+    source="arXiv:2402.00838",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=50304,
+    norm_type="nonparametric_ln",
+    mlp_type="swiglu",
+    tie_embeddings=True,
+)

@@ -1,0 +1,30 @@
+"""zamba2-7b [hybrid]: Mamba2 backbone with shared attention blocks.
+
+81L d_model=3584 32H (GQA kv=32) d_ff=14336 vocab=32000, ssm_state=64.
+[arXiv:2411.15242]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    source="arXiv:2411.15242",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_conv_width=4,
+    ssm_chunk=128,
+    shared_attn_every=6,   # one shared attention(+MLP) block applied every 6 mamba layers
+    mlp_type="swiglu",
+    norm_type="rmsnorm",
+)
+
+# long_500k: the Mamba2 backbone is O(1)-state, but the shared attention
+# block must not build a 524k dense KV cache — run it with a sliding window
+# (documented deviation, DESIGN.md §Input-shape applicability).
+LONG_CONTEXT_VARIANT = CONFIG.replace(name="zamba2-7b-sw4096", sliding_window=4096)

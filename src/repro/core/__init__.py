@@ -1,0 +1,6 @@
+"""DWFL core: the paper's contribution (channel, privacy, protocol)."""
+from repro.core.channel import ChannelConfig, ChannelState  # noqa: F401
+from repro.core.protocol import (  # noqa: F401
+    ProtocolConfig, make_train_step, make_eval_fn, init_worker_params,
+    epsilon_report,
+)

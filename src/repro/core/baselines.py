@@ -1,0 +1,13 @@
+"""Baselines the paper compares against (Figs. 5-6).
+
+Thin façade over repro.core.dwfl: the orthogonal (pairwise) transmission
+scheme and the centralized parameter-server scheme are implemented next to
+the DWFL exchange so all three share the channel model and noise plumbing.
+Select via ProtocolConfig(scheme="orthogonal" | "centralized").
+"""
+from repro.core.dwfl import (  # noqa: F401
+    exchange_orthogonal,
+    exchange_orthogonal_ring,
+    exchange_centralized,
+)
+from repro.core.privacy import epsilon_orthogonal  # noqa: F401

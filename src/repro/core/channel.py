@@ -1,0 +1,107 @@
+"""Gaussian multiple-access channel (MAC) simulation for DWFL.
+
+Implements the paper's wireless model (Sec. III): per-worker complex channel
+coefficients h_k = e^{jθ_k}|h_k| (the phase is pre-cancelled at the sender,
+Eqt. 2, so only the magnitude matters downstream), per-worker transmit power
+budgets P_k, the power-alignment rule (Eqt. 3-4)
+
+    α_i = min_j |h_j|² P_j / (|h_i|² P_i),     c = min_j sqrt(|h_j|² P_j),
+
+and AWGN at each receiver, m_i ~ N(0, σ_m²) i.i.d. per round.
+
+On a real TPU deployment the "channel" is the ICI all-reduce (noiseless);
+the DP noise 𝒢_i survives, the channel noise m_i is simulation-only — both
+are explicit knobs here (DESIGN.md §Hardware adaptation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def dbm_to_watts(p_dbm) -> np.ndarray:
+    return 10.0 ** ((np.asarray(p_dbm, np.float64) - 30.0) / 10.0)
+
+
+@dataclass(frozen=True)
+class ChannelConfig:
+    n_workers: int
+    p_dbm: float = 60.0            # per-worker max transmit power (paper: 20..80 dBm)
+    sigma: float = 1.0             # DP Gaussian noise std σ (per entry of 𝒢_i)
+    sigma_m: float = 1.0           # channel AWGN std σ_m (paper: unit variance)
+    fading: str = "rayleigh"       # "rayleigh" | "unit"
+    seed: int = 0
+    beta_slack: float = 1.0        # β_i = beta_slack * (1 - α_i); α+β <= 1 (paper)
+    noise_policy: str = "surplus"  # "surplus" (paper: ALL surplus power into
+                                   # noise — best-channel workers then inject
+                                   # param-scale self-noise under fading
+                                   # spread) | "equal" (beyond-paper: equal
+                                   # per-worker noise amplitude ≈ c, robust;
+                                   # privacy calibration is policy-agnostic)
+
+    def realize(self) -> "ChannelState":
+        rng = np.random.default_rng(self.seed)
+        N = self.n_workers
+        if self.fading == "rayleigh":
+            h = rng.rayleigh(scale=1.0 / np.sqrt(2.0), size=N)
+            h = np.maximum(h, 0.05)  # keep the worst SNR bounded away from 0
+        elif self.fading == "unit":
+            h = np.ones(N)
+        else:
+            raise ValueError(self.fading)
+        P = np.full(N, float(dbm_to_watts(self.p_dbm)))
+        eff = h * h * P                                  # effective SNR |h_i|^2 P_i
+        # Every worker must inject SOME noise (the min-SNR worker would get
+        # alpha == 1, beta == 0 under the raw Eqt. 3): reserve a 5% power
+        # floor BEFORE aligning, so the alignment |h_i|sqrt(alpha_i P_i) = c
+        # stays EXACT for every worker (Eqt. 3-4 on the derated budget).
+        floor = 0.05
+        alpha = (1.0 - floor) * eff.min() / eff          # Eqt. (3), derated
+        c = float(np.sqrt((1.0 - floor) * eff.min()))    # Eqt. (4), derated
+        if self.noise_policy == "equal":
+            # equal noise amplitude |h_k|sqrt(β_k P_k) == c for every worker
+            # (capped by the power budget): bounded, uniform self-noise.
+            beta = np.minimum(1.0 - alpha, c ** 2 / eff)
+        else:  # "surplus" — the paper's policy
+            beta = self.beta_slack * (1.0 - alpha)
+        return ChannelState(cfg=self, h=h, P=P, alpha=alpha, beta=beta, c=c)
+
+
+@dataclass(frozen=True)
+class ChannelState:
+    """Realized (time-invariant) channel: the one-shot calibration the paper
+    performs at setup ("the constant c can be determined by communicating
+    with each other once at the beginning")."""
+    cfg: ChannelConfig
+    h: np.ndarray        # [N] |h_k|
+    P: np.ndarray        # [N] watts
+    alpha: np.ndarray    # [N] power fraction for the parameter signal
+    beta: np.ndarray     # [N] power fraction for the DP noise
+    c: float             # alignment constant
+
+    @property
+    def n_workers(self) -> int:
+        return self.cfg.n_workers
+
+    @property
+    def signal_scale(self) -> np.ndarray:
+        """|h_k| sqrt(α_k P_k) — equals c for every worker after alignment."""
+        return self.h * np.sqrt(self.alpha * self.P)
+
+    @property
+    def noise_scale(self) -> np.ndarray:
+        """|h_k| sqrt(β_k P_k): per-worker over-the-air DP-noise amplitude."""
+        return self.h * np.sqrt(self.beta * self.P)
+
+    @property
+    def aggregate_noise_std(self) -> np.ndarray:
+        """σ_s per receiver i: sqrt(Σ_{k≠i} |h_k|² β_k P_k σ² + σ_m²)."""
+        s2 = (self.noise_scale ** 2) * self.cfg.sigma ** 2
+        tot = s2.sum() - s2
+        return np.sqrt(tot + self.cfg.sigma_m ** 2)
+
+    def with_sigma(self, sigma: float) -> "ChannelState":
+        return dataclasses.replace(self, cfg=dataclasses.replace(self.cfg, sigma=sigma))

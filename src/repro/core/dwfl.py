@@ -1,0 +1,289 @@
+"""DWFL — Algorithm 1, executable form.
+
+Operates on *worker-stacked* pytrees: every parameter leaf carries a leading
+worker axis W (sharded over the mesh ``data`` axis in the distributed
+setting). The over-the-air aggregation Σ_k h_k x̃_k is a sum over that axis —
+XLA lowers it to ONE all-reduce, which is precisely the TPU realization of
+the paper's analog-MAC superposition (DESIGN.md §Hardware adaptation).
+
+Interpretation note (documented in DESIGN.md): the self-correction term
+Φ_i^{(t,i)} of Eqt. (7) contains the receiver's own channel noise m_i, which
+a real worker cannot know. We implement the computable reading: worker i
+subtracts its own (known) scaled DP noise n_i = |h_i|√(β_i P_i)𝒢_i and the
+channel noise m_i stays in the received aggregate. Consequences match the
+paper's analysis: per-column update noise has variance exactly σ_z² of
+Lemma 4.6 (both terms), and the worker-mean x̄ evolves as Eqt. (9) exactly
+when σ_m = 0 and up to an O(σ_m/(N√(N-1)c)) perturbation otherwise — the DP
+noises cancel in the mean because each receiver subtracts what it injected
+(test_dwfl.py::test_mean_descent verifies both).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import ChannelState
+
+Tree = object  # pytree alias
+
+
+# ---------------------------------------------------------------------------
+# noise generation
+# ---------------------------------------------------------------------------
+
+
+def _leaf_keys(key, tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, list(keys))
+
+
+def dp_noise(key, X: Tree, chan: ChannelState) -> Tree:
+    """n_k = |h_k| sqrt(β_k P_k) * 𝒢_k,  𝒢_k ~ N(0, σ²) i.i.d per entry.
+
+    X leaves are worker-stacked [W, ...]; the per-worker amplitude
+    broadcasts along the leading axis.
+    """
+    scale = jnp.asarray(chan.noise_scale * chan.cfg.sigma, jnp.float32)
+
+    def one(k, x):
+        amp = scale.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
+        return (amp * jax.random.normal(k, x.shape, jnp.float32)).astype(x.dtype)
+
+    return jax.tree_util.tree_map(one, _leaf_keys(key, X), X)
+
+
+def channel_noise(key, X: Tree, sigma_m: float) -> Tree:
+    """m_i ~ N(0, σ_m²) per receiver (leading axis) per entry."""
+    def one(k, x):
+        return (sigma_m * jax.random.normal(k, x.shape, jnp.float32)).astype(x.dtype)
+    return jax.tree_util.tree_map(one, _leaf_keys(key, X), X)
+
+
+# ---------------------------------------------------------------------------
+# exchanges (vectorized over the worker axis; pjit path)
+# ---------------------------------------------------------------------------
+
+
+def exchange_dwfl(X: Tree, noise_n: Tree, noise_m: Tree,
+                  chan: ChannelState, eta: float) -> Tree:
+    """One DWFL parameter exchange (Alg. 1 lines 6-9), Eqt. (5)-(7).
+
+    v_i = c Σ_{k≠i} x_k + Σ_{k≠i} n_k + m_i
+    x_i ← x_i + (η/c) ( v_i/(N-1) − c x_i − n_i )
+    """
+    N = chan.n_workers
+    c = chan.c
+
+    def one(x, n, m):
+        xf = x.astype(jnp.float32)
+        nf = n.astype(jnp.float32)
+        S_x = jnp.sum(xf, axis=0, keepdims=True)   # over-the-air superposition
+        S_n = jnp.sum(nf, axis=0, keepdims=True)   # (one all-reduce over workers)
+        v = c * (S_x - xf) + (S_n - nf) + m.astype(jnp.float32)
+        x_new = xf + (eta / c) * (v / (N - 1) - c * xf - nf)
+        return x_new.astype(x.dtype)
+
+    return jax.tree_util.tree_map(one, X, noise_n, noise_m)
+
+
+def exchange_orthogonal(X: Tree, key, chan: ChannelState, eta: float) -> Tree:
+    """Orthogonal (pairwise digital-style) baseline: each link carries ONE
+    sender's signal, masked only by that sender's own noise (constant-in-N
+    privacy, Remark 4.1), plus per-link AWGN.
+
+    The receiver inverts the known per-sender gain, so the effective received
+    value is x̂_j = x_j + (√β_j/√α_j) 𝒢_j + m̃_ij. The mean over j≠i of the
+    independent per-link AWGN terms is sampled directly (statistically
+    identical, avoids the O(W²d) tensor). Communication: N-1 transmissions
+    per worker per round vs DWFL's single superposed one.
+    """
+    N = chan.n_workers
+    k_n, k_m = jax.random.split(key)
+    # sender-side effective noise after gain inversion
+    inv_gain = jnp.asarray(
+        np.sqrt(chan.beta / np.maximum(chan.alpha, 1e-9)) * chan.cfg.sigma, jnp.float32)
+    # per-link AWGN std after inversion, averaged over N-1 links
+    link_std = chan.cfg.sigma_m / (chan.h * np.sqrt(chan.alpha * chan.P))
+    mean_m_std = float(np.sqrt(np.mean(link_std ** 2) / (N - 1)))
+
+    def one(kk, x):
+        xf = x.astype(jnp.float32)
+        k1, k2 = jax.random.split(kk)
+        amp = inv_gain.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
+        xhat = xf + amp * jax.random.normal(k1, x.shape, jnp.float32)
+        S = jnp.sum(xhat, axis=0, keepdims=True)
+        neigh_mean = (S - xhat) / (N - 1)
+        neigh_mean = neigh_mean + mean_m_std * jax.random.normal(k2, x.shape, jnp.float32)
+        return (xf + eta * (neigh_mean - xf)).astype(x.dtype)
+
+    return jax.tree_util.tree_map(one, _leaf_keys(key, X), X)
+
+
+def exchange_centralized(X: Tree, noise_n: Tree, key, chan: ChannelState) -> Tree:
+    """Centralized PS baseline (Seif et al. [11] style): all workers transmit
+    over the MAC to a parameter server, which rescales and broadcasts the
+    average. One over-the-air aggregation + noiseless downlink."""
+    N = chan.n_workers
+    c = chan.c
+
+    def one(kk, x, n):
+        xf = x.astype(jnp.float32)
+        v = c * jnp.sum(xf, axis=0, keepdims=True) + jnp.sum(
+            n.astype(jnp.float32), axis=0, keepdims=True)
+        m = chan.cfg.sigma_m * jax.random.normal(kk, v.shape, jnp.float32)
+        avg = (v + m) / (c * N)
+        return jnp.broadcast_to(avg, x.shape).astype(x.dtype)
+
+    return jax.tree_util.tree_map(one, _leaf_keys(key, X), X, noise_n)
+
+
+def exchange_dwfl_topology(X: Tree, noise_n: Tree, noise_m: Tree,
+                           chan: ChannelState, eta: float, W) -> Tree:
+    """DWFL over an arbitrary doubly-stochastic gossip topology W (wireless
+    reading: worker i's over-the-air superposition covers its radio
+    neighborhood N(i); see repro.core.topology).
+
+        v_i = c Σ_{k∈N(i)} W_ik x_k + Σ_{k∈N(i)} W_ik n_k + m_i/deg_i-scaled
+        x_i ← x_i + η ( v_i/c − x_i − n_i/c )
+
+    Reduces exactly to exchange_dwfl for the complete graph. The self-noise
+    subtraction keeps the DP noises zero-sum across receivers for ANY
+    doubly-stochastic W (mean-descent Eqt. 9 still holds; test-verified).
+    """
+    Wj = jnp.asarray(W, jnp.float32)
+    deg = jnp.asarray((W > 0).sum(1), jnp.float32)
+
+    def one(x, n, m):
+        xf = x.astype(jnp.float32)
+        nf = n.astype(jnp.float32) / chan.c
+        mixed = jnp.einsum("ij,j...->i...", Wj, xf + nf)
+        m_scaled = (m.astype(jnp.float32) / chan.c
+                    / deg.reshape((x.shape[0],) + (1,) * (x.ndim - 1)))
+        x_new = xf + eta * (mixed + m_scaled - xf - nf)
+        return x_new.astype(x.dtype)
+
+    return jax.tree_util.tree_map(one, X, noise_n, noise_m)
+
+
+def exchange_dwfl_sampled(X: Tree, noise_n: Tree, noise_m: Tree,
+                          chan: ChannelState, eta: float, participate):
+    """Beyond-paper: DWFL with per-round worker sampling (privacy
+    amplification by subsampling, à la Seif-Tandon-Li [10]).
+
+    ``participate``: bool [W] — workers in this round's transmit set S_t.
+    Receivers aggregate only transmitters (v_i over k∈S_t, k≠i) and mix
+    toward their mean; non-transmitters still receive and mix. A worker's
+    data influences the network only in rounds it transmits, so its
+    per-round privacy loss is amplified by the sampling rate q (reported by
+    privacy.epsilon_sampled).
+    """
+    c = chan.c
+    p = participate.astype(jnp.float32)
+    n_tx = jnp.maximum(jnp.sum(p), 2.0)
+
+    def one(x, n, m):
+        xf = x.astype(jnp.float32)
+        nf = n.astype(jnp.float32)
+        pb = p.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
+        S_x = jnp.sum(xf * pb, axis=0, keepdims=True)
+        S_n = jnp.sum(nf * pb, axis=0, keepdims=True)
+        # receiver i removes its own contribution only if it transmitted
+        v = c * (S_x - pb * xf) + (S_n - pb * nf) + m.astype(jnp.float32)
+        denom = jnp.maximum(n_tx - pb, 1.0)  # transmitters visible to i
+        x_new = xf + (eta / c) * (v / denom - c * xf - pb * nf)
+        return x_new.astype(x.dtype)
+
+    return jax.tree_util.tree_map(one, X, noise_n, noise_m)
+
+
+# ---------------------------------------------------------------------------
+# matrix-form oracle (Eqt. 8) — used by tests
+# ---------------------------------------------------------------------------
+
+
+def matrix_form_reference(X_flat, G_flat, noise_n_flat, noise_m_flat,
+                          chan: ChannelState, gamma: float, eta: float):
+    """Global-view update, Eqt. (8): X ← (X − γG)Ψ + Φ(Ψ − I).
+
+    X_flat, G_flat: [W, d] arrays (d = flattened params). The Φ matrix is
+    built per receiver i with the computable-self-correction interpretation:
+    column k of Φ^{(i)} is n_k/c + m_i/((N-1)c) for k ≠ i and n_i/c for
+    k = i. Returns [W, d].
+    """
+    W = chan.n_workers
+    c = chan.c
+    Wmat = (np.ones((W, W)) - np.eye(W)) / (W - 1)
+    Psi = (1 - eta) * np.eye(W) + eta * Wmat
+
+    X1 = X_flat - gamma * G_flat  # local step (line 4-5)
+    out = X1.T @ Psi  # [d, W]
+
+    # noise term per receiver i: η [ Σ_{k≠i}(n_k + m_i/(N-1))/ (c(N-1)) − n_i/c ]
+    res = np.zeros_like(X_flat)
+    for i in range(W):
+        S_other = (noise_n_flat.sum(0) - noise_n_flat[i])
+        noise_i = (eta / c) * ((S_other + noise_m_flat[i]) / (W - 1) - noise_n_flat[i])
+        res[i] = out[:, i] + noise_i
+    return res
+
+
+# ---------------------------------------------------------------------------
+# shard_map path: explicit per-worker collective (the wireless semantics)
+# ---------------------------------------------------------------------------
+
+
+def exchange_dwfl_collective(x_local: Tree, n_local: Tree, m_local: Tree,
+                             chan: ChannelState, eta: float, axis: str) -> Tree:
+    """Per-worker view for shard_map: each worker holds its own leaves (no W
+    axis); the superposition is an explicit ``lax.psum`` over the worker mesh
+    axis — the literal TPU analogue of simultaneous analog transmission."""
+    N = chan.n_workers
+    c = chan.c
+
+    def one(x, n, m):
+        xf, nf = x.astype(jnp.float32), n.astype(jnp.float32)
+        tx = c * xf + nf                      # aligned signal + scaled DP noise
+        rx = jax.lax.psum(tx, axis)           # over-the-air superposition
+        v = rx - tx + m.astype(jnp.float32)   # remove own transmission; add AWGN
+        x_new = xf + (eta / c) * (v / (N - 1) - c * xf - nf)
+        return x_new.astype(x.dtype)
+
+    return jax.tree_util.tree_map(one, x_local, n_local, m_local)
+
+
+def exchange_orthogonal_ring(x_local: Tree, chan: ChannelState, eta: float,
+                             axis: str, key=None) -> Tree:
+    """Orthogonal baseline under shard_map: N-1 ``ppermute`` ring steps, each
+    carrying one sender's (noisy) parameters — N-1x the link traffic of the
+    single psum, which is the paper's bandwidth argument made structural.
+
+    Noise injection (sender DP noise + per-link AWGN) is optional (key=None
+    disables; the dry-run path measures pure communication structure).
+    """
+    N = chan.n_workers
+    idx = jax.lax.axis_index(axis)
+
+    def one(x, kk=None):
+        xf = x.astype(jnp.float32)
+        acc = jnp.zeros_like(xf)
+        cur = xf
+        perm = [(j, (j + 1) % N) for j in range(N)]
+        for step in range(N - 1):
+            cur = jax.lax.ppermute(cur, axis, perm)
+            recv = cur
+            if kk is not None:
+                k_step = jax.random.fold_in(kk, step)
+                recv = recv + chan.cfg.sigma_m * jax.random.normal(
+                    k_step, recv.shape, jnp.float32)
+            acc = acc + recv
+        neigh_mean = acc / (N - 1)
+        return (xf + eta * (neigh_mean - xf)).astype(x.dtype)
+
+    if key is None:
+        return jax.tree_util.tree_map(one, x_local)
+    return jax.tree_util.tree_map(lambda x, k: one(x, k), x_local, _leaf_keys(key, x_local))

@@ -1,0 +1,230 @@
+"""Protocol configuration and the DWFL training-step factory.
+
+``make_train_step`` composes: per-worker stochastic gradients (vmap over the
+worker axis) → gradient clipping to g_max → local SGD step (Alg. 1 line 5;
+optionally the fused Pallas dp_perturb kernel) → DP noise generation →
+parameter exchange (scheme-dependent) → metrics.
+
+Schemes:
+    dwfl         — the paper's algorithm (over-the-air superposition)
+    orthogonal   — pairwise transmission baseline (Remark 4.1 / Fig. 5)
+    centralized  — PS over MAC baseline ([11] / Fig. 6)
+    gossip       — noiseless decentralized averaging (σ = σ_m = 0 ablation)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import dwfl, privacy
+from repro.core.channel import ChannelConfig, ChannelState
+from repro.models import model as M
+
+
+@dataclass(frozen=True)
+class ProtocolConfig:
+    scheme: str = "dwfl"
+    n_workers: int = 16
+    gamma: float = 0.05          # step size γ
+    eta: float = 0.5             # averaging rate η
+    clip: float = 1.0            # g_max (gradient L2 clip)
+    delta: float = 1e-5
+    p_dbm: float = 60.0
+    sigma: float = 1.0
+    sigma_m: float = 1.0
+    fading: str = "rayleigh"
+    seed: int = 0
+    target_epsilon: float = 0.0  # >0: calibrate σ to hit this per-round ε
+    use_collective: bool = False # shard_map/psum exchange (vs vectorized pjit)
+    use_pallas: bool = False     # fused dp_perturb kernel for the local step
+    fuse_exchange: bool = False  # bucket all leaves into ONE flat vector for
+                                 # the over-the-air exchange (1 all-reduce +
+                                 # 1 PRNG pass instead of per-leaf; beyond-
+                                 # paper systems optimization, §Perf olmo)
+    participation: float = 1.0   # beyond-paper: per-round worker sampling
+                                 # rate q (<1 enables privacy amplification
+                                 # by subsampling; see privacy.epsilon_sampled)
+    noise_policy: str = "surplus"  # channel noise-power policy (see ChannelConfig)
+    topology: str = "complete"   # gossip topology: complete (the paper) |
+                                 # ring | torus — limited wireless
+                                 # interference ranges (repro.core.topology)
+    topology_k: int = 1          # ring: neighbors per side
+
+    def mixing_matrix(self):
+        from repro.core import topology as topo
+        return topo.make(self.topology, self.n_workers, k=self.topology_k)
+
+    def channel(self) -> ChannelState:
+        chan = ChannelConfig(
+            n_workers=self.n_workers, p_dbm=self.p_dbm, sigma=self.sigma,
+            sigma_m=self.sigma_m, fading=self.fading, seed=self.seed,
+            noise_policy=self.noise_policy,
+        ).realize()
+        if self.target_epsilon > 0:
+            sig = privacy.sigma_for_epsilon(
+                self.target_epsilon, self.gamma, self.clip, chan, self.delta)
+            chan = chan.with_sigma(max(sig, 1e-12))
+        return chan
+
+
+def init_worker_params(key, cfg: ModelConfig, n_workers: int):
+    """All workers start from the same point (paper: x_i^{(-1/2)} = 0; for
+    NNs, a shared random init — trajectories then diverge through data and
+    noise, which is what the gossip term mixes back together)."""
+    params = M.init_params(key, cfg)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_workers,) + x.shape), params)
+
+
+def epsilon_report(proto: ProtocolConfig, chan: ChannelState,
+                   T: Optional[int] = None) -> dict:
+    eps = privacy.epsilon_dwfl(proto.gamma, proto.clip, chan, proto.delta)
+    eps_orth = privacy.epsilon_orthogonal(proto.gamma, proto.clip, chan, proto.delta)
+    rep = {
+        "epsilon_per_worker": eps,
+        "epsilon_worst": float(eps.max()),
+        "epsilon_orthogonal_worst": float(eps_orth.max()),
+        "sigma": chan.cfg.sigma,
+    }
+    e_round, d_round = float(eps.max()), proto.delta
+    if proto.participation < 1.0:
+        e_round, d_round = privacy.epsilon_sampled(e_round, d_round,
+                                                   proto.participation)
+        rep["epsilon_sampled"] = e_round
+    if T:
+        ea, da = privacy.compose_advanced(e_round, d_round, T)
+        rep["epsilon_T_advanced"], rep["delta_T_advanced"] = ea, da
+    return rep
+
+
+def make_train_step(cfg: ModelConfig, proto: ProtocolConfig,
+                    axis: Optional[str] = None) -> Callable:
+    """Build the jittable DWFL round.
+
+    Vectorized path (axis=None): worker_params leaves are [W, ...] and the
+    exchange sums over axis 0 (XLA → all-reduce when sharded over ``data``).
+    Collective path (axis="data"): call under shard_map; leaves are local.
+    """
+    chan = proto.channel()
+    gamma, eta = proto.gamma, proto.eta
+
+    def local_grads(worker_params, batch):
+        def one(p, b):
+            loss, g = jax.value_and_grad(M.loss_fn)(p, b, cfg)
+            g, gnorm = privacy.clip_gradient_tree(g, proto.clip)
+            return loss, g, gnorm
+        return jax.vmap(one)(worker_params, batch)
+
+    def local_step(worker_params, grads):
+        if proto.use_pallas:
+            from repro.kernels.dp_perturb import ops as dp_ops
+            return jax.tree_util.tree_map(
+                lambda p, g: dp_ops.sgd_update(p, g, gamma), worker_params, grads)
+        return jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32) - gamma * g.astype(jnp.float32)
+                          ).astype(p.dtype), worker_params, grads)
+
+    def _bucket(X):
+        """Worker-stacked pytree -> single [W, total] f32 leaf + unravel."""
+        leaves, treedef = jax.tree_util.tree_flatten(X)
+        shapes = [l.shape for l in leaves]
+        dtypes = [l.dtype for l in leaves]
+        flat = jnp.concatenate(
+            [l.reshape(l.shape[0], -1).astype(jnp.float32) for l in leaves], axis=1)
+
+        def unravel(f):
+            out, off = [], 0
+            for s, dt in zip(shapes, dtypes):
+                n = int(np.prod(s[1:]))
+                out.append(f[:, off:off + n].reshape(s).astype(dt))
+                off += n
+            return jax.tree_util.tree_unflatten(treedef, out)
+        return {"flat": flat}, unravel
+
+    def step(worker_params, batch, key):
+        """batch leaves: [W, per_worker_batch, ...]."""
+        k_n, k_m, k_x = jax.random.split(key, 3)
+        losses, grads, gnorms = local_grads(worker_params, batch)
+        X = local_step(worker_params, grads)
+
+        if proto.n_workers < 2:
+            # degenerate federation (single worker / single-device test
+            # mesh): no peers to exchange with — plain local SGD round.
+            metrics = {
+                "loss": jnp.mean(losses),
+                "grad_norm": jnp.mean(gnorms),
+                "param_norm": jnp.sqrt(sum(
+                    jnp.sum(x.astype(jnp.float32) ** 2)
+                    for x in jax.tree_util.tree_leaves(X))),
+            }
+            return X, metrics
+
+        unravel = None
+        if proto.fuse_exchange and proto.scheme in ("dwfl", "gossip"):
+            X, unravel = _bucket(X)
+
+        if proto.scheme == "gossip":
+            zero_chan = chan.with_sigma(0.0)
+            n = jax.tree_util.tree_map(jnp.zeros_like, X)
+            m = jax.tree_util.tree_map(jnp.zeros_like, X)
+            X = dwfl.exchange_dwfl(X, n, m, dataclasses.replace(
+                zero_chan, cfg=dataclasses.replace(zero_chan.cfg, sigma_m=0.0)), eta)
+        elif proto.scheme == "dwfl":
+            n = dwfl.dp_noise(k_n, X, chan)
+            m = dwfl.channel_noise(k_m, X, proto.sigma_m)
+            if proto.topology != "complete":
+                X = dwfl.exchange_dwfl_topology(X, n, m, chan, eta,
+                                                proto.mixing_matrix())
+            elif proto.participation < 1.0:
+                mask = (jax.random.uniform(k_x, (proto.n_workers,))
+                        < proto.participation)
+                # guarantee >= 2 transmitters so the round is well defined
+                mask = mask.at[:2].set(True)
+                X = dwfl.exchange_dwfl_sampled(X, n, m, chan, eta, mask)
+            elif axis is not None:
+                X = dwfl.exchange_dwfl_collective(X, n, m, chan, eta, axis)
+            else:
+                X = dwfl.exchange_dwfl(X, n, m, chan, eta)
+        elif proto.scheme == "orthogonal":
+            X = dwfl.exchange_orthogonal(X, k_x, chan, eta)
+        elif proto.scheme == "centralized":
+            n = dwfl.dp_noise(k_n, X, chan)
+            X = dwfl.exchange_centralized(X, n, k_m, chan)
+        else:
+            raise ValueError(proto.scheme)
+
+        if unravel is not None:
+            X = unravel(X["flat"])
+
+        metrics = {
+            "loss": jnp.mean(losses),
+            "grad_norm": jnp.mean(gnorms),
+            "param_norm": jnp.sqrt(sum(
+                jnp.sum(x.astype(jnp.float32) ** 2)
+                for x in jax.tree_util.tree_leaves(X))),
+        }
+        return X, metrics
+
+    return step
+
+
+def make_eval_fn(cfg: ModelConfig) -> Callable:
+    def evaluate(worker_params, batch):
+        def one(p, b):
+            loss = M.loss_fn(p, b, cfg)
+            if cfg.family == "mlp":
+                logits, _ = M.forward(p, b, cfg)[0], None
+                acc = jnp.mean((jnp.argmax(logits, -1) == b["y"]).astype(jnp.float32))
+            else:
+                acc = jnp.float32(0.0)
+            return loss, acc
+        losses, accs = jax.vmap(one)(worker_params, batch)
+        return jnp.mean(losses), jnp.mean(accs)
+    return evaluate

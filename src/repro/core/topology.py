@@ -1,0 +1,86 @@
+"""Gossip topologies beyond the complete graph.
+
+The paper instantiates W = ((1)_N − I)/(N−1) (complete graph — every worker
+hears every other), but its convergence machinery (Lemmas 4.3/4.4) is
+stated for a general doubly-stochastic W_eff. Real wireless deployments
+have LIMITED interference ranges: a worker's superposed receive set is its
+radio neighborhood. This module provides the mixing matrices, their
+spectral analysis (which governs the gossip contraction rate), and the
+η* that maximizes contraction.
+
+Privacy consequence (epsilon_dwfl_topology): receiver i's over-the-air
+aggregate is masked by only deg(i) neighbors' noises — the amplification is
+O(1/√deg), interpolating between the paper's O(1/√N) (complete) and the
+orthogonal scheme's O(1) (deg = 1).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def complete(N: int) -> np.ndarray:
+    W = (np.ones((N, N)) - np.eye(N)) / (N - 1)
+    return W
+
+
+def ring(N: int, k: int = 1) -> np.ndarray:
+    """Each worker hears k neighbors on each side."""
+    W = np.zeros((N, N))
+    for i in range(N):
+        for d in range(1, k + 1):
+            W[i, (i + d) % N] = 1.0
+            W[i, (i - d) % N] = 1.0
+    return W / (2 * k)
+
+
+def torus2d(rows: int, cols: int) -> np.ndarray:
+    """4-neighbor 2-D torus over N = rows*cols workers."""
+    N = rows * cols
+    W = np.zeros((N, N))
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            for (dr, dc) in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                j = ((r + dr) % rows) * cols + (c + dc) % cols
+                W[i, j] += 1.0
+    W = W / W.sum(1, keepdims=True)
+    return W
+
+
+def make(kind: str, N: int, **kw) -> np.ndarray:
+    if kind == "complete":
+        return complete(N)
+    if kind == "ring":
+        return ring(N, k=kw.get("k", 1))
+    if kind == "torus":
+        rows = kw.get("rows") or int(np.sqrt(N))
+        assert N % rows == 0, (N, rows)
+        return torus2d(rows, N // rows)
+    raise ValueError(kind)
+
+
+def check_doubly_stochastic(W: np.ndarray, tol: float = 1e-9) -> bool:
+    return (np.allclose(W.sum(0), 1.0, atol=tol)
+            and np.allclose(W.sum(1), 1.0, atol=tol)
+            and np.allclose(W, W.T, atol=tol))
+
+
+def contraction(W: np.ndarray, eta: float) -> float:
+    """Per-round contraction of worker disagreement under
+    Ψ = (1−η)I + ηW: max |eigenvalue of Ψ| over the disagreement subspace."""
+    lam = np.linalg.eigvalsh((1 - eta) * np.eye(len(W)) + eta * W)
+    # drop the consensus eigenvalue (=1)
+    lam = np.sort(np.abs(lam))
+    return float(lam[-2])
+
+
+def optimal_eta(W: np.ndarray) -> float:
+    """η* = 2 / (2 − λ₂ − λ_N): equalizes the extreme disagreement
+    eigenvalues of Ψ (standard for symmetric gossip)."""
+    lam = np.sort(np.linalg.eigvalsh(W))
+    lam2, lamN = lam[-2], lam[0]
+    return float(np.clip(2.0 / (2.0 - lam2 - lamN), 0.0, 1.0))
+
+
+def degrees(W: np.ndarray) -> np.ndarray:
+    return (W > 0).sum(1)

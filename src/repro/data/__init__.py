@@ -1,0 +1,3 @@
+from repro.data.synthetic import classification_dataset, lm_dataset  # noqa: F401
+from repro.data.partition import dirichlet_partition, iid_partition  # noqa: F401
+from repro.data.pipeline import FederatedBatcher, LMBatcher  # noqa: F401

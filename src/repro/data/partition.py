@@ -1,0 +1,52 @@
+"""Federated (non-IID) data partitioning.
+
+Dirichlet label partitioning — the standard FL benchmark protocol: worker i
+gets class-c samples in proportion p_c ~ Dir(alpha). alpha -> inf recovers
+IID; alpha ~ 0.1-0.5 is the usual "pathological non-IID" regime. The paper
+trains CIFAR-10 across N decentralized workers; heterogeneity across D_i is
+exactly what makes the gossip term matter (ζ² in Assumption 4.1).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def dirichlet_partition(y: np.ndarray, n_workers: int, alpha: float = 0.5,
+                        seed: int = 0) -> List[np.ndarray]:
+    """Returns per-worker index arrays (equal sizes, drawn without replacement
+    according to Dirichlet class proportions)."""
+    rng = np.random.default_rng(seed)
+    n = len(y)
+    classes = np.unique(y)
+    per_worker = n // n_workers
+    # class proportion matrix [workers, classes]
+    props = rng.dirichlet([alpha] * len(classes), size=n_workers)
+    idx_by_class = {c: rng.permutation(np.where(y == c)[0]).tolist() for c in classes}
+    out = []
+    for w in range(n_workers):
+        want = (props[w] / props[w].sum() * per_worker).astype(int)
+        take = []
+        for ci, c in enumerate(classes):
+            got = idx_by_class[c][:want[ci]]
+            idx_by_class[c] = idx_by_class[c][want[ci]:]
+            take.extend(got)
+        # top up from whatever classes still have samples
+        pool = [i for c in classes for i in idx_by_class[c]]
+        rng.shuffle(pool)
+        while len(take) < per_worker and pool:
+            take.append(pool.pop())
+        # remove topped-up indices from their class pools
+        taken = set(take)
+        for c in classes:
+            idx_by_class[c] = [i for i in idx_by_class[c] if i not in taken]
+        out.append(np.array(take[:per_worker], np.int64))
+    return out
+
+
+def iid_partition(n: int, n_workers: int, seed: int = 0) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    per = n // n_workers
+    return [perm[w * per:(w + 1) * per] for w in range(n_workers)]

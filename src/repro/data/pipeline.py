@@ -1,0 +1,56 @@
+"""Sharded batching: worker-stacked batches for the DWFL step.
+
+``FederatedBatcher`` holds per-worker sample pools (classification) and
+yields batches with a leading worker axis [W, b, ...] — the layout the
+protocol's vmap expects, sharded over the mesh ``data`` axis when running
+distributed. ``LMBatcher`` does the same over disjoint token-stream slices.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List
+
+import numpy as np
+
+
+class FederatedBatcher:
+    def __init__(self, x: np.ndarray, y: np.ndarray,
+                 partitions: List[np.ndarray], batch_size: int, seed: int = 0):
+        self.x, self.y = x, y
+        self.parts = partitions
+        self.b = batch_size
+        self.rng = np.random.default_rng(seed)
+
+    def next(self) -> Dict[str, np.ndarray]:
+        W = len(self.parts)
+        xs = np.empty((W, self.b) + self.x.shape[1:], self.x.dtype)
+        ys = np.empty((W, self.b), self.y.dtype)
+        for w, part in enumerate(self.parts):
+            idx = self.rng.choice(part, self.b, replace=len(part) < self.b)
+            xs[w], ys[w] = self.x[idx], self.y[idx]
+        return {"x": xs, "y": ys}
+
+    def full(self, max_per_worker: int = 512) -> Dict[str, np.ndarray]:
+        """Evaluation batch: a fixed per-worker slice of the local data."""
+        W = len(self.parts)
+        m = min(max_per_worker, min(len(p) for p in self.parts))
+        xs = np.stack([self.x[p[:m]] for p in self.parts])
+        ys = np.stack([self.y[p[:m]] for p in self.parts])
+        return {"x": xs, "y": ys}
+
+
+class LMBatcher:
+    def __init__(self, tokens: np.ndarray, n_workers: int, batch_size: int,
+                 seq_len: int, seed: int = 0):
+        self.tokens = tokens
+        self.W, self.b, self.S = n_workers, batch_size, seq_len
+        per = len(tokens) // n_workers
+        self.slices = [tokens[w * per:(w + 1) * per] for w in range(n_workers)]
+        self.rng = np.random.default_rng(seed)
+
+    def next(self) -> Dict[str, np.ndarray]:
+        out = np.empty((self.W, self.b, self.S), np.int32)
+        for w, sl in enumerate(self.slices):
+            starts = self.rng.integers(0, len(sl) - self.S - 1, self.b)
+            for i, s in enumerate(starts):
+                out[w, i] = sl[s:s + self.S]
+        return {"tokens": out}

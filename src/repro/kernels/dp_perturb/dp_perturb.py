@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: fused clip-free DP-perturb (SGD step + noise + power
+scale) — the protocol's O(d) per-round hot loop, one HBM pass instead of 3+.
+
+Grid: 1-D over row-blocks of the (reshaped) parameter vector; each program
+handles a (BLOCK_R, LANES) VMEM tile. Gaussian noise is generated on-chip
+with the Pallas TPU PRNG (pltpu.prng_seed / prng_random_bits) using a
+Box-Muller transform, seeded per (call, program) so tiles are independent.
+
+On CPU the kernel runs under interpret=True where pltpu.prng_* is
+unavailable — the interpret path substitutes a counter-hash generator with
+identical statistics (validated against ref.py moments in tests).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 256
+LANES = 128
+
+
+def _uniform_from_bits(bits):
+    """uint32 -> uniform float32 in (0, 1)."""
+    return (bits >> 8).astype(jnp.float32) * (1.0 / (1 << 24)) + 1e-7
+
+
+def _hash_bits(idx, seed):
+    """Counter-based hash (interpret-mode PRNG): xorshift-mul mix."""
+    x = (idx.astype(jnp.uint32) * jnp.uint32(2654435761)) ^ seed.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(2246822519)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(3266489917)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _dp_perturb_kernel(seed_ref, p_ref, g_ref, x_ref, xt_ref, *,
+                       gamma, sigma, s_sig, s_noise, interpret):
+    pid = pl.program_id(0)
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    x = p - gamma * g
+
+    if sigma > 0.0 and s_noise != 0.0:
+        shape = p.shape
+        n = shape[0] * shape[1]
+        if interpret:
+            base = (pid.astype(jnp.uint32) * jnp.uint32(2 * n)
+                    + seed_ref[0].astype(jnp.uint32) * jnp.uint32(0x9E3779B9))
+            idx = jax.lax.broadcasted_iota(jnp.uint32, shape, 0) * shape[1] \
+                + jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+            u1 = _uniform_from_bits(_hash_bits(base + idx, seed_ref[0]))
+            u2 = _uniform_from_bits(_hash_bits(base + idx + jnp.uint32(n), seed_ref[0]))
+        else:
+            from jax.experimental.pallas import tpu as pltpu
+            pltpu.prng_seed(seed_ref[0] + pid)
+            u1 = _uniform_from_bits(pltpu.prng_random_bits(shape).astype(jnp.uint32))
+            u2 = _uniform_from_bits(pltpu.prng_random_bits(shape).astype(jnp.uint32))
+        # Box-Muller
+        r = jnp.sqrt(-2.0 * jnp.log(u1))
+        noise = r * jnp.cos(2.0 * math.pi * u2) * sigma
+        xt = s_sig * x + s_noise * noise
+    else:
+        xt = s_sig * x
+
+    x_ref[...] = x.astype(x_ref.dtype)
+    xt_ref[...] = xt.astype(xt_ref.dtype)
+
+
+def dp_perturb_2d(p2, g2, seed, *, gamma, sigma, s_sig, s_noise, interpret=True):
+    """p2, g2: [R, LANES] padded 2-D views. Returns (x_new, x_tilde)."""
+    R = p2.shape[0]
+    grid = (pl.cdiv(R, BLOCK_R),)
+    kernel = functools.partial(
+        _dp_perturb_kernel, gamma=gamma, sigma=sigma,
+        s_sig=s_sig, s_noise=s_noise, interpret=interpret)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # seed scalar, same for all tiles
+            pl.BlockSpec((BLOCK_R, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_R, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, LANES), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(p2.shape, p2.dtype),
+            jax.ShapeDtypeStruct(p2.shape, p2.dtype),
+        ],
+        interpret=interpret,
+    )(seed, p2, g2)

@@ -1,0 +1,62 @@
+"""Jitted wrappers for the dp_perturb kernel: pytree-level API.
+
+Leaves are flattened to padded [R, 128] tiles, processed by the kernel, and
+reshaped back. ``interpret`` defaults to True off-TPU (this rig) — the
+kernel body then executes in Python on CPU; on TPU pass interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dp_perturb import dp_perturb as K
+from repro.kernels.dp_perturb import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _to_2d(x):
+    n = x.size
+    lanes = K.LANES
+    rows = -(-n // lanes)
+    pad = rows * lanes - n
+    flat = jnp.pad(x.reshape(-1), (0, pad))
+    return flat.reshape(rows, lanes), n
+
+
+def _from_2d(x2, n, shape):
+    return x2.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("gamma",))
+def sgd_update(p, g, gamma: float):
+    """Fused SGD step via the kernel (σ=0 path)."""
+    interpret = not _on_tpu()
+    p2, n = _to_2d(p)
+    g2, _ = _to_2d(g)
+    seed = jnp.zeros((1,), jnp.int32)
+    x2, _ = K.dp_perturb_2d(p2, g2, seed, gamma=gamma, sigma=0.0,
+                            s_sig=1.0, s_noise=0.0, interpret=interpret)
+    return _from_2d(x2, n, p.shape).astype(p.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("gamma", "sigma", "s_sig", "s_noise"))
+def dp_perturb(p, g, seed, *, gamma: float, sigma: float,
+               s_sig: float, s_noise: float):
+    """Fused local-step + DP-noise + power-scale. seed: int32 scalar array.
+
+    Returns (x_new, x_tilde) with x_tilde = s_sig*(p - γg) + s_noise*𝒢,
+    𝒢 ~ N(0, σ²) generated on-chip.
+    """
+    interpret = not _on_tpu()
+    p2, n = _to_2d(p)
+    g2, _ = _to_2d(g)
+    seed = jnp.asarray(seed, jnp.int32).reshape(1)
+    x2, xt2 = K.dp_perturb_2d(p2, g2, seed, gamma=gamma, sigma=sigma,
+                              s_sig=s_sig, s_noise=s_noise, interpret=interpret)
+    return _from_2d(x2, n, p.shape), _from_2d(xt2, n, p.shape)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused DP-perturb pipeline (Alg. 1 lines 5-7).
+
+The unfused pipeline makes multiple passes over the O(d) parameter vector:
+    1. x = p - γ g                      (local SGD step)
+    2. draw 𝒢 ~ N(0, σ²)               (DP noise)
+    3. x̃ = s_sig * x + s_noise * 𝒢     (power-scaled signal)
+The kernel (dp_perturb.py) fuses these into one HBM pass with on-chip PRNG.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_update_ref(p, g, gamma):
+    return (p.astype(jnp.float32) - gamma * g.astype(jnp.float32)).astype(p.dtype)
+
+
+def dp_perturb_ref(p, g, key, *, gamma, sigma, s_sig, s_noise):
+    """Returns (x_new, x_tilde)."""
+    x = p.astype(jnp.float32) - gamma * g.astype(jnp.float32)
+    noise = sigma * jax.random.normal(key, p.shape, jnp.float32)
+    x_tilde = s_sig * x + s_noise * noise
+    return x.astype(p.dtype), x_tilde.astype(p.dtype)

@@ -1,0 +1,112 @@
+"""Pallas TPU flash attention (streaming softmax, causal, optional window).
+
+Canonical TPU shape: grid = (B*H, num_q_blocks, num_kv_blocks) with the KV
+dimension innermost; the output block is revisited across KV steps, carrying
+the running max (m), normalizer (l) and accumulator in fp32 VMEM scratch.
+Block sizes are MXU-aligned (128 default). Causality skips fully-masked KV
+blocks via ``pl.when``.
+
+Inputs are [BH, S, hd] with kv already broadcast across the GQA group
+(ops.py handles the reshape) — the kernel itself is MHA.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, block_q, block_k, causal, sliding_window, num_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)                  # [bk, hd]
+        s = q @ k.T                                       # [bq, bk]
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if sliding_window is not None:
+            mask = mask & (kpos > qpos - sliding_window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + p @ v
+        m_scr[...] = m_new
+
+    # skip KV blocks strictly above the causal diagonal / outside the window
+    if causal or sliding_window is not None:
+        relevant = jnp.bool_(True)
+        if causal:
+            relevant = relevant & (k_start <= q_start + block_q - 1)
+        if sliding_window is not None:
+            relevant = relevant & (k_start + block_k - 1 > q_start - sliding_window)
+        pl.when(relevant)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == num_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bh(q, k, v, *, causal=True, sliding_window=None,
+                       block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+                       interpret=True):
+    """q,k,v: [BH, S, hd] -> o [BH, S, hd]."""
+    BH, S, hd = q.shape
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    nq = pl.cdiv(S, block_q)
+    nk = pl.cdiv(S, block_k)
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, sliding_window=sliding_window, num_kv=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,38 @@
+"""Jitted wrapper: model-layout flash attention with GQA handling.
+
+Model layout is q [B, S, H, hd], kv [B, S, Hkv, hd]; kv heads are broadcast
+across their GQA group and the (B, H) axes folded for the kernel grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as K
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "sliding_window",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, sliding_window=None,
+                    block_q=K.DEFAULT_BLOCK_Q, block_k=K.DEFAULT_BLOCK_K):
+    """q: [B,S,H,hd]; k,v: [B,S,Hkv,hd] -> [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    if G != 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, S, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * H, S, hd)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * H, S, hd)
+    o = K.flash_attention_bh(qf, kf, vf, causal=causal,
+                             sliding_window=sliding_window,
+                             block_q=block_q, block_k=block_k,
+                             interpret=not _on_tpu())
+    return jnp.moveaxis(o.reshape(B, H, S, hd), 1, 2)

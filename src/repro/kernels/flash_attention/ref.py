@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash-attention kernel: exact (causal) attention
+with optional sliding window. q,k,v: [B, S, H, hd] (kv pre-broadcast to H)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, sliding_window=None):
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+    qpos = jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if sliding_window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - sliding_window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v)

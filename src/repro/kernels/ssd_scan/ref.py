@@ -1,0 +1,4 @@
+"""Pure-jnp oracle for the ssd_scan kernel — re-exports the model module's
+chunked SSD implementation (repro.models.ssm.ssd_chunked), which is itself
+the reference for the whole Mamba2 path."""
+from repro.models.ssm import ssd_chunked, ssd_decode_step  # noqa: F401

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk compute.
+
+Per grid cell (batch b, chunk c, head-block h) the kernel produces, entirely
+from VMEM tiles:
+  * y_diag — the intra-chunk (quadratic, causal-masked, decay-gated) output,
+  * states — the chunk's contribution to the inter-chunk state recurrence,
+  * cdecay — the chunk's total decay factor.
+The O(nc)-sequential inter-chunk recurrence and the rank-N off-diagonal
+correction are combined by ops.py (they are O(S·N·P) — cheap next to the
+O(S·Q·(N+P)) intra-chunk work this kernel owns).
+
+Head-block size HB trades VMEM footprint against grid size; the default
+keeps the per-cell working set (x, y tiles of q×HB×P fp32) ≈ 1 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+HB = 8  # heads per grid cell
+
+
+def _ssd_kernel(x_ref, dt_ref, da_ref, b_ref, c_ref,
+                y_ref, st_ref, cd_ref, *, q, hb, n_state):
+    Bm = b_ref[0].astype(jnp.float32)       # [q, N]
+    Cm = c_ref[0].astype(jnp.float32)       # [q, N]
+    scores = Cm @ Bm.T                      # [q, q] shared across heads
+    tril = (jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1))
+
+    for h in range(hb):
+        da = da_ref[0, :, h].astype(jnp.float32)          # [q]
+        dt = dt_ref[0, :, h].astype(jnp.float32)          # [q]
+        xh = x_ref[0, :, h, :].astype(jnp.float32)        # [q, P]
+        cs = jnp.cumsum(da)
+        diff = cs[:, None] - cs[None, :]                  # decay j -> i
+        L = jnp.where(tril, jnp.exp(diff), 0.0)
+        gated = scores * L                                # [q, q]
+        xdt = xh * dt[:, None]
+        y_ref[0, :, h, :] = (gated @ xdt).astype(y_ref.dtype)
+
+        dte = jnp.exp(cs[-1] - cs) * dt                   # decay to chunk end
+        st = (Bm * dte[:, None]).T @ xh                   # [N, P]
+        st_ref[0, 0, h, :, :] = st.T.astype(st_ref.dtype)  # [P, N]
+        cd_ref[0, 0, h] = jnp.exp(cs[-1]).astype(cd_ref.dtype)
+
+
+def ssd_intra_chunk(x, dt, dA, Bm, Cm, *, chunk, interpret=True):
+    """x: [B,S,H,P]; dt,dA: [B,S,H]; Bm,Cm: [B,S,N].
+
+    Returns (y_diag [B,S,H,P], states [B,nc,H,P,N], cdecay [B,nc,H]).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S
+    hb = min(HB, H)
+    assert H % hb == 0, (H, hb)
+    nh = H // hb
+    q = chunk
+
+    kernel = functools.partial(_ssd_kernel, q=q, hb=hb, n_state=N)
+    y, st, cd = pl.pallas_call(
+        kernel,
+        grid=(B, nc, nh),
+        in_specs=[
+            pl.BlockSpec((1, q, hb, P), lambda b, c, h: (b, c, h, 0)),
+            pl.BlockSpec((1, q, hb), lambda b, c, h: (b, c, h)),
+            pl.BlockSpec((1, q, hb), lambda b, c, h: (b, c, h)),
+            pl.BlockSpec((1, q, N), lambda b, c, h: (b, c, 0)),
+            pl.BlockSpec((1, q, N), lambda b, c, h: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, hb, P), lambda b, c, h: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, hb, P, N), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, hb), lambda b, c, h: (b, c, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, nc, H, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, dA, Bm, Cm)
+    return y, st, cd

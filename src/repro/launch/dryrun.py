@@ -1,0 +1,129 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production mesh; capture memory/cost/collective analysis for §Roofline.
+
+MUST be run as its own process (the XLA_FLAGS line above executes before any
+other import — jax locks the device count at first init).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                  # all pairs, single-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod      # 2-pod pass
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --out experiments/dryrun
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs.registry import ASSIGNED, SHAPE_SKIPS, SHAPES  # noqa: E402
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.launch.specs import build_case  # noqa: E402
+from repro.utils import hlo_cost  # noqa: E402
+from repro.utils import roofline as rl  # noqa: E402
+
+
+def run_one(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
+            overrides=None, tag: str = "") -> dict:
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+           "n_chips": n_chips, "tag": tag}
+    try:
+        case = build_case(arch, shape, mesh, multi_pod=multi_pod,
+                          overrides=overrides)
+        with mesh:
+            lowered = case.jit().lower(*case.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost_xla = compiled.cost_analysis()  # cross-check only: while bodies x1
+        cost = hlo_cost.analyze(compiled.as_text())  # loop-aware (see module doc)
+        roof = rl.from_analysis(
+            case.name,
+            {"flops": cost.flops, "bytes accessed": cost.bytes},
+            cost.collective_link_total,
+            model_flops=case.model_flops, n_chips=n_chips)
+        hbm_gb = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                  - mem.alias_size_in_bytes + mem.temp_size_in_bytes) / 1e9
+        rec.update({
+            "ok": True,
+            "kind": case.kind,
+            "n_params": case.n_params,
+            "tokens": case.tokens,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "per_chip_gb": round(hbm_gb, 3),
+                "fits_v5e_16gb": bool(hbm_gb <= 16.0),
+            },
+            "hlo_cost": cost.as_dict(),
+            "xla_cost_raw": {k: v for k, v in cost_xla.items()
+                             if k in ("flops", "bytes accessed")},
+            "roofline": roof.as_dict(),
+        })
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    rec["wall_s"] = round(time.time() - t0, 1)
+
+    os.makedirs(out_dir, exist_ok=True)
+    pod = "multipod" if multi_pod else "singlepod"
+    suffix = f"-{tag}" if tag else ""
+    fname = os.path.join(out_dir, f"{arch}__{shape}__{pod}{suffix}.json")
+    with open(fname, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--include-skips", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    results = []
+    for a in archs:
+        for s in shapes:
+            if (a, s) in SHAPE_SKIPS and not args.include_skips:
+                print(f"SKIP  {a:22s} {s:12s} ({SHAPE_SKIPS[(a, s)]})", flush=True)
+                results.append({"arch": a, "shape": s, "skip": SHAPE_SKIPS[(a, s)]})
+                continue
+            rec = run_one(a, s, multi_pod=args.multi_pod, out_dir=args.out)
+            if rec.get("ok"):
+                r = rec["roofline"]
+                print(f"OK    {a:22s} {s:12s} compile={rec['compile_s']:7.1f}s "
+                      f"mem={rec['memory']['per_chip_gb']:7.2f}GB "
+                      f"comp={r['compute_s']:.3e}s memT={r['memory_s']:.3e}s "
+                      f"coll={r['collective_s']:.3e}s dom={r['dominant']}",
+                      flush=True)
+            else:
+                print(f"FAIL  {a:22s} {s:12s} {rec['error']}", flush=True)
+            results.append(rec)
+
+    n_ok = sum(1 for r in results if r.get("ok"))
+    n_skip = sum(1 for r in results if "skip" in r)
+    n_fail = len(results) - n_ok - n_skip
+    print(f"\n{n_ok} ok, {n_skip} designed skips, {n_fail} failures")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

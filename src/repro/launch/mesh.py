@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Target: TPU v5e, 256 chips/pod. Single-pod mesh is (data=16, model=16);
+multi-pod doubles along a leading "pod" axis (2 x 256 = 512 chips). The DWFL
+worker axis is ``data`` (16 workers/pod) or ``("pod","data")`` (32 workers)
+— each worker is one 16-chip model-parallel group.
+
+Functions only — importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def worker_axes(multi_pod: bool = False) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def n_workers(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes["data"]
+
+
+def model_size(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes["model"]
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh over however many (CPU) devices exist — for tests."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,3 @@
+from repro.models.model import (  # noqa: F401
+    init_params, forward, loss_fn, prefill, decode_step, init_cache, count_params,
+)

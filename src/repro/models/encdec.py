@@ -1,0 +1,147 @@
+"""Whisper-style encoder-decoder transformer.
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment:
+the encoder consumes precomputed frame embeddings ``batch["embeds"]``
+(B, encoder_seq_len, d_model). We implement the transformer encoder
+(bidirectional self-attention) and the decoder (causal self-attention +
+cross-attention). Decode mode caches self-KV per layer plus per-layer cross
+K/V computed once from the encoder output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def enc_block_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.norm_init(cfg, dtype),
+        "attn": L.attention_init(k1, cfg, dtype),
+        "norm2": L.norm_init(cfg, dtype),
+        "mlp": L.mlp_init(k2, cfg, dtype),
+    }
+
+
+def enc_block_apply(params, x, cfg: ModelConfig):
+    # bidirectional self attention (no mask, no rope — learned pos emb upstream)
+    import math
+    hd = cfg.resolved_head_dim
+    xn = L.norm_apply(params["norm1"], x, cfg)
+    q, k, v = L._project_qkv(params["attn"], xn, cfg)
+    scores = L._gqa_scores(q, k) / math.sqrt(hd)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+    o = L._gqa_out(probs, v, cfg.num_heads).reshape(x.shape[0], x.shape[1], -1)
+    x = x + o @ params["attn"]["wo"]
+    return x + L.mlp_apply(params["mlp"], L.norm_apply(params["norm2"], x, cfg), cfg)
+
+
+def dec_block_init(key, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": L.norm_init(cfg, dtype),
+        "self_attn": L.attention_init(k1, cfg, dtype),
+        "norm2": L.norm_init(cfg, dtype),
+        "cross_attn": L.cross_attention_init(k2, cfg, dtype),
+        "norm3": L.norm_init(cfg, dtype),
+        "mlp": L.mlp_init(k3, cfg, dtype),
+    }
+
+
+def dec_block_apply(params, x, enc_out, cfg: ModelConfig, positions, mode,
+                    cache=None, cache_index=None):
+    h, new_self = L.attention_apply(
+        params["self_attn"], L.norm_apply(params["norm1"], x, cfg), cfg, positions,
+        mode=mode, cache=cache, cache_index=cache_index)
+    x = x + h
+    x = x + L.cross_attention_apply(
+        params["cross_attn"], L.norm_apply(params["norm2"], x, cfg), enc_out, cfg)
+    x = x + L.mlp_apply(params["mlp"], L.norm_apply(params["norm3"], x, cfg), cfg)
+    return x, new_self
+
+
+def init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kenc, kdec, kp = jax.random.split(key, 4)
+    p = {
+        "embed": L.embed_init(ke, cfg, dtype),  # decoder token embed (+pos)
+        "enc_pos": (jax.random.normal(kp, (cfg.encoder_seq_len, cfg.d_model)) * 0.02).astype(dtype),
+        "enc_blocks": L.stacked(jax.random.split(kenc, cfg.num_encoder_layers),
+                                lambda k: enc_block_init(k, cfg, dtype)),
+        "enc_norm": L.norm_init(cfg, dtype),
+        "dec_blocks": L.stacked(jax.random.split(kdec, cfg.num_layers),
+                                lambda k: dec_block_init(k, cfg, dtype)),
+        "final_norm": L.norm_init(cfg, dtype),
+    }
+    return p
+
+
+def encode(params, frames, cfg: ModelConfig, remat: bool = False):
+    x = frames.astype(jnp.dtype(cfg.compute_dtype)) + params["enc_pos"][None]
+
+    body = lambda blk, h: enc_block_apply(blk, h, cfg)
+    if remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(h, blk):
+        return body(blk, h), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["enc_blocks"])
+    return L.norm_apply(params["enc_norm"], x, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig, *, mode="train",
+            cache=None, cache_index=None, use_pallas: bool = False):
+    """batch: {'embeds': encoder frames, 'tokens': decoder tokens}.
+
+    In decode mode, ``cache`` = {'enc_out': [B,Se,d], 'self': stacked KV}.
+    """
+    if mode == "decode":
+        enc_out = cache["enc_out"]
+    else:
+        enc_out = encode(params, batch["embeds"], cfg,
+                         remat=cfg.remat and mode == "train")
+
+    tokens = batch["tokens"]
+    x = L.embed_apply(params["embed"], tokens, cfg).astype(jnp.dtype(cfg.compute_dtype))
+    B, Sq = x.shape[0], x.shape[1]
+    if mode == "decode":
+        pe = jax.lax.dynamic_slice_in_dim(params["embed"]["pos"], cache_index, 1, 0)
+        positions = jnp.arange(1)[None].repeat(B, 0) + cache_index
+    else:
+        pe = params["embed"]["pos"][:Sq]
+        positions = jnp.arange(Sq)[None].repeat(B, 0)
+    x = x + pe[None].astype(x.dtype)
+
+    if mode == "decode":
+        def scan_fn(h, bc):
+            blk, c = bc
+            h, c2 = dec_block_apply(blk, h, enc_out, cfg, positions, "decode",
+                                    cache=c, cache_index=cache_index)
+            return h, c2
+        x, new_self = jax.lax.scan(scan_fn, x, (params["dec_blocks"], cache["self"]))
+        new_cache = {"enc_out": enc_out, "self": new_self}
+    else:
+        if cfg.remat and mode == "train":
+            def body(blk, h):
+                h2, _ = dec_block_apply(blk, h, enc_out, cfg, positions, "train")
+                return h2
+            body = jax.checkpoint(body)
+
+            def scan_fn(h, blk):
+                return body(blk, h), None
+        else:
+            def scan_fn(h, blk):
+                h, c = dec_block_apply(blk, h, enc_out, cfg, positions, mode)
+                return h, c
+        x, cs = jax.lax.scan(scan_fn, x, params["dec_blocks"])
+        new_cache = ({"enc_out": enc_out, "self": cs}
+                     if mode == "prefill" else None)
+
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.unembed_apply(params["embed"], x, cfg)
+    return logits, new_cache

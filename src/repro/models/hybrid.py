@@ -1,0 +1,117 @@
+"""zamba2-style hybrid: Mamba2 backbone + a SHARED attention block.
+
+The single attention(+MLP) block's parameters are shared across all its
+applications (one application after every ``shared_attn_every`` mamba
+layers) — zamba2's parameter-efficiency trick. Each application has its own
+KV cache. Layout: ``n_super`` super-blocks of (k mamba layers + shared-attn
+application), followed by ``n_rem`` trailing mamba layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+
+
+def split_layers(cfg: ModelConfig):
+    k = cfg.shared_attn_every
+    n_super = cfg.num_layers // k
+    n_rem = cfg.num_layers - n_super * k
+    return k, n_super, n_rem
+
+
+def init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k, n_super, n_rem = split_layers(cfg)
+    ke, km, ka, kr, kf = jax.random.split(key, 5)
+    mkeys = jax.random.split(km, n_super * k)
+    mkeys = mkeys.reshape((n_super, k) + mkeys.shape[1:])
+    p = {
+        "embed": L.embed_init(ke, cfg, dtype),
+        "mamba": jax.vmap(jax.vmap(lambda kk: S.ssm_block_init(kk, cfg, dtype)))(mkeys),
+        "shared_attn": T.block_init(ka, cfg, dtype),  # ONE set of weights
+        "final_norm": L.norm_init(cfg, dtype),
+    }
+    if n_rem:
+        p["mamba_rem"] = L.stacked(jax.random.split(kr, n_rem),
+                                   lambda kk: S.ssm_block_init(kk, cfg, dtype))
+    return p
+
+
+def forward(params, batch, cfg: ModelConfig, *, mode="train",
+            cache=None, cache_index=None, use_pallas: bool = False):
+    x = T._embed_inputs(params, batch, cfg)
+    B, Sq = x.shape[0], x.shape[1]
+    positions = T._positions_for(batch, cfg, Sq, B,
+                                 offset=cache_index if mode == "decode" else 0)
+    k, n_super, n_rem = split_layers(cfg)
+    shared = params["shared_attn"]
+
+    want_cache = mode != "train"
+    new_cache = {"mamba": None, "attn": None, "mamba_rem": None} if want_cache else None
+
+    def super_block(h, inp):
+        mamba_p, mamba_c, attn_c = inp
+
+        def inner(hh, mp_and_c):
+            mp, mc = mp_and_c
+            hh, c2 = S.ssm_block_apply(mp, hh, cfg, mode, cache=mc, use_pallas=use_pallas)
+            return hh, c2
+
+        h, m_caches = jax.lax.scan(inner, h, (mamba_p, mamba_c))
+        h, a_cache = T.block_apply(shared, h, cfg, positions, mode,
+                                   cache=attn_c, cache_index=cache_index)
+        return h, (m_caches, a_cache)
+
+    if mode == "train":
+        def scan_fn(h, mamba_p):
+            h, _ = super_block(h, (mamba_p, None, None))
+            return h, None
+        body = scan_fn
+        if cfg.remat:
+            def body(h, mamba_p):
+                f = jax.checkpoint(lambda hh, mp: super_block(hh, (mp, None, None))[0])
+                return f(h, mamba_p), None
+        x, _ = jax.lax.scan(body, x, params["mamba"])
+        if n_rem:
+            def rem_fn(h, mp):
+                h, _ = S.ssm_block_apply(mp, h, cfg, mode, use_pallas=use_pallas)
+                return h, None
+            x, _ = jax.lax.scan(rem_fn, x, params["mamba_rem"])
+    else:
+        m_c = cache["mamba"] if mode == "decode" else None
+        a_c = cache["attn"] if mode == "decode" else None
+        def scan_fn(h, inp):
+            return super_block(h, inp)
+        if mode == "decode":
+            x, (mc, ac) = jax.lax.scan(scan_fn, x, (params["mamba"], m_c, a_c))
+        else:
+            # prefill: no pre-existing caches; scan builds them
+            def pf(h, mamba_p):
+                def inner(hh, mp):
+                    hh, c2 = S.ssm_block_apply(mp, hh, cfg, "prefill", use_pallas=use_pallas)
+                    return hh, c2
+                h, m_caches = jax.lax.scan(inner, h, mamba_p)
+                h, a_cache = T.block_apply(shared, h, cfg, positions, "prefill")
+                return h, (m_caches, a_cache)
+            x, (mc, ac) = jax.lax.scan(pf, x, params["mamba"])
+        new_cache["mamba"], new_cache["attn"] = mc, ac
+        if n_rem:
+            if mode == "decode":
+                def rem_fn(h, inp):
+                    mp, c = inp
+                    return S.ssm_block_apply(mp, h, cfg, "decode", cache=c)
+                x, rc = jax.lax.scan(rem_fn, x, (params["mamba_rem"], cache["mamba_rem"]))
+            else:
+                def rem_fn(h, mp):
+                    return S.ssm_block_apply(mp, h, cfg, "prefill", use_pallas=use_pallas)
+                x, rc = jax.lax.scan(rem_fn, x, params["mamba_rem"])
+            new_cache["mamba_rem"] = rc
+
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.unembed_apply(params["embed"], x, cfg)
+    return logits, new_cache

@@ -1,0 +1,36 @@
+"""Small MLP classifier — the paper-scale model (CIFAR-shaped synthetic data).
+
+batch: {"x": [B, input_dim] float, "y": [B] int}. num classes = cfg.vocab_size.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+INPUT_DIM = 3072
+
+
+def init(key, cfg: ModelConfig, input_dim: int = INPUT_DIM):
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.num_layers + 1)
+    dims = [input_dim] + [cfg.d_model] * cfg.num_layers + [cfg.vocab_size]
+    return {
+        "layers": [
+            {"w": L.dense_init(keys[i], dims[i], dims[i + 1], dtype),
+             "b": jnp.zeros((dims[i + 1],), dtype)}
+            for i in range(len(dims) - 1)
+        ]
+    }
+
+
+def forward(params, batch, cfg: ModelConfig, **_):
+    x = batch["x"].astype(jnp.dtype(cfg.compute_dtype))
+    n = len(params["layers"])
+    for i, lyr in enumerate(params["layers"]):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x, None

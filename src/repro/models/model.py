@@ -1,0 +1,191 @@
+"""Model dispatcher: one uniform API over all architecture families.
+
+    params                  = init_params(key, cfg)
+    loss, aux               = loss_fn(params, batch, cfg)          # train
+    logits, cache           = prefill(params, batch, cfg)
+    logits, cache           = decode_step(params, batch, cache, idx, cfg)
+    cache                   = init_cache(cfg, batch_size, max_len)
+
+Batches are dicts: "tokens" [B,S] int32 (LM families), "embeds" [B,S,d]
+(modality-stubbed families), "x"/"y" (mlp classifier). LM loss is next-token
+cross-entropy; MoE families add the load-balance aux loss.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import (encdec, hybrid, mlp, moe_transformer, ssm,
+                          transformer, xlstm, xlstm_model)
+from repro.models import layers as L
+
+
+def _module(cfg: ModelConfig):
+    if cfg.family == "mlp":
+        return mlp
+    if cfg.family == "moe":
+        return moe_transformer
+    if cfg.family == "hybrid":
+        return hybrid
+    if cfg.family == "audio" or cfg.is_encoder_decoder:
+        return encdec
+    if cfg.family == "ssm":
+        return xlstm_model if cfg.slstm_every or cfg.ssm_state == 0 else hybrid
+    return transformer  # dense | vlm
+
+
+def init_params(key, cfg: ModelConfig):
+    return _module(cfg).init(key, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig, *, mode="train",
+            cache=None, cache_index=None, use_pallas=False):
+    out = _module(cfg).forward(params, batch, cfg, mode=mode, cache=cache,
+                               cache_index=cache_index, use_pallas=use_pallas)
+    if cfg.family == "moe":
+        logits, new_cache, aux = out
+        return logits, new_cache, aux
+    logits, new_cache = out
+    return logits, new_cache, jnp.float32(0.0)
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Sharding-friendly CE: the label logit is extracted with a one-hot
+    einsum (elementwise + reduction over the vocab dim — SPMD lowers it to a
+    cheap psum) instead of take_along_axis (which all-gathers the sharded
+    vocab axis of the full logits tensor)."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    oh = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    label_logit = jnp.einsum("...v,...v->...", logits, oh,
+                             preferred_element_type=jnp.float32)
+    ll = label_logit - lse
+    if mask is None:
+        return -jnp.mean(ll)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, use_pallas: bool = False):
+    """Scalar training loss (next-token CE for LMs, CE for the classifier)."""
+    if cfg.family == "mlp":
+        logits, _ = mlp.forward(params, batch, cfg)
+        return cross_entropy(logits, batch["y"])
+    logits, _, aux = forward(params, batch, cfg, mode="train", use_pallas=use_pallas)
+    if "labels" in batch:
+        labels = batch["labels"]
+        loss = cross_entropy(logits, labels)
+    else:
+        # next-token objective over the tokens themselves
+        loss = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+    return loss + cfg.router_aux_weight * aux
+
+
+def prefill(params, batch, cfg: ModelConfig, use_pallas: bool = False):
+    logits, cache, _ = forward(params, batch, cfg, mode="prefill",
+                               use_pallas=use_pallas)
+    return logits, cache
+
+
+def decode_step(params, batch, cache, cache_index, cfg: ModelConfig):
+    logits, new_cache, _ = forward(params, batch, cfg, mode="decode",
+                                   cache=cache, cache_index=cache_index)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache construction (shape-only; used by serving and the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def _attn_cache(cfg: ModelConfig, B: int, max_len: int, dtype, stack=()):
+    hd = cfg.resolved_head_dim
+    if cfg.sliding_window is not None and max_len > cfg.sliding_window:
+        W = cfg.sliding_window
+        return {
+            "k": jnp.zeros(stack + (B, W, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros(stack + (B, W, cfg.num_kv_heads, hd), dtype),
+            "pos": jnp.full(stack + (W,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros(stack + (B, max_len, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros(stack + (B, max_len, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def _ssm_cache(cfg: ModelConfig, B: int, dtype, stack=()):
+    d_inner, H, P, N = ssm.dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return {
+        "conv": jnp.zeros(stack + (B, cfg.ssm_conv_width - 1, conv_dim), dtype),
+        "state": jnp.zeros(stack + (B, H, P, N), jnp.float32),
+    }
+
+
+def _mlstm_cache(cfg: ModelConfig, B: int, stack=()):
+    d_inner, H, dk, dv = xlstm.mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros(stack + (B, H, dk, dv), jnp.float32),
+        "n": jnp.zeros(stack + (B, H, dk), jnp.float32),
+        "m": jnp.full(stack + (B, H), -1e30, jnp.float32),
+    }
+
+
+def _slstm_cache(cfg: ModelConfig, B: int, stack=()):
+    H = cfg.num_heads
+    P = cfg.d_model // H
+    return {
+        "c": jnp.zeros(stack + (B, H, P), jnp.float32),
+        "n": jnp.zeros(stack + (B, H, P), jnp.float32),
+        "m": jnp.full(stack + (B, H), -1e30, jnp.float32),
+        "h": jnp.zeros(stack + (B, H, P), jnp.float32),
+    }
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return _attn_cache(cfg, B, max_len, dtype, stack=(cfg.num_layers,))
+    if fam == "moe":
+        n_dense = cfg.first_dense_layers
+        c = {"dense": None, "moe": _attn_cache(cfg, B, max_len, dtype,
+                                               stack=(cfg.num_layers - n_dense,))}
+        if n_dense:
+            c["dense"] = _attn_cache(cfg, B, max_len, dtype, stack=(n_dense,))
+        return c
+    if fam == "hybrid":
+        k, n_super, n_rem = hybrid.split_layers(cfg)
+        c = {
+            "mamba": _ssm_cache(cfg, B, dtype, stack=(n_super, k)),
+            "attn": _attn_cache(cfg, B, max_len, dtype, stack=(n_super,)),
+            "mamba_rem": None,
+        }
+        if n_rem:
+            c["mamba_rem"] = _ssm_cache(cfg, B, dtype, stack=(n_rem,))
+        return c
+    if fam == "ssm":  # xlstm
+        r, n_super, n_rem = xlstm_model.split_layers(cfg)
+        c = {"mlstm": None, "slstm": None, "mlstm_rem": None}
+        if n_super:
+            c["mlstm"] = _mlstm_cache(cfg, B, stack=(n_super, r - 1))
+            c["slstm"] = _slstm_cache(cfg, B, stack=(n_super,))
+        if n_rem:
+            c["mlstm_rem"] = _mlstm_cache(cfg, B, stack=(n_rem,))
+        return c
+    if fam == "audio":
+        return {
+            "enc_out": jnp.zeros((B, cfg.encoder_seq_len, cfg.d_model), dtype),
+            "self": _attn_cache(cfg, B, max_len, dtype, stack=(cfg.num_layers,)),
+        }
+    raise ValueError(fam)

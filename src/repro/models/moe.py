@@ -1,0 +1,109 @@
+"""Mixture-of-Experts FFN: GShard-style capacity-based einsum dispatch.
+
+Top-k routing with per-(group, expert) capacity, optional shared experts
+(deepseek-moe), and a load-balance auxiliary loss. The expert dimension E is
+the unit of expert parallelism — expert weight stacks are sharded E over the
+mesh ``model`` axis, and XLA materializes the dispatch/combine einsums as
+all-to-alls across it.
+
+Token groups bound the dispatch tensor size: tokens are reshaped to
+(G, group_size) and each group routes independently with capacity
+C = ceil(group_size * topk / E * capacity_factor).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+GROUP_SIZE = 256  # tokens per routing group
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    E, d, ff = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": (jax.random.normal(kr, (d, E)) * scale).astype(jnp.float32),
+        "w_gate": (jax.random.normal(kg, (E, d, ff)) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ku, (E, d, ff)) * scale).astype(dtype),
+        "w_down": (jax.random.normal(kd, (E, ff, d)) / math.sqrt(ff)).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        shared_ff = cfg.moe_d_ff * cfg.num_shared_experts
+        p["shared"] = L.mlp_init(ks, cfg, dtype, d_ff=shared_ff)
+    return p
+
+
+def _capacity(group_size: int, cfg: ModelConfig) -> int:
+    c = math.ceil(group_size * cfg.num_experts_per_tok
+                  / cfg.num_experts * cfg.capacity_factor)
+    return max(4, c)
+
+
+def route(router_logits, cfg: ModelConfig, capacity: int):
+    """router_logits: [G, S, E] -> (dispatch [G,S,E,C] bool-ish, combine [G,S,E,C], aux).
+
+    Slot-sequential greedy capacity assignment (GShard): earlier tokens and
+    earlier top-k choices win capacity slots; overflow tokens are dropped
+    (their combine weights are zero) — the residual connection carries them.
+    """
+    G, S, E = router_logits.shape
+    k = cfg.num_experts_per_tok
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    topk_vals, topk_idx = jax.lax.top_k(probs, k)  # [G,S,k]
+    # normalize the selected gates to sum to 1 per token
+    topk_vals = topk_vals / jnp.sum(topk_vals, axis=-1, keepdims=True)
+
+    counts = jnp.zeros((G, 1, E), jnp.int32)
+    dispatch = jnp.zeros((G, S, E, capacity), jnp.bool_)
+    combine = jnp.zeros((G, S, E, capacity), jnp.float32)
+    for j in range(k):
+        mask_j = jax.nn.one_hot(topk_idx[..., j], E, dtype=jnp.int32)  # [G,S,E]
+        pos_j = jnp.cumsum(mask_j, axis=1) - mask_j + counts  # slot index per token
+        counts = counts + jnp.sum(mask_j, axis=1, keepdims=True)
+        keep = (pos_j < capacity) & (mask_j > 0)  # [G,S,E]
+        slot_oh = jax.nn.one_hot(pos_j, capacity, dtype=jnp.float32)  # [G,S,E,C]
+        d_j = keep[..., None] * slot_oh
+        dispatch = dispatch | (d_j > 0)
+        combine = combine + topk_vals[..., j][..., None, None] * d_j
+
+    # load-balance auxiliary loss (Switch/GShard form)
+    me = jnp.mean(probs, axis=(0, 1))                      # mean router prob per expert
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(topk_idx, E, dtype=jnp.float32), axis=2), axis=(0, 1)
+    ) / k                                                   # fraction routed per expert
+    aux = E * jnp.sum(me * ce)
+    return dispatch, combine, aux
+
+
+def moe_apply(params, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y [B,S,d], aux_loss scalar)."""
+    B, S, d = x.shape
+    T = B * S
+    gs = min(GROUP_SIZE, T)
+    G = T // gs
+    assert G * gs == T, (B, S, gs)
+    xg = x.reshape(G, gs, d)
+
+    logits = xg.astype(jnp.float32) @ params["router"]  # [G,S,E]
+    C = _capacity(gs, cfg)
+    dispatch, combine, aux = route(logits, cfg, C)
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(x.dtype)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)  # [G,E,C,d] (all-to-all boundary)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"])  # [G,E,C,d]
+    y = jnp.einsum("gsec,gecd->gsd", combine, ye)  # back to token order
+
+    y = y.reshape(B, S, d)
+    if cfg.num_shared_experts:
+        y = y + L.mlp_apply(params["shared"], x, cfg)
+    return y, aux

@@ -1,0 +1,194 @@
+"""Mamba2 (SSD — state space dual) blocks, chunkwise-parallel.
+
+Follows the Mamba2 formulation (Dao & Gu 2024): per-head scalar decay
+``a_t = exp(dt_t * A_h)`` (A_h < 0), rank-1 state updates
+``h_t = a_t h_{t-1} + dt_t * B_t x_t^T`` with state h in R^{P x N}, and
+readout ``y_t = C_t . h_t + D_h x_t``.
+
+Training/prefill uses the chunked algorithm: intra-chunk quadratic
+(attention-like, exact causal) + inter-chunk state recurrence via
+``lax.scan`` over chunks. Decode is the O(1) recurrent step. The Pallas
+kernel (repro.kernels.ssd_scan) implements the intra-chunk part; this module
+is its pure-jnp oracle and the CPU/dry-run path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+HEAD_DIM = 64  # Mamba2 default P
+
+
+def dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P = HEAD_DIM
+    H = d_inner // P
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def ssm_block_init(key, cfg: ModelConfig, dtype):
+    d_inner, H, P, N = dims(cfg)
+    conv_dim = d_inner + 2 * N  # conv over [x ; B ; C]
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "norm": L.norm_init(cfg, dtype),
+        # in_proj -> [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+        "w_in": L.dense_init(k1, cfg.d_model, 2 * d_inner + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv_width, conv_dim)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), dtype),
+        "gate_norm": {"scale": jnp.ones((d_inner,), dtype)},
+        "w_out": L.dense_init(k4, d_inner, cfg.d_model, dtype),
+    }
+
+
+def _split_in(proj, cfg: ModelConfig):
+    d_inner, H, P, N = dims(cfg)
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner:d_inner + d_inner + 2 * N]
+    dt = proj[..., -H:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b):
+    """Depthwise causal conv1d over time. xBC: [B,S,D]; conv_w: [W,D]."""
+    W = conv_w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC)
+    for i in range(W):
+        out = out + pad[:, i:i + xBC.shape[1]] * conv_w[i]
+    return jax.nn.silu(out + conv_b)
+
+
+def _segsum(a):
+    """a: [..., Q] log-decay per step -> cumulative decay matrix [..., Q, Q].
+
+    out[i, j] = sum_{k=j+1..i} a_k  for j <= i (else -inf).
+    """
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_{j+1..i} = cs_i - cs_j
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    xh: [B,S,H,P] inputs; dt: [B,S,H] (post-softplus); A: [H] (negative);
+    Bm, Cm: [B,S,N] (single group, broadcast over heads).
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    Bb, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+    q = chunk
+
+    xc = xh.reshape(Bb, nc, q, H, P)
+    dtc = dt.reshape(Bb, nc, q, H)
+    Bc = Bm.reshape(Bb, nc, q, N)
+    Cc = Cm.reshape(Bb, nc, q, N)
+
+    dA = dtc * A[None, None, None, :]          # [B,nc,q,H] log decay per step
+    dA_cs = jnp.cumsum(dA, axis=2)             # within-chunk cumulative
+
+    # ---- intra-chunk (quadratic, exact causal) -----------------------------
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))       # [B,nc,H,q,q]
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)          # [B,nc,q,q]
+    gated = scores[:, :, None] * Lmat                        # [B,nc,H,q,q]
+    xdt = xc * dtc[..., None]                                # dt-weighted input
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", gated, xdt)  # [B,nc,q,H,P]
+
+    # ---- chunk-local final states ------------------------------------------
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)     # [B,nc,q,H]
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, dtc * decay_to_end, xc)
+
+    # ---- inter-chunk recurrence --------------------------------------------
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                # [B,nc,H]
+    init = (jnp.zeros((Bb, H, P, N), jnp.float32)
+            if initial_state is None else initial_state.astype(jnp.float32))
+
+    def scan_fn(h_prev, inp):
+        dec, s_local = inp  # dec: [B,H], s_local: [B,H,P,N]
+        h_new = h_prev * dec[..., None, None] + s_local.astype(jnp.float32)
+        return h_new, h_prev
+
+    decs = jnp.moveaxis(chunk_decay, 1, 0)     # [nc,B,H]
+    sloc = jnp.moveaxis(states, 1, 0)          # [nc,B,H,P,N]
+    final_state, h_prevs = jax.lax.scan(scan_fn, init, (decs, sloc))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)      # [B,nc,H,P,N] state entering chunk
+
+    # ---- inter-chunk contribution to outputs --------------------------------
+    in_decay = jnp.exp(dA_cs)                   # decay from chunk start to step
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, in_decay, h_prevs)
+
+    y = (y_diag + y_off).reshape(Bb, S, H, P)
+    return y, final_state
+
+
+def ssd_decode_step(x1, dt1, A, B1, C1, state):
+    """One recurrent step. x1: [B,H,P]; dt1: [B,H]; B1,C1: [B,N]; state [B,H,P,N]."""
+    dec = jnp.exp(dt1 * A[None, :])                                  # [B,H]
+    upd = jnp.einsum("bhp,bn->bhpn", x1 * dt1[..., None], B1)
+    state = state * dec[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C1)
+    return y, state
+
+
+def ssm_block_apply(params, x, cfg: ModelConfig, mode: str,
+                    cache=None, use_pallas: bool = False):
+    """x: [B,S,d]. Returns (y, new_cache). Cache: {'conv': [B,W-1,D], 'state': [B,H,P,N]}."""
+    d_inner, H, P, N = dims(cfg)
+    res = x
+    xn = L.norm_apply(params["norm"], x, cfg)
+    proj = xn @ params["w_in"]
+    z, xBC, dt_raw = _split_in(proj, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    new_cache = None
+    if mode == "decode":
+        W = cfg.ssm_conv_width
+        conv_hist = jnp.concatenate([cache["conv"], xBC], axis=1)  # [B,W,D]
+        conv_out = jnp.sum(conv_hist * params["conv_w"][None], axis=1) + params["conv_b"]
+        xBC1 = jax.nn.silu(conv_out)  # [B,D]
+        xh = xBC1[..., :d_inner].reshape(-1, H, P)
+        B1 = xBC1[..., d_inner:d_inner + N]
+        C1 = xBC1[..., d_inner + N:]
+        y, state = ssd_decode_step(xh, dt[:, 0], A, B1, C1, cache["state"])
+        y = y.reshape(-1, 1, d_inner)
+        new_cache = {"conv": conv_hist[:, 1:], "state": state}
+    else:
+        xBCc = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+        Bsz, S = x.shape[0], x.shape[1]
+        xh = xBCc[..., :d_inner].reshape(Bsz, S, H, P)
+        Bm = xBCc[..., d_inner:d_inner + N]
+        Cm = xBCc[..., d_inner + N:]
+        if use_pallas:
+            from repro.kernels.ssd_scan import ops as ssd_ops
+            y, state = ssd_ops.ssd_scan(xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+        else:
+            y, state = ssd_chunked(xh, dt, A, Bm, Cm, chunk=min(cfg.ssm_chunk, S))
+        y = y.reshape(Bsz, S, d_inner)
+        if mode == "prefill":
+            W = cfg.ssm_conv_width
+            new_cache = {"conv": xBC[:, -(W - 1):], "state": state}
+
+    y = y.astype(x.dtype) + (xh.reshape(y.shape).astype(x.dtype)
+                             * params["D"].repeat(P))  # skip connection
+    # gated output norm (mamba2: RMSNorm(y * silu(z)))
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    g = (gf * jax.lax.rsqrt(jnp.mean(gf * gf, -1, keepdims=True) + 1e-6)).astype(x.dtype)
+    g = g * params["gate_norm"]["scale"]
+    return res + g @ params["w_out"], new_cache

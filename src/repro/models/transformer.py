@@ -1,0 +1,115 @@
+"""Dense decoder-only transformer (qwen2/gemma/olmo/glm4/qwen2-vl backbone).
+
+Layer params are stacked on a leading L axis and traversed with
+``jax.lax.scan`` (keeps the HLO size O(1) in depth — essential for the
+80/94-layer dry-runs). ``cfg.remat`` wraps the block in jax.checkpoint.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def block_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.norm_init(cfg, dtype),
+        "attn": L.attention_init(k1, cfg, dtype),
+        "norm2": L.norm_init(cfg, dtype),
+        "mlp": L.mlp_init(k2, cfg, dtype),
+    }
+
+
+def block_apply(params, x, cfg: ModelConfig, positions, mode: str,
+                cache=None, cache_index=None, use_pallas: bool = False):
+    h, new_cache = L.attention_apply(
+        params["attn"], L.norm_apply(params["norm1"], x, cfg), cfg, positions,
+        mode=mode, cache=cache, cache_index=cache_index, use_pallas=use_pallas)
+    x = x + h
+    x = x + L.mlp_apply(params["mlp"], L.norm_apply(params["norm2"], x, cfg), cfg)
+    return x, new_cache
+
+
+def init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kb, kf = jax.random.split(key, 3)
+    block_keys = jax.random.split(kb, cfg.num_layers)
+    return {
+        "embed": L.embed_init(ke, cfg, dtype),
+        "blocks": L.stacked(block_keys, lambda k: block_init(k, cfg, dtype)),
+        "final_norm": L.norm_init(cfg, dtype),
+    }
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    if "embeds" in batch:
+        x = batch["embeds"]
+    else:
+        x = L.embed_apply(params["embed"], batch["tokens"], cfg)
+    return x.astype(jnp.dtype(cfg.compute_dtype))
+
+
+def _positions_for(batch, cfg: ModelConfig, S: int, B: int, offset=0):
+    if cfg.use_mrope:
+        if "positions_thw" in batch:
+            return batch["positions_thw"]
+        p = jnp.arange(S)[None].repeat(B, 0) + offset  # text: t==h==w
+        return jnp.stack([p, p, p], axis=0)
+    return jnp.arange(S)[None].repeat(B, 0) + offset
+
+
+def forward(params, batch, cfg: ModelConfig, *, mode: str = "train",
+            cache=None, cache_index=None, use_pallas: bool = False):
+    """Returns (logits, new_cache)."""
+    x = _embed_inputs(params, batch, cfg)
+    B, S = x.shape[0], x.shape[1]
+    positions = _positions_for(batch, cfg, S, B,
+                               offset=cache_index if mode == "decode" else 0)
+    if cfg.learned_pos_emb:
+        if mode == "decode":
+            pe = jax.lax.dynamic_slice_in_dim(params["embed"]["pos"], cache_index, 1, axis=0)
+        else:
+            pe = params["embed"]["pos"][:S]
+        x = x + pe[None].astype(x.dtype)
+
+    if mode == "train":
+        def body(blk, h, pos):
+            h, _ = block_apply(blk, h, cfg, pos, "train", use_pallas=use_pallas)
+            if cfg.tp_hints:
+                # §Perf qwen2-72b iteration 1: without this, XLA shards the
+                # residual carry over 'model' between layers and re-gathers
+                # it before every projection (~6 activation AGs/layer).
+                h = jax.lax.with_sharding_constraint(
+                    h, jax.sharding.PartitionSpec(*([None] * h.ndim)))
+            return h
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.dots_saveable
+                      if cfg.remat_policy == "dots" else None)
+            body = jax.checkpoint(body, policy=policy)
+
+        def scan_fn(h, blk):
+            return body(blk, h, positions), None
+        x, _ = jax.lax.scan(scan_fn, x, params["blocks"])
+        new_cache = None
+    elif mode == "prefill":
+        def scan_fn(h, blk):
+            h, c = block_apply(blk, h, cfg, positions, "prefill", use_pallas=use_pallas)
+            return h, c
+        x, new_cache = jax.lax.scan(scan_fn, x, params["blocks"])
+    else:  # decode
+        def scan_fn(h, blk_and_cache):
+            blk, c = blk_and_cache
+            h, c2 = block_apply(blk, h, cfg, positions, "decode",
+                                cache=c, cache_index=cache_index)
+            return h, c2
+        x, new_cache = jax.lax.scan(scan_fn, x, (params["blocks"], cache))
+
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.unembed_apply(params["embed"], x, cfg)
+    return logits, new_cache

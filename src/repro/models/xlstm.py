@@ -1,0 +1,284 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, true recurrence via lax.scan).
+
+mLSTM cell (per head, exponential gating, stabilized):
+    m_t = max(f̃_t + m_{t-1}, ĩ_t)                (log-space stabilizer)
+    C_t = exp(f̃_t + m_{t-1} - m_t) C_{t-1} + exp(ĩ_t - m_t) k_t v_tᵀ
+    n_t = exp(f̃_t + m_{t-1} - m_t) n_{t-1} + exp(ĩ_t - m_t) k_t
+    h_t = (C_tᵀ q_t) / max(|n_tᵀ q_t|, exp(-m_t))
+with f̃ = logsigmoid(f_raw), ĩ = i_raw. Chunkwise: intra-chunk decay matrix
+(same skeleton as the Mamba2 SSD scan) + inter-chunk (C, n, m) recurrence.
+
+The xLSTM block is pre-up-projection (expansion 2): the mLSTM operates at
+d_inner = 2*d_model with a silu-gated residual branch; qk dim = d_inner / 2.
+sLSTM blocks use scalar memory per channel with recurrent (block-diagonal)
+weights and a small gated FFN after the cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+QK_FACTOR = 2  # qk dim = d_inner // QK_FACTOR
+
+
+def mlstm_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.num_heads
+    dv = d_inner // H           # value head dim
+    dk = d_inner // QK_FACTOR // H  # query/key head dim
+    return d_inner, H, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_block_init(key, cfg: ModelConfig, dtype):
+    d_inner, H, dk, dv = mlstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": L.norm_init(cfg, dtype),
+        "w_up": L.dense_init(ks[0], cfg.d_model, 2 * d_inner, dtype),  # [branch, gate]
+        "w_q": L.dense_init(ks[1], d_inner, H * dk, dtype),
+        "w_k": L.dense_init(ks[2], d_inner, H * dk, dtype),
+        "w_v": L.dense_init(ks[3], d_inner, H * dv, dtype),
+        "w_if": L.dense_init(ks[4], d_inner, 2 * H, dtype),  # input/forget gate logits
+        "if_bias": jnp.concatenate([jnp.zeros((H,)), jnp.linspace(3.0, 6.0, H)]).astype(jnp.float32),
+        "out_norm": {"scale": jnp.ones((d_inner,), dtype)},
+        "w_down": L.dense_init(ks[5], d_inner, cfg.d_model, dtype),
+    }
+
+
+def _mlstm_chunked(q, k, v, i_raw, f_raw, chunk: int, initial=None,
+                   matmul_dtype=jnp.float32):
+    """q,k: [B,S,H,dk]; v: [B,S,H,dv]; i_raw,f_raw: [B,S,H] (pre-activation).
+
+    Returns (h [B,S,H,dv], final (C [B,H,dk,dv], n [B,H,dk], m [B,H])).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S
+    qn = chunk
+
+    lf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32)).reshape(B, nc, qn, H)
+    li = i_raw.astype(jnp.float32).reshape(B, nc, qn, H)
+    qc = q.reshape(B, nc, qn, H, dk)
+    kc = k.reshape(B, nc, qn, H, dk)
+    vc = v.reshape(B, nc, qn, H, dv)
+
+    lf_cs = jnp.cumsum(lf, axis=2)                    # cumulative log-forget in chunk
+    lf_total = lf_cs[:, :, -1, :]                      # [B,nc,H]
+
+    # log weight of key j surviving to chunk end: sum_{j+1..end} lf + li_j
+    b_end = lf_total[:, :, None, :] - lf_cs + li       # [B,nc,q,H]
+    m_local = jnp.max(b_end, axis=2)                   # [B,nc,H] chunk-local stabilizer
+
+    if initial is None:
+        C0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+        n0 = jnp.zeros((B, H, dk), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = initial
+
+    # ---- inter-chunk recurrence on (C, n, m) --------------------------------
+    def scan_fn(carry, inp):
+        C, n, m = carry
+        lft, mloc, kj, bj, vj = inp
+        # kj: [B,q,H,dk]; bj: [B,q,H]; vj: [B,q,H,dv]
+        m_new = jnp.maximum(lft + m, mloc)
+        decay = jnp.exp(lft + m - m_new)               # [B,H]
+        w = jnp.exp(bj - m_new[:, None, :])            # [B,q,H]
+        C_new = C * decay[..., None, None] + jnp.einsum(
+            "bqhk,bqh,bqhv->bhkv", kj.astype(jnp.float32), w, vj.astype(jnp.float32))
+        n_new = n * decay[..., None] + jnp.einsum(
+            "bqhk,bqh->bhk", kj.astype(jnp.float32), w)
+        return (C_new, n_new, m_new), (C, n, m)
+
+    xs = (jnp.moveaxis(lf_total, 1, 0), jnp.moveaxis(m_local, 1, 0),
+          jnp.moveaxis(kc, 1, 0), jnp.moveaxis(b_end, 1, 0), jnp.moveaxis(vc, 1, 0))
+    (Cf, nf, mf), (Cp, np_, mp) = jax.lax.scan(scan_fn, (C0, n0, m0), xs)
+    Cp = jnp.moveaxis(Cp, 0, 1)   # [B,nc,H,dk,dv] state entering each chunk
+    np_ = jnp.moveaxis(np_, 0, 1)  # [B,nc,H,dk]
+    mp = jnp.moveaxis(mp, 0, 1)    # [B,nc,H]
+
+    # ---- combine intra + inter contributions per step -----------------------
+    # log-decay from chunk start to step t (inclusive): lf_cs
+    # stabilizer per step: m_t = max(lf_cs + m_prev, max_j<=t intra weights)
+    intra_b = lf_cs[:, :, :, None, :] - lf_cs[:, :, None, :, :] + li[:, :, None, :, :]
+    # intra_b[t, j] = sum_{j+1..t} lf + li_j ; valid for j <= t
+    qt = jnp.arange(qn)
+    causal = (qt[:, None] >= qt[None, :])[None, None, :, :, None]  # j <= t
+    intra_b = jnp.where(causal, intra_b, -jnp.inf)     # [B,nc,t,j,H]
+    m_intra = jnp.max(intra_b, axis=3)                  # [B,nc,t,H]
+    m_comb = jnp.maximum(lf_cs + mp[:, :, None, :], m_intra)
+    m_comb = jnp.maximum(m_comb, -1e30)                 # avoid -inf - -inf
+
+    # Fused intra-chunk weights: P[t,j] = (q_t.k_j) * exp(intra_b - m) is
+    # materialized ONCE and reused for both the value contraction and the
+    # normalizer row-sum (qn = sum_j P) — one O(q^2) tensor instead of three,
+    # and the value dot runs in bf16 (perf iteration 1, EXPERIMENTS.md §Perf).
+    w_intra = jnp.exp(intra_b - m_comb[:, :, :, None, :])  # [B,nc,t,j,H]
+    scores = jnp.einsum("bcthk,bcjhk->bctjh", qc.astype(matmul_dtype),
+                        kc.astype(matmul_dtype),
+                        preferred_element_type=jnp.float32)
+    P = scores * w_intra                                   # [B,nc,t,j,H]
+    qn_intra = jnp.sum(P, axis=3)                          # row-sum == old einsum
+    h_intra = jnp.einsum("bctjh,bcjhv->bcthv", P.astype(matmul_dtype),
+                         vc.astype(matmul_dtype),
+                         preferred_element_type=jnp.float32)
+    w_inter = jnp.exp(lf_cs + mp[:, :, None, :] - m_comb)  # [B,nc,t,H]
+    h_inter = jnp.einsum("bcthk,bchkv->bcthv", qc.astype(jnp.float32), Cp) * w_inter[..., None]
+    qn_inter = jnp.einsum("bcthk,bchk->bcth", qc.astype(jnp.float32), np_) * w_inter
+
+    h_num = h_intra + h_inter                            # [B,nc,t,H,dv]
+    n_den = qn_intra + qn_inter                          # [B,nc,t,H]
+    denom = jnp.maximum(jnp.abs(n_den), jnp.exp(-m_comb))
+    h = (h_num / denom[..., None]).reshape(B, S, H, dv)
+    return h.astype(v.dtype), (Cf, nf, mf)
+
+
+def mlstm_decode_step(q1, k1, v1, i1, f1, state):
+    """Single step. q1,k1: [B,H,dk]; v1: [B,H,dv]; i1,f1: [B,H]; state (C,n,m)."""
+    C, n, m = state
+    lf = jax.nn.log_sigmoid(f1.astype(jnp.float32))
+    li = i1.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, li)
+    decay = jnp.exp(lf + m - m_new)
+    w = jnp.exp(li - m_new)
+    C = C * decay[..., None, None] + jnp.einsum(
+        "bhk,bh,bhv->bhkv", k1.astype(jnp.float32), w, v1.astype(jnp.float32))
+    n = n * decay[..., None] + k1.astype(jnp.float32) * w[..., None]
+    num = jnp.einsum("bhk,bhkv->bhv", q1.astype(jnp.float32), C)
+    den = jnp.einsum("bhk,bhk->bh", q1.astype(jnp.float32), n)
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h.astype(v1.dtype), (C, n, m_new)
+
+
+def mlstm_block_apply(params, x, cfg: ModelConfig, mode: str, cache=None):
+    d_inner, H, dk, dv = mlstm_dims(cfg)
+    res = x
+    xn = L.norm_apply(params["norm"], x, cfg)
+    up = xn @ params["w_up"]
+    branch, gate = up[..., :d_inner], up[..., d_inner:]
+    B, S = x.shape[0], x.shape[1]
+    q = (branch @ params["w_q"]).reshape(B, S, H, dk) / math.sqrt(dk)
+    k = (branch @ params["w_k"]).reshape(B, S, H, dk)
+    v = (branch @ params["w_v"]).reshape(B, S, H, dv)
+    if_logits = (branch @ params["w_if"]).astype(jnp.float32) + params["if_bias"]
+    i_raw, f_raw = if_logits[..., :H], if_logits[..., H:]
+
+    new_cache = None
+    if mode == "decode":
+        h1, state = mlstm_decode_step(q[:, 0], k[:, 0], v[:, 0],
+                                      i_raw[:, 0], f_raw[:, 0],
+                                      (cache["C"], cache["n"], cache["m"]))
+        h = h1[:, None]  # [B,1,H,dv]
+        new_cache = {"C": state[0], "n": state[1], "m": state[2]}
+    else:
+        h, state = _mlstm_chunked(q, k, v, i_raw, f_raw, min(cfg.ssm_chunk, S),
+                                  matmul_dtype=jnp.dtype(cfg.compute_dtype))
+        if mode == "prefill":
+            new_cache = {"C": state[0], "n": state[1], "m": state[2]}
+
+    h = h.reshape(B, S, d_inner)
+    hf = h.astype(jnp.float32)
+    h = (hf * jax.lax.rsqrt(jnp.mean(hf * hf, -1, keepdims=True) + 1e-6)).astype(x.dtype)
+    h = h * params["out_norm"]["scale"]
+    h = h * jax.nn.silu(gate)
+    return res + h @ params["w_down"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_block_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H = cfg.num_heads
+    P = d // H
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": L.norm_init(cfg, dtype),
+        "w_zifo": L.dense_init(ks[0], d, 4 * d, dtype),
+        # recurrent weights, block-diagonal per head: [H, P, 4*P]
+        "r_zifo": (jax.random.normal(ks[1], (H, P, 4 * P)) / math.sqrt(P)).astype(dtype),
+        "b_zifo": jnp.zeros((4 * d,), jnp.float32),
+        "out_norm": {"scale": jnp.ones((d,), dtype)},
+        "w_up": L.dense_init(ks[2], d, 2 * d, dtype),   # gated FFN after the cell
+        "w_down": L.dense_init(ks[3], d, cfg.d_model, dtype),
+    }
+
+
+def _slstm_cell(carry, zifo_x, H, P):
+    """carry: (c, n, m, h) each [B,H,P] (m: [B,H]); zifo_x: [B,4*H*P] input part."""
+    c, n, m, h = carry
+    B = c.shape[0]
+    # recurrent contribution is added by the caller (needs r_zifo); here zifo is complete
+    zifo = zifo_x.reshape(B, H, 4, P)
+    z = jnp.tanh(zifo[:, :, 0])
+    i_raw = zifo[:, :, 1].mean(-1)   # per-head scalar gates (stabilized exp gating)
+    f_raw = zifo[:, :, 2].mean(-1)
+    o = jax.nn.sigmoid(zifo[:, :, 3])
+    lf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(lf + m, i_raw)
+    fs = jnp.exp(lf + m - m_new)[..., None]
+    is_ = jnp.exp(i_raw - m_new)[..., None]
+    c_new = fs * c + is_ * z
+    n_new = fs * n + is_
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_block_apply(params, x, cfg: ModelConfig, mode: str, cache=None):
+    d = cfg.d_model
+    H = cfg.num_heads
+    P = d // H
+    res = x
+    xn = L.norm_apply(params["norm"], x, cfg)
+    B, S = x.shape[0], x.shape[1]
+    zifo_in = (xn @ params["w_zifo"]).astype(jnp.float32) + params["b_zifo"]  # [B,S,4d]
+
+    if cache is None:
+        c0 = jnp.zeros((B, H, P), jnp.float32)
+        n0 = jnp.zeros((B, H, P), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+        h0 = jnp.zeros((B, H, P), jnp.float32)
+    else:
+        c0, n0, m0, h0 = cache["c"], cache["n"], cache["m"], cache["h"]
+
+    r = params["r_zifo"].astype(jnp.float32)
+
+    def step(carry, zx):
+        c, n, m, h = carry
+        rec = jnp.einsum("bhp,hpq->bhq", h, r).reshape(zx.shape[0], -1)
+        carry2 = _slstm_cell((c, n, m, h), zx + rec, H, P)
+        return carry2, carry2[3]
+
+    if mode == "decode":
+        carry, h1 = step((c0, n0, m0, h0), zifo_in[:, 0])
+        hs = h1[:, None]
+        new_cache = {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}
+    else:
+        carry, hs = jax.lax.scan(step, (c0, n0, m0, h0), jnp.moveaxis(zifo_in, 1, 0))
+        hs = jnp.moveaxis(hs, 0, 1)  # [B,S,H,P]
+        new_cache = ({"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}
+                     if mode == "prefill" else None)
+
+    hs = hs.reshape(B, S, d).astype(x.dtype)
+    hf = hs.astype(jnp.float32)
+    hs = (hf * jax.lax.rsqrt(jnp.mean(hf * hf, -1, keepdims=True) + 1e-6)).astype(x.dtype)
+    hs = hs * params["out_norm"]["scale"]
+    up = hs @ params["w_up"]
+    hs = jax.nn.silu(up[..., :d]) * up[..., d:]
+    return res + hs @ params["w_down"], new_cache

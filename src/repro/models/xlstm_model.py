@@ -1,0 +1,107 @@
+"""xLSTM model assembly: repeating super-blocks of (r-1) mLSTM + 1 sLSTM.
+
+xLSTM[7:1] (the 1.3b card): slstm_every = 8 -> 6 super-blocks of 7 mLSTM
+followed by one sLSTM each. slstm_every = 0 -> pure mLSTM stack.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import xlstm as X
+
+
+def split_layers(cfg: ModelConfig):
+    r = cfg.slstm_every
+    if r == 0:
+        return 0, 0, cfg.num_layers  # all mLSTM, treated as remainder stack
+    n_super = cfg.num_layers // r
+    n_rem = cfg.num_layers - n_super * r
+    return r, n_super, n_rem
+
+
+def init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    r, n_super, n_rem = split_layers(cfg)
+    ke, km, ks, kr = jax.random.split(key, 4)
+    p = {
+        "embed": L.embed_init(ke, cfg, dtype),
+        "final_norm": L.norm_init(cfg, dtype),
+    }
+    if n_super:
+        mkeys = jax.random.split(km, n_super * (r - 1))
+        mkeys = mkeys.reshape((n_super, r - 1) + mkeys.shape[1:])
+        p["mlstm"] = jax.vmap(jax.vmap(lambda kk: X.mlstm_block_init(kk, cfg, dtype)))(mkeys)
+        p["slstm"] = L.stacked(jax.random.split(ks, n_super),
+                               lambda kk: X.slstm_block_init(kk, cfg, dtype))
+    if n_rem:
+        p["mlstm_rem"] = L.stacked(jax.random.split(kr, n_rem),
+                                   lambda kk: X.mlstm_block_init(kk, cfg, dtype))
+    return p
+
+
+def forward(params, batch, cfg: ModelConfig, *, mode="train",
+            cache=None, cache_index=None, use_pallas: bool = False):
+    x = T._embed_inputs(params, batch, cfg)
+    r, n_super, n_rem = split_layers(cfg)
+    want_cache = mode != "train"
+    new_cache = {"mlstm": None, "slstm": None, "mlstm_rem": None} if want_cache else None
+
+    def super_block(h, mlstm_p, slstm_p, m_c, s_c):
+        def inner(hh, pc):
+            mp, mc = pc
+            return X.mlstm_block_apply(mp, hh, cfg, mode, cache=mc)
+        h, m_caches = jax.lax.scan(inner, h, (mlstm_p, m_c))
+        h, s_cache = X.slstm_block_apply(slstm_p, h, cfg, mode, cache=s_c)
+        return h, m_caches, s_cache
+
+    if n_super:
+        if mode == "train":
+            def body(h, inp):
+                mp, sp = inp
+                h, _, _ = super_block(h, mp, sp, None, None)
+                return h, None
+            if cfg.remat:
+                inner_fn = jax.checkpoint(
+                    lambda h, mp, sp: super_block(h, mp, sp, None, None)[0])
+                def body(h, inp):
+                    mp, sp = inp
+                    return inner_fn(h, mp, sp), None
+            x, _ = jax.lax.scan(body, x, (params["mlstm"], params["slstm"]))
+        else:
+            m_c = cache["mlstm"] if mode == "decode" else None
+            s_c = cache["slstm"] if mode == "decode" else None
+            if mode == "decode":
+                def body(h, inp):
+                    mp, sp, mc, sc = inp
+                    h, mcs, scs = super_block(h, mp, sp, mc, sc)
+                    return h, (mcs, scs)
+                x, (mcs, scs) = jax.lax.scan(
+                    body, x, (params["mlstm"], params["slstm"], m_c, s_c))
+            else:
+                def body(h, inp):
+                    mp, sp = inp
+                    h, mcs, scs = super_block(h, mp, sp, None, None)
+                    return h, (mcs, scs)
+                x, (mcs, scs) = jax.lax.scan(body, x, (params["mlstm"], params["slstm"]))
+            new_cache["mlstm"], new_cache["slstm"] = mcs, scs
+
+    if n_rem:
+        if mode == "decode":
+            def rem_fn(h, pc):
+                mp, c = pc
+                return X.mlstm_block_apply(mp, h, cfg, "decode", cache=c)
+            x, rc = jax.lax.scan(rem_fn, x, (params["mlstm_rem"], cache["mlstm_rem"]))
+        else:
+            def rem_fn(h, mp):
+                return X.mlstm_block_apply(mp, h, cfg, mode)
+            x, rc = jax.lax.scan(rem_fn, x, params["mlstm_rem"])
+        if want_cache:
+            new_cache["mlstm_rem"] = rc
+
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.unembed_apply(params["embed"], x, cfg)
+    return logits, new_cache

@@ -1,0 +1,1 @@
+from repro.optim.optimizers import sgd, momentum, adam, Optimizer  # noqa: F401

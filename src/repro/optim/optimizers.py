@@ -1,0 +1,65 @@
+"""Optimizers. DWFL itself embeds plain SGD (Alg. 1 line 5); momentum and
+Adam are provided for the centralized baseline and beyond-paper experiments.
+Self-contained (no optax dependency): (init, update) pairs over pytrees.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def _map(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        new = _map(lambda p, g: (p.astype(jnp.float32)
+                                 - lr * g.astype(jnp.float32)).astype(p.dtype),
+                   params, grads)
+        return new, state
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return _map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params):
+        v = _map(lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        new = _map(lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+                   params, v)
+        return new, v
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = _map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": z, "v": _map(jnp.zeros_like, z), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = _map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                 state["m"], grads)
+        v = _map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                 state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new = _map(
+            lambda p, m_, v_: (p.astype(jnp.float32)
+                               - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+                               ).astype(p.dtype),
+            params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+    return Optimizer(init, update)

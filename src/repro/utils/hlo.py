@@ -1,0 +1,107 @@
+"""Collective-traffic extraction from optimized (post-SPMD) HLO text.
+
+``compiled.as_text()`` shapes are PER-PARTITION. For each collective op we
+record its local result bytes, replica-group size, and the effective
+per-chip link traffic under standard ring algorithms:
+
+    all-reduce       2 (g-1)/g  x bytes      (reduce-scatter + all-gather)
+    all-gather       (g-1)/g    x bytes      (bytes = full gathered output)
+    reduce-scatter   (g-1)/g    x bytes      (bytes = full input)
+    all-to-all       (g-1)/g    x bytes
+    collective-permute  1.0     x bytes
+
+Totals feed the roofline collective term (repro.utils.roofline).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+_ALGO_FACTOR = {
+    "all-reduce": lambda g: 2.0 * (g - 1) / g,
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: (g - 1) / g,
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\w+\[[^\]]*\]\S*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?[.\d]*\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    raw_bytes: Dict[str, int] = field(default_factory=dict)
+    link_bytes: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_raw(self) -> int:
+        return sum(self.raw_bytes.values())
+
+    @property
+    def total_link(self) -> float:
+        return sum(self.link_bytes.values())
+
+    def as_dict(self) -> dict:
+        return {"counts": self.counts, "raw_bytes": self.raw_bytes,
+                "link_bytes": self.link_bytes,
+                "total_raw": self.total_raw, "total_link": self.total_link}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Scan per-partition optimized HLO; returns per-op traffic stats.
+
+    Bytes counted are local (per-chip) result sizes; link_bytes applies the
+    ring-algorithm factor using the replica-group size on the op line.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            if gl:
+                g = len(gl.group(1).split(","))
+        if g <= 1:
+            continue  # degenerate group: no traffic
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+        stats.raw_bytes[op] = stats.raw_bytes.get(op, 0) + nbytes
+        stats.link_bytes[op] = (stats.link_bytes.get(op, 0.0)
+                                + nbytes * _ALGO_FACTOR[op](g))
+    return stats

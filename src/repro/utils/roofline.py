@@ -1,0 +1,100 @@
+"""Three-term roofline model for TPU v5e (the target hardware).
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = per-chip link traffic / link_bw
+
+cost_analysis() on the SPMD-partitioned module reports PER-CHIP flops and
+bytes (verified empirically: global/num_partitions). Collective traffic
+comes from repro.utils.hlo.parse_collectives (per-chip, ring-factored).
+
+MODEL_FLOPS = 6·N·D for training (fwd+bwd), 2·N·D per decoded/prefilled
+token (N = params, active params for MoE); the ratio MODEL_FLOPS/HLO_FLOPs
+surfaces remat/dispatch/attention overhead.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link (~ per chip, 1 link active)
+
+
+@dataclass
+class Roofline:
+    name: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    bytes_per_chip: float
+    link_bytes_per_chip: float
+    model_flops: Optional[float] = None
+    n_chips: int = 256
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic no-overlap-needed bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flop_ratio(self) -> Optional[float]:
+        if self.model_flops is None or self.flops_per_chip == 0:
+            return None
+        return self.model_flops / (self.flops_per_chip * self.n_chips)
+
+    @property
+    def mfu_bound(self) -> Optional[float]:
+        """MODEL_FLOPS / (chips · peak · step_time): the MFU this program
+        could at best achieve if perfectly overlapped."""
+        if self.model_flops is None or self.step_time_s == 0:
+            return None
+        return self.model_flops / (self.n_chips * PEAK_FLOPS_BF16 * self.step_time_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "link_bytes_per_chip": self.link_bytes_per_chip,
+            "model_flops": self.model_flops,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "mfu_bound": self.mfu_bound,
+            "n_chips": self.n_chips,
+        }
+
+
+def from_analysis(name: str, cost: dict, link_bytes: float,
+                  model_flops: Optional[float] = None,
+                  n_chips: int = 256) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    return Roofline(
+        name=name,
+        compute_s=flops / PEAK_FLOPS_BF16,
+        memory_s=nbytes / HBM_BW,
+        collective_s=link_bytes / ICI_BW,
+        flops_per_chip=flops,
+        bytes_per_chip=nbytes,
+        link_bytes_per_chip=link_bytes,
+        model_flops=model_flops,
+        n_chips=n_chips,
+    )
+
+
+def model_flops_estimate(n_params: float, tokens: float, kind: str,
+                         n_active_params: Optional[float] = None) -> float:
+    """6·N·D for train, 2·N·D for inference-style passes."""
+    n = n_active_params if n_active_params is not None else n_params
+    factor = 6.0 if kind == "train" else 2.0
+    return factor * n * tokens

@@ -1,0 +1,133 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs ref.py
+pure-jnp oracles (interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dp_perturb import ops as dp_ops
+from repro.kernels.dp_perturb import ref as dp_ref
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.models.ssm import ssd_chunked
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# dp_perturb
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(64,), (1000, 37), (3, 17, 29), (256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dp_perturb_deterministic_path(shape, dtype):
+    p = jax.random.normal(KEY, shape).astype(dtype)
+    g = jax.random.normal(jax.random.fold_in(KEY, 1), shape).astype(dtype)
+    got = dp_ops.sgd_update(p, g, 0.05)
+    want = dp_ref.sgd_update_ref(p, g, 0.05)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 1e-6,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
+def test_dp_perturb_noise_moments():
+    shape = (512, 256)
+    p = jax.random.normal(KEY, shape)
+    g = jax.random.normal(jax.random.fold_in(KEY, 1), shape)
+    sigma, s_sig, s_noise = 2.0, 3.0, 1.5
+    x, xt = dp_ops.dp_perturb(p, g, 7, gamma=0.1, sigma=sigma,
+                              s_sig=s_sig, s_noise=s_noise)
+    want_x = dp_ref.sgd_update_ref(p, g, 0.1)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(want_x), atol=1e-6)
+    resid = np.asarray(xt, np.float64) - s_sig * np.asarray(want_x, np.float64)
+    n = resid.size
+    assert abs(resid.mean()) < 5 * sigma * s_noise / np.sqrt(n)
+    assert resid.std() == pytest.approx(sigma * s_noise, rel=0.03)
+    # different seeds give different noise
+    _, xt2 = dp_ops.dp_perturb(p, g, 8, gamma=0.1, sigma=sigma,
+                               s_sig=s_sig, s_noise=s_noise)
+    assert float(jnp.max(jnp.abs(xt - xt2))) > 0.1
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,Hkv,hd,win", [
+    (2, 256, 4, 2, 64, None),
+    (1, 256, 4, 1, 64, 96),     # MQA + sliding window
+    (2, 128, 2, 2, 32, None),
+    (1, 512, 8, 4, 64, None),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, Hkv, hd, win, dtype):
+    q = jax.random.normal(KEY, (B, S, H, hd)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, Hkv, hd)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, Hkv, hd)).astype(dtype)
+    got = fa_ops.flash_attention(q, k, v, causal=True, sliding_window=win,
+                                 block_q=64, block_k=64)
+    kr = jnp.repeat(k, H // Hkv, 2)
+    vr = jnp.repeat(v, H // Hkv, 2)
+    want = fa_ref.attention_ref(q, kr, vr, causal=True, sliding_window=win)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_matches_model_layer():
+    """The kernel path and the model's chunked-jnp path agree."""
+    from repro.configs.registry import get_arch
+    from repro.models import layers as L
+    cfg = get_arch("glm4-9b").reduced(num_layers=1)
+    key = KEY
+    p = L.attention_init(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 256, cfg.d_model)) * 0.1
+    pos = jnp.arange(256)[None].repeat(2, 0)
+    y1, _ = L.attention_apply(p, x, cfg, pos, mode="train", use_pallas=False)
+    y2, _ = L.attention_apply(p, x, cfg, pos, mode="train", use_pallas=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 128, 8, 16, 16, 32),
+    (1, 256, 16, 32, 64, 64),
+    (2, 64, 8, 64, 64, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_ssd_scan_sweep(B, S, H, P, N, chunk, dtype):
+    xh = (jax.random.normal(KEY, (B, S, H, P)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 2), (H,)) * 0.3)
+    Bm = (jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, N)) * 0.3).astype(dtype)
+    Cm = (jax.random.normal(jax.random.fold_in(KEY, 4), (B, S, N)) * 0.3).astype(dtype)
+    y1, s1 = ssd_ops.ssd_scan(xh, dt, A, Bm, Cm, chunk=chunk)
+    y2, s2 = ssd_chunked(xh, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ssd_chunk_invariance():
+    """The chunk size is an implementation detail — results must not
+    depend on it (chunked scan correctness)."""
+    B, S, H, P, N = 1, 128, 4, 16, 16
+    xh = jax.random.normal(KEY, (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 2), (H,)) * 0.3)
+    Bm = jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, N)) * 0.3
+    Cm = jax.random.normal(jax.random.fold_in(KEY, 4), (B, S, N)) * 0.3
+    y32, s32 = ssd_chunked(xh, dt, A, Bm, Cm, chunk=32)
+    y128, s128 = ssd_chunked(xh, dt, A, Bm, Cm, chunk=128)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y128),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s32), np.asarray(s128),
+                               rtol=1e-4, atol=1e-5)

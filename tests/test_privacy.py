@@ -1,0 +1,137 @@
+"""Privacy accounting (Thm 4.1, Remark 4.1) — unit + hypothesis property tests."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import privacy
+from repro.core.channel import ChannelConfig
+
+
+def _chan(N=10, sigma=1.0, sigma_m=1.0, seed=0, p_dbm=40.0):
+    return ChannelConfig(n_workers=N, p_dbm=p_dbm, sigma=sigma,
+                         sigma_m=sigma_m, seed=seed).realize()
+
+
+def test_theorem_4_1_formula():
+    """ε_i must equal Eqt. (11) computed from first principles."""
+    chan = _chan(N=6, sigma=0.8, sigma_m=0.5)
+    gamma, g_max, delta = 0.05, 1.5, 1e-5
+    eps = privacy.epsilon_dwfl(gamma, g_max, chan, delta)
+    for i in range(6):
+        s2 = (chan.noise_scale ** 2) * chan.cfg.sigma ** 2
+        den = math.sqrt(s2.sum() - s2[i] + chan.cfg.sigma_m ** 2)
+        want = (2 * gamma * g_max * chan.c / den
+                * math.sqrt(2 * math.log(1.25 / delta)))
+        assert eps[i] == pytest.approx(want, rel=1e-9)
+
+
+def test_remark_4_1_bound_holds():
+    chan = _chan(N=12)
+    eps = privacy.epsilon_dwfl(0.05, 1.0, chan, 1e-5)
+    bound = privacy.epsilon_dwfl_bound(0.05, 1.0, chan, 1e-5)
+    assert np.all(eps <= bound + 1e-12)
+
+
+def test_epsilon_decays_with_N():
+    """The paper's headline: per-worker ε ~ O(1/sqrt(N)) for the analog
+    scheme; the orthogonal budget does not decay."""
+    eps_by_N, orth_by_N = [], []
+    for N in (5, 20, 80):
+        # unit fading isolates the aggregation effect from channel luck
+        chan = ChannelConfig(n_workers=N, p_dbm=40.0, sigma=1.0, sigma_m=1.0,
+                             fading="unit", seed=1).realize()
+        eps_by_N.append(privacy.epsilon_dwfl(0.05, 1.0, chan, 1e-5).max())
+        orth_by_N.append(privacy.epsilon_orthogonal(0.05, 1.0, chan, 1e-5).max())
+    # dwfl: eps(N) ∝ 1/sqrt((N-1)·s² + σ_m²) with s² the per-worker scaled
+    # noise power (unit fading: identical across workers)
+    chan5 = ChannelConfig(n_workers=5, p_dbm=40.0, sigma=1.0, sigma_m=1.0,
+                          fading="unit", seed=1).realize()
+    s2 = float((chan5.noise_scale[0] ** 2))
+    want = math.sqrt((4 * s2 + 1.0) / (79 * s2 + 1.0))
+    ratio = eps_by_N[2] / eps_by_N[0]
+    assert ratio == pytest.approx(want, rel=0.05)
+    # orthogonal: essentially constant in N
+    assert orth_by_N[2] == pytest.approx(orth_by_N[0], rel=1e-6)
+    # and the analog scheme is strictly more private
+    assert eps_by_N[1] < orth_by_N[1]
+
+
+def test_sigma_calibration_inverse():
+    chan = _chan(N=10, seed=2)
+    gamma, g_max, delta, target = 0.2, 2.0, 1e-5, 0.5
+    sig = privacy.sigma_for_epsilon(target, gamma, g_max, chan, delta)
+    assert sig > 0  # target tight enough to require DP noise
+    got = privacy.epsilon_dwfl(gamma, g_max, chan.with_sigma(sig), delta).max()
+    assert got == pytest.approx(target, rel=1e-6)
+    # if the channel noise alone over-delivers privacy, sigma may be 0
+    sig0 = privacy.sigma_for_epsilon(100.0, 0.001, 0.1, chan, delta)
+    assert sig0 == 0.0
+
+
+def test_gradient_clipping():
+    import jax.numpy as jnp
+    g = {"a": jnp.ones((10,)) * 3.0, "b": jnp.ones((5,)) * 4.0}
+    clipped, norm = privacy.clip_gradient_tree(g, 1.0)
+    import jax
+    n2 = math.sqrt(sum(float(jnp.sum(x ** 2))
+                       for x in jax.tree_util.tree_leaves(clipped)))
+    assert n2 == pytest.approx(1.0, rel=1e-5)
+    # under the clip threshold: unchanged
+    clipped2, _ = privacy.clip_gradient_tree(g, 1000.0)
+    assert float(jnp.max(jnp.abs(clipped2["a"] - g["a"]))) < 1e-6
+
+
+def test_composition():
+    e1, d1 = 0.1, 1e-6
+    en, dn = privacy.compose_naive(e1, d1, 100)
+    assert en == pytest.approx(10.0)
+    ea, da = privacy.compose_advanced(e1, d1, 100, delta_prime=1e-6)
+    assert ea < en  # advanced composition wins for small eps, large T
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(sigma=st.floats(0.1, 50.0), gamma=st.floats(1e-4, 1.0),
+       g_max=st.floats(0.1, 10.0), N=st.integers(3, 40))
+def test_property_epsilon_monotonicity(sigma, gamma, g_max, N):
+    """ε decreases in σ, increases in γ and g_max — for every worker."""
+    chan = _chan(N=N, sigma=sigma, seed=5)
+    delta = 1e-5
+    eps = privacy.epsilon_dwfl(gamma, g_max, chan, delta)
+    assert np.all(eps > 0)
+    eps_more_noise = privacy.epsilon_dwfl(gamma, g_max,
+                                          chan.with_sigma(sigma * 2), delta)
+    assert np.all(eps_more_noise < eps)
+    eps_bigger_step = privacy.epsilon_dwfl(gamma * 2, g_max, chan, delta)
+    assert np.all(eps_bigger_step > eps)
+
+
+@settings(max_examples=30, deadline=None)
+@given(N=st.integers(3, 60), seed=st.integers(0, 1000))
+def test_property_channel_alignment(N, seed):
+    """Power alignment (Eqt. 3-4): every worker's received signal amplitude
+    equals c, and the power constraint α+β <= 1 holds."""
+    chan = ChannelConfig(n_workers=N, p_dbm=35.0, seed=seed).realize()
+    np.testing.assert_allclose(chan.signal_scale, chan.c, rtol=1e-9)
+    assert np.all(chan.alpha + chan.beta <= 1.0 + 1e-9)
+    assert np.all(chan.alpha >= 0) and np.all(chan.beta >= 0)
+    assert chan.c == pytest.approx(
+        math.sqrt((chan.h ** 2 * chan.P).min() * 1.0), rel=0.06)
+
+
+@settings(max_examples=20, deadline=None)
+@given(target=st.floats(0.05, 5.0), N=st.integers(3, 30))
+def test_property_calibration_roundtrip(target, N):
+    chan = _chan(N=N, seed=9)
+    sig = privacy.sigma_for_epsilon(target, 0.02, 1.0, chan, 1e-5)
+    if sig == 0.0:  # channel noise alone suffices
+        got = privacy.epsilon_dwfl(0.02, 1.0, chan.with_sigma(1e-12), 1e-5).max()
+        assert got <= target * (1 + 1e-6)
+    else:
+        got = privacy.epsilon_dwfl(0.02, 1.0, chan.with_sigma(sig), 1e-5).max()
+        assert got == pytest.approx(target, rel=1e-5)

@@ -1,0 +1,38 @@
+"""Coherence-time sweep (beyond-paper, repro.net): how fast fading hurts.
+
+Sweeps the fading block length (rounds per channel realization) on the
+iot_dense scenario at a fixed per-round ε target. Short coherence means the
+alignment constant c is re-derived from a fresh worst-case draw every few
+rounds — the σ calibration chases it, and convergence degrades toward the
+fast-fading limit; long coherence recovers the paper's static behaviour
+(static_paper is the coherence → ∞ anchor, run as the last row).
+
+``derived`` column = final eval accuracy; a second set of rows reports the
+worst-case composed ε over the realized trajectory (×1000, as the derived
+value is printed with 4 decimals).
+"""
+from benchmarks.common import row, run_dynamic_protocol, run_protocol
+
+N = 8
+EPS = 1.0
+COHERENCES = [1, 5, 20, 100]
+
+
+def main(steps: int = 250):
+    rows = []
+    for coh in COHERENCES:
+        res = run_dynamic_protocol("iot_dense", n_workers=N, epsilon=EPS,
+                                   coherence_rounds=coh, steps=steps,
+                                   p_dbm=70.0)
+        rows.append(row(f"net/coherence_{coh}", res))
+        rows.append(row(f"net/coherence_{coh}_eps_composed",
+                        {**res, "eps_k": res["epsilon_composed"] / 1000.0},
+                        "eps_k"))
+    static = run_protocol("dwfl", n_workers=N, epsilon=EPS, steps=steps,
+                          p_dbm=70.0)
+    rows.append(row("net/coherence_inf_static", static))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

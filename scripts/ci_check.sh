@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# CI gate: the tier-1 test command (ROADMAP.md) plus a bounded repro.net
+# dynamic-scenario smoke run (~2 minutes on one CPU core).
+#
+#   ./scripts/ci_check.sh            # full tier-1 + smoke
+#   ./scripts/ci_check.sh --smoke    # smoke only (fast sanity)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+if [[ "${1:-}" != "--smoke" ]]; then
+    echo "== tier-1: pytest =="
+    python -m pytest -x -q
+fi
+
+echo "== repro.net smoke: dynamic scenario, 40 rounds =="
+python -m repro.launch.train \
+    --arch dwfl-paper --steps 40 --workers 8 \
+    --channel-model dynamic --scenario iot_dense --coherence-rounds 10 \
+    --eval-every 20
+
+echo "== repro.net smoke: zero-retrace kernel bench =="
+python - <<'EOF'
+from benchmarks.kernel_bench import _bench_net_retrace
+row = _bench_net_retrace()
+print(row)
+name, us, traces = row.split(",")
+assert float(traces) == 1.0, f"dynamic exchange retraced: {traces}"
+EOF
+
+echo "ci_check: OK"

@@ -86,6 +86,17 @@ class ChannelState:
     def n_workers(self) -> int:
         return self.cfg.n_workers
 
+    # duck-typed noise-std surface shared with repro.net.state.
+    # TracedChannelState — the dwfl exchange kernels are written against
+    # these and accept either the static or the traced form.
+    @property
+    def dp_sigma(self) -> float:
+        return self.cfg.sigma
+
+    @property
+    def awgn_sigma(self) -> float:
+        return self.cfg.sigma_m
+
     @property
     def signal_scale(self) -> np.ndarray:
         """|h_k| sqrt(α_k P_k) — equals c for every worker after alignment."""

@@ -42,13 +42,16 @@ def _leaf_keys(key, tree):
     return jax.tree_util.tree_unflatten(treedef, list(keys))
 
 
-def dp_noise(key, X: Tree, chan: ChannelState) -> Tree:
+def dp_noise(key, X: Tree, chan) -> Tree:
     """n_k = |h_k| sqrt(β_k P_k) * 𝒢_k,  𝒢_k ~ N(0, σ²) i.i.d per entry.
 
     X leaves are worker-stacked [W, ...]; the per-worker amplitude
-    broadcasts along the leading axis.
+    broadcasts along the leading axis. ``chan`` may be the static
+    ChannelState (amplitudes are compile-time constants) or a traced
+    net.TracedChannelState (amplitudes are runtime arrays).
     """
-    scale = jnp.asarray(chan.noise_scale * chan.cfg.sigma, jnp.float32)
+    scale = (jnp.asarray(chan.noise_scale, jnp.float32)
+             * jnp.asarray(chan.dp_sigma, jnp.float32))
 
     def one(k, x):
         amp = scale.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
@@ -70,11 +73,15 @@ def channel_noise(key, X: Tree, sigma_m: float) -> Tree:
 
 
 def exchange_dwfl(X: Tree, noise_n: Tree, noise_m: Tree,
-                  chan: ChannelState, eta: float) -> Tree:
+                  chan, eta: float) -> Tree:
     """One DWFL parameter exchange (Alg. 1 lines 6-9), Eqt. (5)-(7).
 
     v_i = c Σ_{k≠i} x_k + Σ_{k≠i} n_k + m_i
     x_i ← x_i + (η/c) ( v_i/(N-1) − c x_i − n_i )
+
+    ``chan``: static ChannelState (c is a compile-time constant) or traced
+    net.TracedChannelState (c is a runtime scalar — one compiled step
+    serves every realization).
     """
     N = chan.n_workers
     c = chan.c
@@ -104,11 +111,12 @@ def exchange_orthogonal(X: Tree, key, chan: ChannelState, eta: float) -> Tree:
     """
     N = chan.n_workers
     k_n, k_m = jax.random.split(key)
-    # sender-side effective noise after gain inversion
+    # sender-side effective noise after gain inversion (static channel only:
+    # the host-side float math below bakes these in at trace time)
     inv_gain = jnp.asarray(
-        np.sqrt(chan.beta / np.maximum(chan.alpha, 1e-9)) * chan.cfg.sigma, jnp.float32)
+        np.sqrt(chan.beta / np.maximum(chan.alpha, 1e-9)) * chan.dp_sigma, jnp.float32)
     # per-link AWGN std after inversion, averaged over N-1 links
-    link_std = chan.cfg.sigma_m / (chan.h * np.sqrt(chan.alpha * chan.P))
+    link_std = chan.awgn_sigma / (chan.h * np.sqrt(chan.alpha * chan.P))
     mean_m_std = float(np.sqrt(np.mean(link_std ** 2) / (N - 1)))
 
     def one(kk, x):
@@ -135,7 +143,7 @@ def exchange_centralized(X: Tree, noise_n: Tree, key, chan: ChannelState) -> Tre
         xf = x.astype(jnp.float32)
         v = c * jnp.sum(xf, axis=0, keepdims=True) + jnp.sum(
             n.astype(jnp.float32), axis=0, keepdims=True)
-        m = chan.cfg.sigma_m * jax.random.normal(kk, v.shape, jnp.float32)
+        m = chan.awgn_sigma * jax.random.normal(kk, v.shape, jnp.float32)
         avg = (v + m) / (c * N)
         return jnp.broadcast_to(avg, x.shape).astype(x.dtype)
 
@@ -165,6 +173,42 @@ def exchange_dwfl_topology(X: Tree, noise_n: Tree, noise_m: Tree,
         m_scaled = (m.astype(jnp.float32) / chan.c
                     / deg.reshape((x.shape[0],) + (1,) * (x.ndim - 1)))
         x_new = xf + eta * (mixed + m_scaled - xf - nf)
+        return x_new.astype(x.dtype)
+
+    return jax.tree_util.tree_map(one, X, noise_n, noise_m)
+
+
+def exchange_dwfl_dynamic(X: Tree, noise_n: Tree, noise_m: Tree,
+                          chan, eta: float, W) -> Tree:
+    """DWFL exchange over a TRACED doubly-stochastic mixing matrix W and a
+    traced channel (repro.net): geometry/churn fold into W per round
+    (net.geometry.metropolis_weights of the masked interference graph), the
+    alignment constant c is a runtime scalar — one compiled step serves any
+    (W, chan) realization.
+
+        x_i ← x_i + η [ Σ_k W_ik (x_k + n_k/c) + m̃_i − x_i − n_i/c ]
+
+    Workers with no active neighbors (churned out, or isolated by the
+    interference graph: W row = e_i) take NO update this round — they
+    neither hear the superposition nor its AWGN. The DP noises stay
+    zero-sum across receivers for any doubly-stochastic W (column sums 1 ⇒
+    Σ_i [W n/c]_i = Σ_i n_i/c, so the mean evolves per Eqt. (9) exactly
+    when σ_m = 0 — test_net.py::test_mean_descent_under_block_fading).
+    """
+    c = chan.c
+    Wj = jnp.asarray(W, jnp.float32)
+    off_deg = jnp.sum((Wj > 0) & ~jnp.eye(Wj.shape[0], dtype=bool), axis=1)
+    listening = (off_deg > 0).astype(jnp.float32)            # [N]
+    deg = jnp.maximum(off_deg.astype(jnp.float32), 1.0)
+
+    def one(x, n, m):
+        xf = x.astype(jnp.float32)
+        nf = n.astype(jnp.float32) / c
+        mixed = jnp.einsum("ij,j...->i...", Wj, xf + nf)
+        bshape = (x.shape[0],) + (1,) * (x.ndim - 1)
+        m_scaled = m.astype(jnp.float32) / c / deg.reshape(bshape)
+        upd = mixed + m_scaled - xf - nf
+        x_new = xf + eta * listening.reshape(bshape) * upd
         return x_new.astype(x.dtype)
 
     return jax.tree_util.tree_map(one, X, noise_n, noise_m)
@@ -278,7 +322,7 @@ def exchange_orthogonal_ring(x_local: Tree, chan: ChannelState, eta: float,
             recv = cur
             if kk is not None:
                 k_step = jax.random.fold_in(kk, step)
-                recv = recv + chan.cfg.sigma_m * jax.random.normal(
+                recv = recv + chan.awgn_sigma * jax.random.normal(
                     k_step, recv.shape, jnp.float32)
             acc = acc + recv
         neigh_mean = acc / (N - 1)

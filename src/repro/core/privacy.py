@@ -83,6 +83,50 @@ def sigma_for_epsilon(epsilon: float, gamma: float, g_max: float,
     return math.sqrt(need / min_sum)
 
 
+def sigma_for_epsilon_orthogonal(epsilon: float, gamma: float, g_max: float,
+                                 chan: ChannelState, delta: float) -> float:
+    """Calibrate σ so the WORST per-link budget of the ORTHOGONAL scheme
+    (Remark 4.1) equals ε.
+
+    This is the missing half of the Fig. 5 "same ε" axis: each orthogonal
+    link is masked by ONE sender's noise only, so hitting the same ε needs
+    far more noise than the DWFL calibration (whose aggregate is masked by
+    N−1 workers' noises). Calibrating the orthogonal run with the DWFL
+    formula (the old behaviour) silently granted it a much weaker privacy
+    level — and an unfair accuracy advantage."""
+    K2 = 2.0 * math.log(1.25 / delta)
+    num2 = (2.0 * gamma * g_max) ** 2 * (chan.h ** 2 * chan.P) * K2   # [N]
+    s2 = chan.noise_scale ** 2                                        # [N]
+    need = (num2 / epsilon ** 2 - chan.cfg.sigma_m ** 2) / s2
+    worst = float(np.max(need))
+    if worst <= 0:
+        return 0.0  # per-link AWGN alone already provides ε
+    return math.sqrt(worst)
+
+
+def sigma_for_epsilon_topology(epsilon: float, gamma: float, g_max: float,
+                               chan: ChannelState, delta: float, W) -> float:
+    """Calibrate σ so the worst RECEIVER budget under gossip topology W
+    (epsilon_dwfl_topology) equals ε: each receiver is masked only by its
+    deg(i) neighbors' noises, so hitting the same ε on a ring/torus needs
+    more noise than the complete-graph calibration — same bug class as the
+    orthogonal scheme (a limited-degree run calibrated with the
+    complete-graph formula silently exceeds its promised budget)."""
+    adj = (np.asarray(W) > 0).astype(float)
+    np.fill_diagonal(adj, 0.0)
+    s2 = chan.noise_scale ** 2
+    mask_sum = adj @ s2                       # per-receiver masking power
+    listening = adj.sum(1) > 0
+    if not listening.any():
+        return 0.0                            # nobody receives anything
+    num = (2.0 * gamma * g_max * chan.c
+           * math.sqrt(2.0 * math.log(1.25 / delta)))
+    need = (num / epsilon) ** 2 - chan.cfg.sigma_m ** 2
+    if need <= 0:
+        return 0.0
+    return math.sqrt(need / float(mask_sum[listening].min()))
+
+
 def epsilon_dwfl_topology(gamma: float, g_max: float, chan: ChannelState,
                           delta: float, W) -> np.ndarray:
     """Thm 4.1 generalized to a gossip topology W: receiver i's aggregate is
@@ -95,6 +139,105 @@ def epsilon_dwfl_topology(gamma: float, g_max: float, chan: ChannelState,
     agg = _np.sqrt(adj @ s2 + chan.cfg.sigma_m ** 2)
     num = 2.0 * gamma * g_max * chan.c
     return num / agg * math.sqrt(2.0 * math.log(1.25 / delta))
+
+
+# ---------------------------------------------------------------------------
+# traced accounting (repro.net: per-round ε under a time-varying channel)
+# ---------------------------------------------------------------------------
+
+
+def _masking_sums(chan, W):
+    """Per-receiver DP-noise masking power Σ_{k∈N(i)\\{i}} s_k² (WITHOUT σ²)
+    and the listening mask. W=None means the paper's complete graph (every
+    other worker masks every receiver). With a round's mixing matrix W, a
+    receiver is masked only by its ACTIVE off-diagonal neighbors — churned-
+    out workers have zero rows/columns and contribute nothing; a worker
+    with no neighbors hears nothing at all (listening=False)."""
+    import jax.numpy as jnp
+    s2 = chan.noise_scale ** 2
+    if W is None:
+        return jnp.sum(s2) - s2, jnp.ones(s2.shape, bool)
+    adj = ((jnp.asarray(W) > 0)
+           & ~jnp.eye(s2.shape[0], dtype=bool)).astype(s2.dtype)
+    return adj @ s2, jnp.sum(adj, axis=1) > 0
+
+
+def epsilon_dwfl_traced(gamma: float, g_max: float, chan, delta: float,
+                        W=None):
+    """Theorem 4.1 / Eqt. (11) on a net.TracedChannelState: jnp arrays in,
+    jnp [N] out — usable inside jit, and vmappable over a stacked
+    trajectory (see epsilon_trajectory). Under block fading the alignment
+    constant c, every β_k and hence every budget are per-block values.
+
+    ``W`` (optional, [N, N]): the round's mixing matrix. The aggregate a
+    receiver observes is masked only by the workers it actually HEARS —
+    its active interference-graph neighbors (the traced generalization of
+    epsilon_dwfl_topology; under churn/limited range this is strictly
+    fewer than N−1 workers, so budgets are LARGER than the complete-graph
+    formula). A receiver with no neighbors observes nothing: ε = 0."""
+    import jax.numpy as jnp
+    num = 2.0 * gamma * g_max * chan.c
+    mask_sum, listening = _masking_sums(chan, W)
+    agg = jnp.sqrt(mask_sum * chan.sigma ** 2 + chan.sigma_m ** 2)
+    eps = num / agg * jnp.sqrt(2.0 * jnp.log(1.25 / delta))
+    return jnp.where(listening, eps, 0.0)
+
+
+def sigma_for_epsilon_traced(epsilon: float, gamma: float, g_max: float,
+                             chan, delta: float, W=None):
+    """Traced mirror of sigma_for_epsilon: solve the worst-receiver Eqt.
+    (11) for σ on-device. Under a dynamic channel this re-calibrates every
+    round — σ becomes the trajectory and ε stays pinned at the target
+    (with fixed σ it is the other way round). With ``W`` the worst
+    receiver is taken over LISTENING receivers and their actual masking
+    neighborhoods (fewer maskers ⇒ more σ than the complete-graph
+    calibration)."""
+    import jax.numpy as jnp
+    num = (2.0 * gamma * g_max * chan.c
+           * jnp.sqrt(2.0 * jnp.log(1.25 / delta)))
+    mask_sum, listening = _masking_sums(chan, W)
+    # worst listening receiver = smallest masking power among listeners
+    min_sum = jnp.min(jnp.where(listening, mask_sum, jnp.inf))
+    min_sum = jnp.where(jnp.isfinite(min_sum), min_sum, 1.0)  # nobody listens
+    need = (num / epsilon) ** 2 - chan.sigma_m ** 2
+    return jnp.sqrt(jnp.maximum(need, 0.0) / jnp.maximum(min_sum, 1e-30))
+
+
+def epsilon_trajectory(gamma: float, g_max: float, chans, delta: float,
+                       Ws=None):
+    """Per-round, per-receiver budgets over a fading trajectory.
+
+    ``chans``: a stacked TracedChannelState (leaves [T, ...], e.g. from
+    NetworkSimulator.trajectory or net.state.stack_states); ``Ws``
+    (optional [T, N, N]): the matching per-round mixing matrices — pass
+    them whenever the scenario has limited range or churn, otherwise the
+    complete-graph formula over-counts the masking noise and UNDER-states
+    ε. Returns a [T, N] jnp array: row t is Theorem 4.1 evaluated on round
+    t's realized channel (ε = 0 for receivers that heard nothing)."""
+    import jax
+    if Ws is None:
+        return jax.vmap(
+            lambda ch: epsilon_dwfl_traced(gamma, g_max, ch, delta))(chans)
+    return jax.vmap(
+        lambda ch, w: epsilon_dwfl_traced(gamma, g_max, ch, delta, w)
+    )(chans, Ws)
+
+
+def compose_heterogeneous(eps_rounds, delta_round: float,
+                          delta_prime: float = 1e-6):
+    """Advanced composition for PER-ROUND-VARYING budgets (the fading
+    trajectory): the heterogeneous form of Dwork-Roth Thm 3.20,
+
+        ε_total = sqrt(2 ln(1/δ') Σ_t ε_t²) + Σ_t ε_t (e^{ε_t} − 1),
+        δ_total = Σ_t δ + δ'.
+
+    Reduces to compose_advanced when all ε_t are equal. This is the
+    worst-case guarantee over the realized trajectory — the number the
+    dynamic epsilon_report quotes."""
+    e = np.asarray(eps_rounds, np.float64).reshape(-1)
+    eps = (math.sqrt(2.0 * math.log(1.0 / delta_prime) * float(np.sum(e ** 2)))
+           + float(np.sum(e * (np.expm1(e)))))
+    return eps, len(e) * delta_round + delta_prime
 
 
 def epsilon_sampled(eps_round: float, delta_round: float, q: float):

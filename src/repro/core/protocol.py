@@ -56,6 +56,13 @@ class ProtocolConfig:
                                  # ring | torus — limited wireless
                                  # interference ranges (repro.core.topology)
     topology_k: int = 1          # ring: neighbors per side
+    channel_model: str = "static"  # static (paper: one-shot realization baked
+                                   # into the compiled step) | dynamic
+                                   # (repro.net: per-round traced channel —
+                                   # block fading, geometry, mobility, churn)
+    scenario: str = "static_paper"  # net.scenarios preset (dynamic only)
+    coherence_rounds: int = 0    # >0: override the scenario's fading block
+                                 # length (benchmarks sweep this)
 
     def mixing_matrix(self):
         from repro.core import topology as topo
@@ -68,10 +75,41 @@ class ProtocolConfig:
             noise_policy=self.noise_policy,
         ).realize()
         if self.target_epsilon > 0:
-            sig = privacy.sigma_for_epsilon(
-                self.target_epsilon, self.gamma, self.clip, chan, self.delta)
+            # scheme-aware calibration: "same ε" must mean the scheme's OWN
+            # worst budget. The orthogonal per-link ε and the limited-degree
+            # topology ε are both much larger than the complete-graph DWFL
+            # aggregate ε at equal σ (Remark 4.1 / Thm 4.1 generalized) —
+            # calibrating them with the complete-graph formula would
+            # silently exceed the promised budget.
+            if self.scheme == "orthogonal":
+                sig = privacy.sigma_for_epsilon_orthogonal(
+                    self.target_epsilon, self.gamma, self.clip, chan,
+                    self.delta)
+            elif self.scheme == "dwfl" and self.topology != "complete":
+                sig = privacy.sigma_for_epsilon_topology(
+                    self.target_epsilon, self.gamma, self.clip, chan,
+                    self.delta, self.mixing_matrix())
+            else:
+                sig = privacy.sigma_for_epsilon(
+                    self.target_epsilon, self.gamma, self.clip, chan,
+                    self.delta)
             chan = chan.with_sigma(max(sig, 1e-12))
         return chan
+
+    def simulator(self):
+        """Build the repro.net NetworkSimulator for channel_model="dynamic"
+        (carries this protocol's power/noise/calibration knobs; the
+        scenario contributes the radio environment)."""
+        from repro.net import NetworkSimulator, get_scenario
+        if self.channel_model != "dynamic":
+            raise ValueError("simulator() requires channel_model='dynamic'")
+        return NetworkSimulator(
+            get_scenario(self.scenario), self.n_workers,
+            p_dbm=self.p_dbm, sigma=self.sigma, sigma_m=self.sigma_m,
+            noise_policy=self.noise_policy,
+            coherence_rounds=self.coherence_rounds,
+            target_epsilon=self.target_epsilon, gamma=self.gamma,
+            clip=self.clip, delta=self.delta)
 
 
 def init_worker_params(key, cfg: ModelConfig, n_workers: int):
@@ -83,13 +121,47 @@ def init_worker_params(key, cfg: ModelConfig, n_workers: int):
         lambda x: jnp.broadcast_to(x[None], (n_workers,) + x.shape), params)
 
 
-def epsilon_report(proto: ProtocolConfig, chan: ChannelState,
-                   T: Optional[int] = None) -> dict:
+def epsilon_report(proto: ProtocolConfig, chan,
+                   T: Optional[int] = None, Ws=None) -> dict:
+    """Privacy report. Static channel: scalar per-round budgets (the
+    paper's headline numbers). Dynamic channel (channel_model="dynamic"):
+    ``chan`` is a STACKED TracedChannelState trajectory (leaves [T, ...],
+    from NetworkSimulator.trajectory) and the report carries the per-round
+    ε TRAJECTORY plus its worst-case heterogeneous composition. Pass the
+    matching per-round mixing matrices ``Ws`` ([T, N, N]) whenever the
+    scenario has limited range or churn — each receiver is then credited
+    only with the masking noise of workers it actually heard."""
+    if proto.channel_model == "dynamic":
+        eps_tn = np.asarray(privacy.epsilon_trajectory(
+            proto.gamma, proto.clip, chan, proto.delta, Ws))  # [T, N]
+        per_round = eps_tn.max(axis=1)                        # worst receiver
+        ea, da = privacy.compose_heterogeneous(per_round, proto.delta)
+        return {
+            "epsilon_per_round": per_round,
+            "epsilon_worst": float(per_round.max()),
+            "epsilon_mean": float(per_round.mean()),
+            "epsilon_trajectory_composed": ea,
+            "delta_trajectory_composed": da,
+            "sigma": np.asarray(chan.sigma),
+            "rounds": int(per_round.shape[0]),
+        }
     eps = privacy.epsilon_dwfl(proto.gamma, proto.clip, chan, proto.delta)
     eps_orth = privacy.epsilon_orthogonal(proto.gamma, proto.clip, chan, proto.delta)
+    # the headline budget is the budget of the scheme actually RUN —
+    # matching the scheme-aware calibration above (an orthogonal run's
+    # per-link ε, a ring/torus run's per-receiver ε), not the complete-
+    # graph DWFL formula.
+    if proto.scheme == "orthogonal":
+        eps_scheme = eps_orth
+    elif proto.scheme == "dwfl" and proto.topology != "complete":
+        eps_scheme = privacy.epsilon_dwfl_topology(
+            proto.gamma, proto.clip, chan, proto.delta, proto.mixing_matrix())
+    else:
+        eps_scheme = eps
     rep = {
-        "epsilon_per_worker": eps,
-        "epsilon_worst": float(eps.max()),
+        "epsilon_per_worker": eps_scheme,
+        "epsilon_worst": float(eps_scheme.max()),
+        "epsilon_complete_graph_worst": float(eps.max()),
         "epsilon_orthogonal_worst": float(eps_orth.max()),
         "sigma": chan.cfg.sigma,
     }
@@ -104,16 +176,10 @@ def epsilon_report(proto: ProtocolConfig, chan: ChannelState,
     return rep
 
 
-def make_train_step(cfg: ModelConfig, proto: ProtocolConfig,
-                    axis: Optional[str] = None) -> Callable:
-    """Build the jittable DWFL round.
-
-    Vectorized path (axis=None): worker_params leaves are [W, ...] and the
-    exchange sums over axis 0 (XLA → all-reduce when sharded over ``data``).
-    Collective path (axis="data"): call under shard_map; leaves are local.
-    """
-    chan = proto.channel()
-    gamma, eta = proto.gamma, proto.eta
+def _make_local_pass(cfg: ModelConfig, proto: ProtocolConfig):
+    """Shared per-worker pass: vmapped clipped gradients + local SGD step
+    (Alg. 1 lines 4-5) — identical between the static and dynamic rounds."""
+    gamma = proto.gamma
 
     def local_grads(worker_params, batch):
         def one(p, b):
@@ -131,22 +197,50 @@ def make_train_step(cfg: ModelConfig, proto: ProtocolConfig,
             lambda p, g: (p.astype(jnp.float32) - gamma * g.astype(jnp.float32)
                           ).astype(p.dtype), worker_params, grads)
 
-    def _bucket(X):
-        """Worker-stacked pytree -> single [W, total] f32 leaf + unravel."""
-        leaves, treedef = jax.tree_util.tree_flatten(X)
-        shapes = [l.shape for l in leaves]
-        dtypes = [l.dtype for l in leaves]
-        flat = jnp.concatenate(
-            [l.reshape(l.shape[0], -1).astype(jnp.float32) for l in leaves], axis=1)
+    return local_grads, local_step
 
-        def unravel(f):
-            out, off = [], 0
-            for s, dt in zip(shapes, dtypes):
-                n = int(np.prod(s[1:]))
-                out.append(f[:, off:off + n].reshape(s).astype(dt))
-                off += n
-            return jax.tree_util.tree_unflatten(treedef, out)
-        return {"flat": flat}, unravel
+
+def _bucket(X):
+    """Worker-stacked pytree -> single [W, total] f32 leaf + unravel."""
+    leaves, treedef = jax.tree_util.tree_flatten(X)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    flat = jnp.concatenate(
+        [l.reshape(l.shape[0], -1).astype(jnp.float32) for l in leaves], axis=1)
+
+    def unravel(f):
+        out, off = [], 0
+        for s, dt in zip(shapes, dtypes):
+            n = int(np.prod(s[1:]))
+            out.append(f[:, off:off + n].reshape(s).astype(dt))
+            off += n
+        return jax.tree_util.tree_unflatten(treedef, out)
+    return {"flat": flat}, unravel
+
+
+def _metrics(losses, gnorms, X):
+    return {
+        "loss": jnp.mean(losses),
+        "grad_norm": jnp.mean(gnorms),
+        "param_norm": jnp.sqrt(sum(
+            jnp.sum(x.astype(jnp.float32) ** 2)
+            for x in jax.tree_util.tree_leaves(X))),
+    }
+
+
+def make_train_step(cfg: ModelConfig, proto: ProtocolConfig,
+                    axis: Optional[str] = None) -> Callable:
+    """Build the jittable DWFL round (STATIC channel: the one-shot
+    realization is closed over as compile-time constants — the paper's
+    setup; for the per-round traced channel see make_dynamic_train_step).
+
+    Vectorized path (axis=None): worker_params leaves are [W, ...] and the
+    exchange sums over axis 0 (XLA → all-reduce when sharded over ``data``).
+    Collective path (axis="data"): call under shard_map; leaves are local.
+    """
+    chan = proto.channel()
+    eta = proto.eta
+    local_grads, local_step = _make_local_pass(cfg, proto)
 
     def step(worker_params, batch, key):
         """batch leaves: [W, per_worker_batch, ...]."""
@@ -157,14 +251,7 @@ def make_train_step(cfg: ModelConfig, proto: ProtocolConfig,
         if proto.n_workers < 2:
             # degenerate federation (single worker / single-device test
             # mesh): no peers to exchange with — plain local SGD round.
-            metrics = {
-                "loss": jnp.mean(losses),
-                "grad_norm": jnp.mean(gnorms),
-                "param_norm": jnp.sqrt(sum(
-                    jnp.sum(x.astype(jnp.float32) ** 2)
-                    for x in jax.tree_util.tree_leaves(X))),
-            }
-            return X, metrics
+            return X, _metrics(losses, gnorms, X)
 
         unravel = None
         if proto.fuse_exchange and proto.scheme in ("dwfl", "gossip"):
@@ -203,14 +290,49 @@ def make_train_step(cfg: ModelConfig, proto: ProtocolConfig,
         if unravel is not None:
             X = unravel(X["flat"])
 
-        metrics = {
-            "loss": jnp.mean(losses),
-            "grad_norm": jnp.mean(gnorms),
-            "param_norm": jnp.sqrt(sum(
-                jnp.sum(x.astype(jnp.float32) ** 2)
-                for x in jax.tree_util.tree_leaves(X))),
-        }
-        return X, metrics
+        return X, _metrics(losses, gnorms, X)
+
+    return step
+
+
+def make_dynamic_train_step(cfg: ModelConfig, proto: ProtocolConfig) -> Callable:
+    """Build the DWFL round for channel_model="dynamic" (repro.net).
+
+    Unlike make_train_step, the channel and mixing matrix are traced
+    ARGUMENTS, not closed-over constants::
+
+        step(worker_params, batch, key, chan, W) -> (worker_params', metrics)
+
+    ``chan`` is a net.TracedChannelState and ``W`` the round's [N, N]
+    doubly-stochastic mixing matrix (both from NetworkSimulator.round), so
+    ONE compiled step serves every fading block, geometry, and churn
+    realization — zero retraces across draws (asserted by
+    tests/test_net.py and benchmarks/kernel_bench.py ``net/retrace``).
+    Only scheme="dwfl" has dynamic semantics (the baselines are static-
+    channel comparisons).
+    """
+    if proto.scheme != "dwfl":
+        raise ValueError(f"dynamic channel model requires scheme='dwfl', "
+                         f"got {proto.scheme!r}")
+    eta = proto.eta
+    local_grads, local_step = _make_local_pass(cfg, proto)
+
+    def step(worker_params, batch, key, chan, W):
+        k_n, k_m = jax.random.split(key)
+        losses, grads, gnorms = local_grads(worker_params, batch)
+        X = local_step(worker_params, grads)
+        if proto.n_workers < 2:
+            return X, _metrics(losses, gnorms, X)
+
+        unravel = None
+        if proto.fuse_exchange:
+            X, unravel = _bucket(X)
+        n = dwfl.dp_noise(k_n, X, chan)
+        m = dwfl.channel_noise(k_m, X, chan.awgn_sigma)
+        X = dwfl.exchange_dwfl_dynamic(X, n, m, chan, eta, W)
+        if unravel is not None:
+            X = unravel(X["flat"])
+        return X, _metrics(losses, gnorms, X)
 
     return step
 

@@ -14,11 +14,22 @@ from typing import Tuple
 import jax
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: the ``axis_types`` kwarg (and
+    jax.sharding.AxisType) only exist on newer jax; plain Auto axes are the
+    default there, so the two-argument call is equivalent everywhere."""
+    try:
+        return jax.make_mesh(shape, axes)
+    except (TypeError, AttributeError):  # very old jax: no jax.make_mesh
+        from jax.sharding import Mesh
+        from jax.experimental import mesh_utils
+        return Mesh(mesh_utils.create_device_mesh(shape), axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def worker_axes(multi_pod: bool = False) -> Tuple[str, ...]:
@@ -37,5 +48,4 @@ def model_size(mesh) -> int:
 
 def make_host_mesh(n_data: int = 1, n_model: int = 1):
     """Tiny mesh over however many (CPU) devices exist — for tests."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((n_data, n_model), ("data", "model"))

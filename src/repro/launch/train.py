@@ -51,6 +51,15 @@ def main(argv=None):
     ap.add_argument("--sigma-m", type=float, default=1.0)
     ap.add_argument("--p-dbm", type=float, default=60.0)
     ap.add_argument("--dirichlet-alpha", type=float, default=0.5)
+    ap.add_argument("--channel-model", default="static",
+                    choices=["static", "dynamic"],
+                    help="static: paper's one-shot channel; dynamic: "
+                         "repro.net per-round traced channel")
+    ap.add_argument("--scenario", default="static_paper",
+                    help="repro.net scenario (dynamic only): static_paper, "
+                         "iot_dense, vehicular, drone_sparse")
+    ap.add_argument("--coherence-rounds", type=int, default=0,
+                    help="override the scenario's fading block length")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--checkpoint", default=None)
@@ -65,12 +74,21 @@ def main(argv=None):
     proto = P.ProtocolConfig(
         scheme=args.scheme, n_workers=W, gamma=args.gamma, eta=args.eta,
         clip=args.clip, sigma=args.sigma, sigma_m=args.sigma_m,
-        p_dbm=args.p_dbm, seed=args.seed, target_epsilon=args.epsilon)
-    chan = proto.channel()
-    rep = P.epsilon_report(proto, chan)
-    print(f"[train] {args.arch} scheme={args.scheme} N={W} "
-          f"eps={rep['epsilon_worst']:.3g}/round sigma={rep['sigma']:.3g} "
-          f"(orthogonal would be eps={rep['epsilon_orthogonal_worst']:.3g})")
+        p_dbm=args.p_dbm, seed=args.seed, target_epsilon=args.epsilon,
+        channel_model=args.channel_model, scenario=args.scenario,
+        coherence_rounds=args.coherence_rounds)
+    sim = None
+    if args.channel_model == "dynamic":
+        sim = proto.simulator()
+        print(f"[train] {args.arch} scheme={args.scheme} N={W} "
+              f"dynamic scenario={args.scenario} "
+              f"coherence={sim.scenario.fading.coherence_rounds} rounds")
+    else:
+        chan = proto.channel()
+        rep = P.epsilon_report(proto, chan)
+        print(f"[train] {args.arch} scheme={args.scheme} N={W} "
+              f"eps={rep['epsilon_worst']:.3g}/round sigma={rep['sigma']:.3g} "
+              f"(orthogonal would be eps={rep['epsilon_orthogonal_worst']:.3g})")
 
     key = jax.random.PRNGKey(args.seed)
     if cfg.family == "mlp":
@@ -87,14 +105,28 @@ def main(argv=None):
     n_params = sum(int(x.size) for x in jax.tree_util.tree_leaves(wp)) // W
     print(f"[train] params/worker: {n_params/1e6:.2f}M")
 
-    step = jax.jit(P.make_train_step(cfg, proto), donate_argnums=0)
+    if sim is not None:
+        step = jax.jit(P.make_dynamic_train_step(cfg, proto), donate_argnums=0)
+        net_round = jax.jit(sim.round)
+        key, nk = jax.random.split(key)
+        net_state = sim.init(nk)
+        chan_log, w_log = [], []
+    else:
+        step = jax.jit(P.make_train_step(cfg, proto), donate_argnums=0)
     evaluate = jax.jit(P.make_eval_fn(cfg))
 
     logf = open(args.log, "w") if args.log else None
     t0 = time.time()
     for t in range(args.steps + 1):
         key, sk = jax.random.split(key)
-        wp, metrics = step(wp, batcher.next(), sk)
+        if sim is not None:
+            sk, ck = jax.random.split(sk)
+            net_state, chan_t, mask_t, W_t = net_round(ck, net_state)
+            chan_log.append(chan_t)
+            w_log.append(W_t)
+            wp, metrics = step(wp, batcher.next(), sk, chan_t, W_t)
+        else:
+            wp, metrics = step(wp, batcher.next(), sk)
         if t % args.eval_every == 0:
             if cfg.family == "mlp":
                 ev_loss, ev_acc = evaluate(wp, batcher.full(256))
@@ -111,6 +143,19 @@ def main(argv=None):
                 logf.write(json.dumps(rec) + "\n")
                 logf.flush()
 
+    if sim is not None:
+        # per-round privacy over the REALIZED fading trajectory (not a
+        # scalar): Thm 4.1 on each round's channel + worst-case
+        # heterogeneous composition (DESIGN.md §repro.net).
+        from repro.net.state import stack_states
+        rep = P.epsilon_report(proto, stack_states(chan_log),
+                               Ws=jnp.stack(w_log))
+        traj = rep["epsilon_per_round"]
+        print(f"[train] per-round eps over {rep['rounds']} rounds: "
+              f"min={traj.min():.3g} mean={rep['epsilon_mean']:.3g} "
+              f"max={rep['epsilon_worst']:.3g}  "
+              f"composed(eps,delta)=({rep['epsilon_trajectory_composed']:.3g}, "
+              f"{rep['delta_trajectory_composed']:.2g})")
     if args.checkpoint:
         ckpt_save(args.checkpoint, wp, step=args.steps,
                   metadata={"arch": args.arch, "scheme": args.scheme,

@@ -1,0 +1,80 @@
+"""Worker churn and stragglers: a per-worker Gilbert-Elliott availability
+chain composed with the protocol's participation sampling.
+
+Each worker carries an up/down state evolving as a 2-state Markov chain
+(P(up→down) = ``p_drop``, P(down→up) = ``p_join``) — modeling devices
+leaving/rejoining the network (battery, duty cycling, handover). On top of
+that, an i.i.d. per-round straggler coin (rate ``straggler_rate``) removes
+otherwise-up workers for one round — modeling compute/deadline misses
+rather than radio loss.
+
+The resulting participation mask feeds the SAME machinery as the static
+``ProtocolConfig.participation`` sampling (exchange over transmitters only,
+privacy amplification by subsampling with the empirical rate q̄ — see
+privacy.epsilon_sampled); under the dynamic channel model the mask also
+zeroes rows/columns of the interference graph, so a churned-out worker
+neither transmits, mixes, nor contributes masking noise to anyone's privacy
+budget that round (DESIGN.md §repro.net).
+
+``min_active`` guards degenerate rounds: the first ``min_active`` workers
+are forced on, matching the static path's ``mask.at[:2].set(True)`` rule so
+every round has a well-defined exchange.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ChurnConfig:
+    p_drop: float = 0.0          # P(up → down) per round
+    p_join: float = 1.0          # P(down → up) per round
+    straggler_rate: float = 0.0  # i.i.d. per-round miss rate among up workers
+    min_active: int = 2
+
+    @property
+    def stationary_up(self) -> float:
+        """Long-run P(up) of the availability chain."""
+        denom = self.p_drop + self.p_join
+        return 1.0 if denom == 0 else self.p_join / denom
+
+
+@dataclass(frozen=True)
+class ChurnState:
+    up: jnp.ndarray   # [N] float32 in {0, 1}
+
+
+jax.tree_util.register_dataclass(ChurnState, data_fields=["up"],
+                                 meta_fields=[])
+
+
+def init_churn(cfg: ChurnConfig, key, n_workers: int) -> ChurnState:
+    """Start from the stationary distribution (a cold start where everyone
+    is up would bias short-horizon privacy trajectories optimistic)."""
+    up = (jax.random.uniform(key, (n_workers,)) < cfg.stationary_up)
+    return ChurnState(up=up.astype(jnp.float32))
+
+
+def advance(cfg: ChurnConfig, key, state: ChurnState) -> ChurnState:
+    if cfg.p_drop <= 0.0 and cfg.p_join >= 1.0:
+        return ChurnState(up=jnp.ones_like(state.up))
+    u = jax.random.uniform(key, state.up.shape)
+    stay_up = u >= cfg.p_drop      # applied where currently up
+    come_up = u < cfg.p_join       # applied where currently down
+    up = jnp.where(state.up > 0, stay_up, come_up)
+    return ChurnState(up=up.astype(jnp.float32))
+
+
+def participation_mask(cfg: ChurnConfig, key, state: ChurnState) -> jnp.ndarray:
+    """Bool [N]: up AND not straggling this round; first ``min_active``
+    workers forced on so the exchange stays well defined."""
+    mask = state.up > 0
+    if cfg.straggler_rate > 0.0:
+        mask = mask & (jax.random.uniform(key, mask.shape) >= cfg.straggler_rate)
+    if cfg.min_active > 0:
+        idx = jnp.arange(mask.shape[0])
+        mask = mask | (idx < cfg.min_active)
+    return mask

@@ -1,0 +1,177 @@
+"""Block-fading processes with on-device per-block power re-alignment.
+
+Small-scale fading is modeled as a complex channel gain g_k per worker
+(stored as a real [N, 2] array — the phase is pre-cancelled at the sender,
+Eqt. 2, so only |g_k| reaches the protocol):
+
+  * **Rayleigh**:  g ~ CN(0, 1)                      ⇒ |g| ~ Rayleigh(1/√2)
+  * **Rician(K)**: g = √(K/(K+1)) + √(1/(K+1))·CN(0,1)  (LOS on the real axis)
+  * **unit**:      |g| ≡ 1 (the AWGN-only ablation)
+
+Temporal correlation follows the standard AR(1) (Gauss-Markov) model of the
+diffuse component across coherence blocks,
+
+    d_{t+1} = ρ d_t + √(1−ρ²) w,   w ~ CN(0, 1),
+
+with ρ either given directly or derived from a Doppler frequency via
+Jakes' model, ρ = J₀(2π f_D τ_block) (``rho_from_doppler``). Block fading:
+the gain is re-realized only every ``coherence_rounds`` DWFL rounds and held
+constant inside a block (``advance`` is a traced no-op mid-block).
+
+Each time the channel changes, the paper's one-shot power alignment
+(Eqt. 3-4, with the same 5% noise-power floor as the static
+ChannelConfig.realize) is recomputed ON DEVICE (``align``): the constant c,
+every α_k/β_k, and hence every DP-noise amplitude are per-block runtime
+values — which is exactly why the privacy budget becomes a per-round
+trajectory (core.privacy.epsilon_trajectory, DESIGN.md §repro.net).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.net.state import TracedChannelState
+
+H_FLOOR = 0.05        # keep the worst SNR bounded away from 0 (as in channel.py)
+POWER_FLOOR = 0.05    # 5% power reserved for noise BEFORE aligning (Eqt. 3-4 derated)
+
+
+def bessel_j0(x: np.ndarray) -> np.ndarray:
+    """J₀ via the Abramowitz & Stegun 9.4.1/9.4.3 polynomial fits (|err| <
+    2e-8) — scipy is not a dependency and this runs host-side only."""
+    x = np.abs(np.asarray(x, np.float64))
+    small = x <= 3.0
+    t = (x / 3.0) ** 2
+    p_small = (1.0 - 2.2499997 * t + 1.2656208 * t ** 2 - 0.3163866 * t ** 3
+               + 0.0444479 * t ** 4 - 0.0039444 * t ** 5 + 0.0002100 * t ** 6)
+    xs = np.where(small, 3.0, x)  # avoid div-by-zero on the unused branch
+    u = 3.0 / xs
+    f0 = (0.79788456 - 0.00000077 * u - 0.00552740 * u ** 2
+          - 0.00009512 * u ** 3 + 0.00137237 * u ** 4 - 0.00072805 * u ** 5
+          + 0.00014476 * u ** 6)
+    th0 = (xs - 0.78539816 - 0.04166397 * u - 0.00003954 * u ** 2
+           + 0.00262573 * u ** 3 - 0.00054125 * u ** 4 - 0.00029333 * u ** 5
+           + 0.00013558 * u ** 6)
+    p_large = f0 * np.cos(th0) / np.sqrt(xs)
+    return np.where(small, p_small, p_large)
+
+
+def rho_from_doppler(doppler_hz: float, block_seconds: float) -> float:
+    """Jakes: correlation of the fading gain across one coherence block,
+    ρ = J₀(2π f_D τ). Clamped to [0, 1) — negative J₀ lobes (very fast
+    fading) are treated as fully decorrelated."""
+    rho = float(bessel_j0(2.0 * math.pi * doppler_hz * block_seconds))
+    return min(max(rho, 0.0), 1.0 - 1e-9)
+
+
+@dataclass(frozen=True)
+class FadingConfig:
+    kind: str = "rayleigh"      # rayleigh | rician | unit
+    rician_k: float = 0.0       # Rician K-factor (linear power ratio LOS/diffuse)
+    rho: float = 0.0            # AR(1) correlation across coherence blocks
+    coherence_rounds: int = 1   # DWFL rounds per fading block (>=1)
+    h_floor: float = H_FLOOR
+
+    @property
+    def los(self) -> float:
+        if self.kind == "rician":
+            return math.sqrt(self.rician_k / (self.rician_k + 1.0))
+        return 0.0
+
+    @property
+    def diffuse_std(self) -> float:
+        """Per-component (re/im) std of the diffuse part: CN(0, s²) with
+        total diffuse power s² = 1/(K+1) (Rician) or 1 (Rayleigh)."""
+        if self.kind == "rician":
+            return math.sqrt(1.0 / (self.rician_k + 1.0) / 2.0)
+        return math.sqrt(0.5)
+
+
+@dataclass(frozen=True)
+class FadingState:
+    """Pytree: diffuse complex gains as [N, 2] (re, im) + the round counter
+    that drives the block boundaries."""
+    diffuse: jnp.ndarray   # [N, 2]
+    t: jnp.ndarray         # scalar int32
+
+
+jax.tree_util.register_dataclass(FadingState,
+                                 data_fields=["diffuse", "t"],
+                                 meta_fields=[])
+
+
+def init_fading(cfg: FadingConfig, key, n_workers: int) -> FadingState:
+    if cfg.kind == "unit":
+        diffuse = jnp.zeros((n_workers, 2), jnp.float32)
+    else:
+        diffuse = cfg.diffuse_std * jax.random.normal(
+            key, (n_workers, 2), jnp.float32)
+    return FadingState(diffuse=diffuse, t=jnp.zeros((), jnp.int32))
+
+
+def magnitudes(cfg: FadingConfig, state: FadingState) -> jnp.ndarray:
+    """|h_k| = |LOS + diffuse_k|, floored away from zero."""
+    if cfg.kind == "unit":
+        return jnp.ones((state.diffuse.shape[0],), jnp.float32)
+    g = state.diffuse.at[:, 0].add(cfg.los)
+    return jnp.maximum(jnp.sqrt(jnp.sum(g * g, axis=1)), cfg.h_floor)
+
+
+def advance(cfg: FadingConfig, key, state: FadingState) -> FadingState:
+    """One DWFL round of the block-fading clock: AR(1)-redraw the diffuse
+    component at block boundaries (t ≡ 0 mod coherence_rounds), hold it
+    otherwise. Fully traced — `t` is a runtime value, so a single compiled
+    step serves every round of every block."""
+    t_next = state.t + 1
+    if cfg.kind == "unit":
+        return FadingState(diffuse=state.diffuse, t=t_next)
+    w = cfg.diffuse_std * jax.random.normal(key, state.diffuse.shape, jnp.float32)
+    rho = jnp.float32(cfg.rho)
+    stepped = rho * state.diffuse + jnp.sqrt(1.0 - rho ** 2) * w
+    redraw = (t_next % cfg.coherence_rounds) == 0
+    diffuse = jnp.where(redraw, stepped, state.diffuse)
+    return FadingState(diffuse=diffuse, t=t_next)
+
+
+def align(h: jnp.ndarray, P: jnp.ndarray, *, noise_policy: str = "surplus",
+          beta_slack: float = 1.0, power_floor: float = POWER_FLOOR):
+    """The paper's power-alignment rule (Eqt. 3-4), recomputed on-device.
+
+    Mirrors ChannelConfig.realize exactly (same derated budget so that
+    |h_i|√(α_i P_i) = c holds EXACTLY for every worker) but in traced jnp:
+    under block fading this runs every coherence block instead of once at
+    setup. Returns (alpha, beta, c).
+    """
+    eff = h * h * P                                       # |h_i|² P_i
+    eff_min = jnp.min(eff)
+    alpha = (1.0 - power_floor) * eff_min / eff           # Eqt. (3), derated
+    c = jnp.sqrt((1.0 - power_floor) * eff_min)           # Eqt. (4), derated
+    if noise_policy == "equal":
+        beta = jnp.minimum(1.0 - alpha, c ** 2 / eff)
+    elif noise_policy == "surplus":
+        beta = beta_slack * (1.0 - alpha)
+    else:
+        raise ValueError(noise_policy)
+    return alpha, beta, c
+
+
+def channel_state(cfg: FadingConfig, state: FadingState, P, sigma, sigma_m,
+                  *, path_gain=None, noise_policy: str = "surplus",
+                  beta_slack: float = 1.0) -> TracedChannelState:
+    """Realize the traced per-round channel: small-scale magnitudes × the
+    large-scale path gain (amplitude = √(power gain)), then re-align."""
+    h = magnitudes(cfg, state)
+    if path_gain is not None:
+        h = jnp.maximum(h * jnp.sqrt(path_gain), cfg.h_floor)
+    P = jnp.broadcast_to(jnp.asarray(P, jnp.float32), h.shape)
+    alpha, beta, c = align(h, P, noise_policy=noise_policy,
+                           beta_slack=beta_slack)
+    return TracedChannelState(
+        h=h, P=P, alpha=alpha, beta=beta, c=c,
+        sigma=jnp.asarray(sigma, jnp.float32),
+        sigma_m=jnp.asarray(sigma_m, jnp.float32),
+        n_workers=int(h.shape[0]))

@@ -1,0 +1,180 @@
+"""Worker geometry: placement, log-distance path loss, random-waypoint
+mobility, and unit-disk interference graphs.
+
+Everything here is traced jnp over [N]- or [N,2]-shaped state, so the whole
+geometry evolution lives inside the same jitted round as the fading process
+(zero retraces across rounds).
+
+Physical layer → protocol couplings (DESIGN.md §repro.net):
+
+  * **Path gain** g_k = g₀ · (max(d_k, d₀)/d₀)^(−n) where d_k is worker k's
+    distance to the network centroid — the paper's channel model is a
+    symmetric MAC with ONE scalar gain per worker, so the centroid acts as
+    the virtual aggregation plane every superposition crosses. The gain
+    multiplies the fading AMPLITUDE as √g_k (it is a power gain), shrinking
+    the worst worker's effective SNR and with it the alignment constant c.
+  * **Interference graph**: workers within ``comm_radius`` of each other
+    hear each other's superposition — the unit-disk adjacency, turned into
+    a time-varying doubly-stochastic mixing matrix by Metropolis-Hastings
+    weights (``metropolis_weights``), generalizing core/topology's static
+    complete/ring/torus matrices to *physically derived* ones.
+  * **Mobility**: random waypoint — each worker moves toward a private
+    waypoint at its own speed, drawing a fresh waypoint (and speed) on
+    arrival. Positions change every round ⇒ gains, the graph, c, and the
+    per-round privacy budget all drift (core.privacy.epsilon_trajectory).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class GeometryConfig:
+    area: float = 1000.0          # square deployment region side [m]
+    placement: str = "uniform"    # uniform | cluster
+    n_clusters: int = 4
+    cluster_std: float = 60.0     # [m] spread around each cluster center
+    pl_exponent: float = 0.0      # log-distance path-loss exponent n (0 = off)
+    ref_distance: float = 1.0     # d0 [m]
+    ref_gain_db: float = 0.0      # 10 log10 g0: power gain at d0
+    mobility: str = "static"      # static | waypoint
+    speed_min: float = 0.0        # [m/round]
+    speed_max: float = 0.0
+    comm_radius: float = 0.0      # unit-disk radius [m]; 0 = complete graph
+    normalize_gain: bool = True   # divide out the geometric-mean gain: the
+                                  # ABSOLUTE link budget is the protocol's
+                                  # p_dbm knob; geometry contributes the
+                                  # worker-to-worker SPREAD (otherwise km-
+                                  # scale path loss crushes every amplitude
+                                  # to the fading floor and c degenerates)
+
+
+@dataclass(frozen=True)
+class GeometryState:
+    pos: jnp.ndarray        # [N, 2]
+    waypoint: jnp.ndarray   # [N, 2]
+    speed: jnp.ndarray      # [N] meters per round
+
+
+jax.tree_util.register_dataclass(GeometryState,
+                                 data_fields=["pos", "waypoint", "speed"],
+                                 meta_fields=[])
+
+
+def _draw_speed(cfg: GeometryConfig, key, n: int) -> jnp.ndarray:
+    return jax.random.uniform(key, (n,), jnp.float32,
+                              minval=cfg.speed_min, maxval=max(cfg.speed_max,
+                                                               cfg.speed_min + 1e-9))
+
+
+def init_geometry(cfg: GeometryConfig, key, n_workers: int) -> GeometryState:
+    k_pos, k_way, k_spd, k_cl = jax.random.split(key, 4)
+    if cfg.placement == "cluster":
+        centers = jax.random.uniform(k_cl, (cfg.n_clusters, 2), jnp.float32,
+                                     minval=0.2 * cfg.area, maxval=0.8 * cfg.area)
+        assign = jax.random.randint(k_pos, (n_workers,), 0, cfg.n_clusters)
+        jitter = cfg.cluster_std * jax.random.normal(
+            jax.random.fold_in(k_pos, 1), (n_workers, 2), jnp.float32)
+        pos = jnp.clip(centers[assign] + jitter, 0.0, cfg.area)
+    elif cfg.placement == "uniform":
+        pos = jax.random.uniform(k_pos, (n_workers, 2), jnp.float32,
+                                 minval=0.0, maxval=cfg.area)
+    else:
+        raise ValueError(cfg.placement)
+    waypoint = jax.random.uniform(k_way, (n_workers, 2), jnp.float32,
+                                  minval=0.0, maxval=cfg.area)
+    return GeometryState(pos=pos, waypoint=waypoint,
+                         speed=_draw_speed(cfg, k_spd, n_workers))
+
+
+def advance(cfg: GeometryConfig, key, state: GeometryState) -> GeometryState:
+    """One round of random-waypoint motion (traced; no-op when static)."""
+    if cfg.mobility == "static" or cfg.speed_max <= 0.0:
+        return state
+    k_way, k_spd = jax.random.split(key)
+    delta = state.waypoint - state.pos
+    dist = jnp.linalg.norm(delta, axis=1)
+    arrive = dist <= state.speed                      # reach waypoint this round
+    step = jnp.where(dist[:, None] > 1e-9,
+                     delta / jnp.maximum(dist[:, None], 1e-9)
+                     * state.speed[:, None], 0.0)
+    pos = jnp.where(arrive[:, None], state.waypoint, state.pos + step)
+    new_way = jax.random.uniform(k_way, state.waypoint.shape, jnp.float32,
+                                 minval=0.0, maxval=cfg.area)
+    waypoint = jnp.where(arrive[:, None], new_way, state.waypoint)
+    new_spd = _draw_speed(cfg, k_spd, state.speed.shape[0])
+    speed = jnp.where(arrive, new_spd, state.speed)
+    return GeometryState(pos=pos, waypoint=waypoint, speed=speed)
+
+
+def path_gain(cfg: GeometryConfig, pos: jnp.ndarray) -> jnp.ndarray:
+    """Linear POWER gain per worker from log-distance path loss to the
+    network centroid: g_k = g0 (max(d_k, d0)/d0)^(−n). With pl_exponent=0
+    this is identically g0 (=1 by default) — the paper's geometry-free
+    channel."""
+    if cfg.pl_exponent <= 0.0:
+        return jnp.full((pos.shape[0],), 10.0 ** (cfg.ref_gain_db / 10.0),
+                        jnp.float32)
+    centroid = jnp.mean(pos, axis=0, keepdims=True)
+    d = jnp.maximum(jnp.linalg.norm(pos - centroid, axis=1), cfg.ref_distance)
+    g0 = 10.0 ** (cfg.ref_gain_db / 10.0)
+    g = g0 * (d / cfg.ref_distance) ** (-cfg.pl_exponent)
+    if cfg.normalize_gain:
+        g = g / jnp.exp(jnp.mean(jnp.log(g)))   # geometric-mean-1 spread
+    return g.astype(jnp.float32)
+
+
+def adjacency(cfg: GeometryConfig, pos: jnp.ndarray,
+              mask=None) -> jnp.ndarray:
+    """Unit-disk interference graph (symmetric, zero diagonal) as float
+    [N, N]. comm_radius<=0 ⇒ complete graph. ``mask`` [N] (bool/0-1)
+    removes churned-out workers: they neither transmit nor listen."""
+    n = pos.shape[0]
+    if cfg.comm_radius <= 0.0:
+        adj = jnp.ones((n, n), jnp.float32)
+    else:
+        d2 = jnp.sum((pos[:, None, :] - pos[None, :, :]) ** 2, axis=-1)
+        adj = (d2 <= cfg.comm_radius ** 2).astype(jnp.float32)
+    adj = adj * (1.0 - jnp.eye(n, dtype=jnp.float32))
+    if mask is not None:
+        p = jnp.asarray(mask, jnp.float32)
+        adj = adj * p[:, None] * p[None, :]
+    return adj
+
+
+def metropolis_weights(adj: jnp.ndarray) -> jnp.ndarray:
+    """Doubly-stochastic symmetric mixing matrix from an adjacency:
+    Metropolis-Hastings weights W_ij = A_ij / (1 + max(deg_i, deg_j)),
+    W_ii = 1 − Σ_{j≠i} W_ij. Works for ANY undirected graph (time-varying,
+    irregular, disconnected); an isolated worker gets the identity row
+    W_ii = 1 — the dynamic exchange then skips its update entirely."""
+    deg = jnp.sum(adj > 0, axis=1).astype(jnp.float32)
+    pair = 1.0 + jnp.maximum(deg[:, None], deg[None, :])
+    W = jnp.where(adj > 0, adj / pair, 0.0)
+    return W + jnp.diag(1.0 - jnp.sum(W, axis=1))
+
+
+def connectivity_fraction(adj) -> float:
+    """Host-side diagnostic: fraction of workers in the largest connected
+    component (scenario sanity checks / benchmarks, not traced)."""
+    import numpy as np
+    A = np.asarray(adj) > 0
+    n = A.shape[0]
+    seen = np.zeros(n, bool)
+    best = 0
+    for s in range(n):
+        if seen[s]:
+            continue
+        stack, comp = [s], 0
+        seen[s] = True
+        while stack:
+            i = stack.pop()
+            comp += 1
+            for j in np.nonzero(A[i] & ~seen)[0]:
+                seen[j] = True
+                stack.append(j)
+        best = max(best, comp)
+    return best / n

@@ -1,0 +1,105 @@
+"""Named network scenarios: bundled fading + geometry + churn presets.
+
+Each scenario is a physically-motivated point in the (coherence, geometry,
+mobility, churn) space; ``get_scenario`` is the single lookup used by
+``ProtocolConfig(channel_model="dynamic", scenario=...)``, launch/train.py
+and the benchmarks. Power (p_dbm) and the noise stds stay PROTOCOL knobs —
+a scenario describes the radio environment, not the transmit policy.
+
+    static_paper  the paper's Sec. III setup as a degenerate dynamic case:
+                  one Rayleigh draw held forever (coherence → ∞), no
+                  geometry (unit path gain), no churn. A dynamic run under
+                  this scenario reproduces the static pipeline round for
+                  round — the regression anchor for the subsystem.
+    iot_dense     many cheap static sensors, dense in a small hall: slow
+                  quasi-static fading (high ρ, long blocks), short radio
+                  range (unit-disk graph well below the complete graph),
+                  moderate duty-cycle churn.
+    vehicular     cars at street speed: fast Rayleigh fading (new block
+                  every round, low ρ), strong path-loss spread over a km
+                  scale, waypoint mobility, deadline stragglers.
+    drone_sparse  sparse aerial swarm with line of sight: Rician K=6,
+                  wide area, fast 3-D-ish motion, battery churn (drops
+                  AND rejoins), sparse connectivity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict
+
+from repro.net.churn import ChurnConfig
+from repro.net.fading import FadingConfig
+from repro.net.geometry import GeometryConfig
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    fading: FadingConfig
+    geometry: GeometryConfig
+    churn: ChurnConfig
+    description: str = ""
+
+    def with_coherence(self, coherence_rounds: int) -> "Scenario":
+        """Override the fading block length (benchmarks sweep this)."""
+        return replace(self, fading=replace(self.fading,
+                                            coherence_rounds=coherence_rounds))
+
+
+SCENARIOS: Dict[str, Scenario] = {
+    "static_paper": Scenario(
+        name="static_paper",
+        fading=FadingConfig(kind="rayleigh", rho=1.0,
+                            coherence_rounds=1_000_000_000),
+        geometry=GeometryConfig(mobility="static", pl_exponent=0.0,
+                                comm_radius=0.0),
+        churn=ChurnConfig(),
+        description="one Rayleigh draw held for the whole run; complete "
+                    "graph; no churn — the paper's static model",
+    ),
+    "iot_dense": Scenario(
+        name="iot_dense",
+        fading=FadingConfig(kind="rayleigh", rho=0.95, coherence_rounds=20),
+        geometry=GeometryConfig(area=200.0, placement="uniform",
+                                pl_exponent=2.5, ref_distance=1.0,
+                                ref_gain_db=0.0, mobility="static",
+                                comm_radius=90.0),
+        churn=ChurnConfig(p_drop=0.02, p_join=0.3, straggler_rate=0.05),
+        description="dense static sensor hall: quasi-static fading, short "
+                    "range, duty-cycle churn",
+    ),
+    "vehicular": Scenario(
+        name="vehicular",
+        fading=FadingConfig(kind="rayleigh", rho=0.3, coherence_rounds=1),
+        geometry=GeometryConfig(area=1000.0, placement="uniform",
+                                pl_exponent=3.2, ref_distance=10.0,
+                                ref_gain_db=0.0, mobility="waypoint",
+                                speed_min=5.0, speed_max=20.0,
+                                comm_radius=450.0),
+        churn=ChurnConfig(p_drop=0.0, p_join=1.0, straggler_rate=0.1),
+        description="street-speed mobility: a fresh fading block every "
+                    "round, km-scale path loss, deadline stragglers",
+    ),
+    "drone_sparse": Scenario(
+        name="drone_sparse",
+        fading=FadingConfig(kind="rician", rician_k=6.0, rho=0.8,
+                            coherence_rounds=5),
+        geometry=GeometryConfig(area=1500.0, placement="cluster",
+                                n_clusters=3, cluster_std=120.0,
+                                pl_exponent=2.2, ref_distance=10.0,
+                                ref_gain_db=0.0, mobility="waypoint",
+                                speed_min=8.0, speed_max=30.0,
+                                comm_radius=700.0),
+        churn=ChurnConfig(p_drop=0.03, p_join=0.15, straggler_rate=0.02),
+        description="sparse LOS swarm: Rician fading, clustered launch "
+                    "sites, battery churn",
+    ),
+}
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"known: {sorted(SCENARIOS)}") from None

@@ -1,0 +1,155 @@
+"""NetworkSimulator: composes fading × geometry × churn into the per-round
+traced channel state, participation mask and mixing matrix.
+
+The whole per-round evolution is a pure function of (key, NetState) built
+from jnp ops over [N]-shaped arrays — it jits once and serves every round
+(and every realization) with zero retraces; the heavy train step consumes
+its outputs as ARGUMENTS (protocol.make_dynamic_train_step), so neither
+side ever recompiles when the channel changes.
+
+Round pipeline (one call to ``round``):
+
+    fading.advance      AR(1)/Jakes block-fading clock (re-draw at block edges)
+    geometry.advance    random-waypoint motion
+    churn.advance       up/down Markov chain  → participation mask
+    geometry.path_gain  log-distance gain to the centroid (power gain)
+    fading.channel_state  |h| = |g|·√gain → on-device re-alignment (Eqt. 3-4)
+    [optional]          per-round σ calibration to a target ε (traced)
+    mixing matrix       masked complete graph, or Metropolis weights of the
+                        masked unit-disk graph (comm_radius > 0)
+
+``trajectory`` rolls the channel-only part T rounds via lax.scan — cheap
+([N]-sized arrays) — producing the stacked TracedChannelState that
+``protocol.epsilon_report`` turns into the per-round ε trajectory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import dbm_to_watts
+from repro.net import churn as churn_lib
+from repro.net import fading as fading_lib
+from repro.net import geometry as geometry_lib
+from repro.net.scenarios import Scenario
+from repro.net.state import TracedChannelState
+
+
+@dataclass(frozen=True)
+class NetState:
+    fading: fading_lib.FadingState
+    geometry: geometry_lib.GeometryState
+    churn: churn_lib.ChurnState
+
+
+jax.tree_util.register_dataclass(
+    NetState, data_fields=["fading", "geometry", "churn"], meta_fields=[])
+
+
+def complete_mixing(mask: jnp.ndarray) -> jnp.ndarray:
+    """Masked complete-graph mixing: active workers average over the other
+    active workers (exactly the paper's W = ((1)−I)/(N−1) when everyone is
+    on), inactive workers get the identity row. Symmetric, doubly
+    stochastic for ≥ 2 active workers."""
+    p = jnp.asarray(mask, jnp.float32)
+    n = p.shape[0]
+    n_act = jnp.maximum(jnp.sum(p), 2.0)
+    off = p[:, None] * p[None, :] * (1.0 - jnp.eye(n, dtype=jnp.float32))
+    W = off / (n_act - 1.0)
+    return W + jnp.diag(1.0 - jnp.sum(W, axis=1))
+
+
+class NetworkSimulator:
+    """Stateless orchestrator (all state lives in the NetState pytree the
+    caller threads through) — safe to close over in jitted functions."""
+
+    def __init__(self, scenario: Scenario, n_workers: int, *,
+                 p_dbm: float = 60.0, sigma: float = 1.0,
+                 sigma_m: float = 1.0, noise_policy: str = "surplus",
+                 beta_slack: float = 1.0, coherence_rounds: int = 0,
+                 target_epsilon: float = 0.0, gamma: float = 0.05,
+                 clip: float = 1.0, delta: float = 1e-5):
+        if coherence_rounds > 0:
+            scenario = scenario.with_coherence(coherence_rounds)
+        self.scenario = scenario
+        self.n_workers = int(n_workers)
+        self.P = float(dbm_to_watts(p_dbm))
+        self.sigma = float(sigma)
+        self.sigma_m = float(sigma_m)
+        self.noise_policy = noise_policy
+        self.beta_slack = float(beta_slack)
+        self.target_epsilon = float(target_epsilon)
+        self.gamma, self.clip, self.delta = float(gamma), float(clip), float(delta)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def init(self, key) -> NetState:
+        k_f, k_g, k_c = jax.random.split(key, 3)
+        scn = self.scenario
+        return NetState(
+            fading=fading_lib.init_fading(scn.fading, k_f, self.n_workers),
+            geometry=geometry_lib.init_geometry(scn.geometry, k_g,
+                                                self.n_workers),
+            churn=churn_lib.init_churn(scn.churn, k_c, self.n_workers))
+
+    def _channel(self, state: NetState, W) -> TracedChannelState:
+        scn = self.scenario
+        gains = geometry_lib.path_gain(scn.geometry, state.geometry.pos)
+        chan = fading_lib.channel_state(
+            scn.fading, state.fading, self.P, self.sigma, self.sigma_m,
+            path_gain=gains, noise_policy=self.noise_policy,
+            beta_slack=self.beta_slack)
+        if self.target_epsilon > 0:
+            # calibrate against the round's ACTUAL masking neighborhoods
+            # (limited range + churn mean fewer than N-1 maskers — the
+            # complete-graph formula would under-noise the target ε).
+            from repro.core import privacy
+            sig = privacy.sigma_for_epsilon_traced(
+                self.target_epsilon, self.gamma, self.clip, chan, self.delta,
+                W)
+            chan = chan.with_sigma(jnp.maximum(sig, 1e-12))
+        return chan
+
+    def round(self, key, state: NetState
+              ) -> Tuple[NetState, TracedChannelState, jnp.ndarray, jnp.ndarray]:
+        """Advance one DWFL round. Returns (state', chan, mask, W) — all
+        traced; jit this (or the train loop that calls it) once."""
+        k_f, k_g, k_c, k_s = jax.random.split(key, 4)
+        scn = self.scenario
+        state = NetState(
+            fading=fading_lib.advance(scn.fading, k_f, state.fading),
+            geometry=geometry_lib.advance(scn.geometry, k_g, state.geometry),
+            churn=churn_lib.advance(scn.churn, k_c, state.churn))
+        mask = churn_lib.participation_mask(scn.churn, k_s, state.churn)
+        if scn.geometry.comm_radius > 0:
+            adj = geometry_lib.adjacency(scn.geometry, state.geometry.pos,
+                                         mask=mask)
+            W = geometry_lib.metropolis_weights(adj)
+        else:
+            W = complete_mixing(mask)
+        chan = self._channel(state, W)
+        return state, chan, mask, W
+
+    def trajectory(self, key, T: int, state: Optional[NetState] = None
+                   ) -> Tuple[TracedChannelState, jnp.ndarray, jnp.ndarray]:
+        """Roll the network forward T rounds (channel-level only — no model
+        work) and return the stacked per-round TracedChannelState
+        ([T, ...] leaves), the [T, N] participation masks, and the
+        [T, N, N] mixing matrices. Feeds protocol.epsilon_report(
+        channel_model="dynamic") — pass the Ws so the accounting uses the
+        actual per-round masking neighborhoods."""
+        if state is None:
+            key, k0 = jax.random.split(key)
+            state = self.init(k0)
+
+        def body(carry, k):
+            st, ch, mask, W = self.round(k, carry)
+            return st, (ch, mask, W)
+
+        keys = jax.random.split(key, T)
+        _, (chans, masks, Ws) = jax.lax.scan(body, state, keys)
+        return chans, masks, Ws

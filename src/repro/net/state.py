@@ -1,0 +1,104 @@
+"""Traced channel state — the jnp pytree mirror of ``core.channel.ChannelState``.
+
+The seed implementation froze the channel at setup: numpy arrays on a
+frozen dataclass, closed over by the jitted train step, i.e. baked into the
+executable as compile-time CONSTANTS. Every new channel draw therefore
+forced a full retrace/recompile, and no time-varying scenario (block
+fading, mobility, churn — repro.net) was expressible.
+
+``TracedChannelState`` is a registered pytree whose ``h/P/alpha/beta/c``
+(and the noise stds ``sigma``/``sigma_m``) are jnp *arrays*: it is passed to
+the train step as an ARGUMENT, so ONE compiled step serves every channel
+realization of the same worker count (zero retraces across draws —
+tests/test_net.py::test_zero_retrace_across_channel_draws and the
+``net/retrace`` case of benchmarks/kernel_bench.py assert this).
+
+Duck-typing contract shared with the static ``ChannelState`` (DESIGN.md
+§repro.net): both expose ``n_workers`` (static int), ``c``, ``noise_scale``,
+``signal_scale``, ``aggregate_noise_std``, ``dp_sigma``, ``awgn_sigma`` —
+the exchange kernels in ``core.dwfl`` are written against that surface and
+accept either form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import ChannelState
+
+
+@dataclass(frozen=True)
+class TracedChannelState:
+    """One realized (possibly per-round) channel, as traced arrays.
+
+    Fields mirror ChannelState: ``h`` [N] fading magnitudes (large-scale
+    path gain already folded in), ``P`` [N] watts, ``alpha``/``beta`` [N]
+    power splits from the alignment rule (Eqt. 3-4), ``c`` scalar alignment
+    constant, ``sigma`` scalar DP-noise std, ``sigma_m`` scalar AWGN std.
+    ``n_workers`` is static metadata (it sets array shapes).
+    """
+    h: jnp.ndarray
+    P: jnp.ndarray
+    alpha: jnp.ndarray
+    beta: jnp.ndarray
+    c: jnp.ndarray
+    sigma: jnp.ndarray
+    sigma_m: jnp.ndarray
+    n_workers: int
+
+    # -- duck-typed surface shared with core.channel.ChannelState ----------
+
+    @property
+    def dp_sigma(self):
+        return self.sigma
+
+    @property
+    def awgn_sigma(self):
+        return self.sigma_m
+
+    @property
+    def signal_scale(self) -> jnp.ndarray:
+        """|h_k| sqrt(α_k P_k) — equals c for every worker after alignment."""
+        return self.h * jnp.sqrt(self.alpha * self.P)
+
+    @property
+    def noise_scale(self) -> jnp.ndarray:
+        """|h_k| sqrt(β_k P_k): per-worker over-the-air DP-noise amplitude."""
+        return self.h * jnp.sqrt(self.beta * self.P)
+
+    @property
+    def aggregate_noise_std(self) -> jnp.ndarray:
+        """σ_s per receiver i: sqrt(Σ_{k≠i} |h_k|² β_k P_k σ² + σ_m²)."""
+        s2 = (self.noise_scale ** 2) * self.sigma ** 2
+        tot = jnp.sum(s2) - s2
+        return jnp.sqrt(tot + self.sigma_m ** 2)
+
+    def with_sigma(self, sigma) -> "TracedChannelState":
+        return dataclasses.replace(self, sigma=jnp.asarray(sigma, jnp.float32))
+
+    # -- conversions -------------------------------------------------------
+
+    @classmethod
+    def from_static(cls, state: ChannelState) -> "TracedChannelState":
+        f32 = lambda x: jnp.asarray(x, jnp.float32)
+        return cls(h=f32(state.h), P=f32(state.P), alpha=f32(state.alpha),
+                   beta=f32(state.beta), c=f32(state.c),
+                   sigma=f32(state.cfg.sigma), sigma_m=f32(state.cfg.sigma_m),
+                   n_workers=state.n_workers)
+
+
+jax.tree_util.register_dataclass(
+    TracedChannelState,
+    data_fields=["h", "P", "alpha", "beta", "c", "sigma", "sigma_m"],
+    meta_fields=["n_workers"])
+
+
+def stack_states(states) -> TracedChannelState:
+    """Stack a sequence of per-round TracedChannelStates along a new leading
+    T axis (a pytree-of-arrays [T, ...]) — the input to the per-round
+    privacy-trajectory accounting (core.privacy.epsilon_trajectory)."""
+    states = list(states)
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)

@@ -1,0 +1,78 @@
+"""Deterministic offline stand-in for the `hypothesis` property-testing API.
+
+The container has no network and `hypothesis` may not be installed; rather
+than skip the property tests entirely, this shim degrades them to
+example-based tests: each strategy draws from a fixed-seed RNG and ``@given``
+expands the test body into a loop over ``max_examples`` deterministic draws
+(default 20, honoring ``@settings(max_examples=...)``). No shrinking, no
+``assume()``, no stateful testing — only the tiny strategy surface these
+tests actually use (``integers``, ``floats``, ``sampled_from``,
+``booleans``). Test modules import it as::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypo_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+_SEED = 0xD5F1  # fixed: every run sees the identical example set
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        lo, hi = float(min_value), float(max_value)
+        return _Strategy(lambda rng: float(lo + (hi - lo) * rng.random()))
+
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+st = _Strategies()
+
+
+def settings(max_examples: int = 20, **_kw):
+    """Record max_examples on the function; all other knobs are no-ops."""
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            n = getattr(run, "_max_examples", 20)
+            rng = np.random.default_rng(_SEED)
+            for _ in range(n):
+                draw = {k: s.draw(rng) for k, s in strategies.items()}
+                fn(*args, **draw, **kwargs)
+        # pytest must not mistake the strategy parameters for fixtures:
+        # mask the wrapped signature (drop __wrapped__, present zero args).
+        del run.__wrapped__
+        run.__signature__ = inspect.Signature()
+        return run
+    return deco

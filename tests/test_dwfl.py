@@ -102,14 +102,9 @@ def test_collective_path_matches_vectorized():
     noise_m = dwfl.channel_noise(jax.random.fold_in(key, 2), X, chan.cfg.sigma_m)
     want = dwfl.exchange_dwfl(X, noise_n, noise_m, chan, eta)["w"]
 
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
-    from jax.experimental.shard_map import shard_map
-    from jax.sharding import PartitionSpec as P
-
-    # simulate the N-worker axis with vmap over a size-N "virtual" axis by
-    # running shard_map on a 1-device mesh with the worker dim mapped via
-    # vmap's axis name (jax allows named axes through vmap).
+    # simulate the N-worker axis with vmap over a size-N "virtual" axis —
+    # the collective (psum) resolves against vmap's axis name exactly as it
+    # would against a real mesh axis under shard_map.
     def per_worker(x, n, m):
         return dwfl.exchange_dwfl_collective(
             {"w": x}, {"w": n}, {"w": m}, chan, eta, "workers")["w"]
@@ -226,6 +221,105 @@ def test_sampled_privacy_amplification():
     assert d == pytest.approx(0.3e-5)
     e1, _ = privacy.epsilon_sampled(0.8, 1e-5, 1.0)
     assert e1 == pytest.approx(0.8)
+
+
+def test_sampled_all_but_two_out():
+    """Edge case: exactly two transmitters. Each transmitter sees only the
+    OTHER transmitter (denominator 1); pure receivers average the two."""
+    N, d = 6, 12
+    chan = _chan(N, sigma=0.0, sigma_m=0.0, seed=15)
+    eta, c = 0.5, chan.c
+    key = jax.random.PRNGKey(8)
+    X = {"w": jax.random.normal(key, (N, d))}
+    zero = jax.tree_util.tree_map(jnp.zeros_like, X)
+    mask = jnp.array([True, True, False, False, False, False])
+    out = dwfl.exchange_dwfl_sampled(X, zero, zero, chan, eta, mask)["w"]
+    x = np.asarray(X["w"])
+    # transmitter 0 hears only transmitter 1 (and vice versa)
+    np.testing.assert_allclose(np.asarray(out[0]),
+                               x[0] + eta * (x[1] - x[0]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[1]),
+                               x[1] + eta * (x[0] - x[1]), rtol=1e-5)
+    # pure receivers mix toward the transmitter mean (n_tx - 0 = 2 visible)
+    for i in range(2, N):
+        np.testing.assert_allclose(
+            np.asarray(out[i]),
+            x[i] + eta * ((x[0] + x[1]) / 2.0 - x[i]), rtol=1e-5)
+
+
+def test_sampled_denominator_clamping_degenerate():
+    """Below the protocol's guaranteed minimum (a single transmitter — can
+    only arise if a caller bypasses the >=2 guard) the clamps n_tx>=2 and
+    denom>=1 keep every update finite and bounded."""
+    N, d = 5, 8
+    chan = _chan(N, seed=16)
+    key = jax.random.PRNGKey(9)
+    X = {"w": jax.random.normal(key, (N, d))}
+    n = dwfl.dp_noise(jax.random.fold_in(key, 1), X, chan)
+    m = dwfl.channel_noise(jax.random.fold_in(key, 2), X, chan.cfg.sigma_m)
+    for n_tx in (0, 1):
+        mask = jnp.arange(N) < n_tx
+        out = dwfl.exchange_dwfl_sampled(X, n, m, chan, 0.5, mask)["w"]
+        assert bool(jnp.all(jnp.isfinite(out)))
+        # the sole transmitter hears nobody: only its own-noise correction
+        # and the AWGN term remain, both bounded
+        assert float(jnp.max(jnp.abs(out))) < 1e3
+
+
+def _fused_pair(scheme, sigma_m=1.0, participation=1.0):
+    """Run one identical protocol round with fuse_exchange off/on."""
+    from repro.configs.registry import get_arch
+    import repro.models.mlp as mlp
+    cfg = get_arch("dwfl-paper").replace(d_model=32)
+    key = jax.random.PRNGKey(0)
+    params = mlp.init(key, cfg, input_dim=24)
+    wp = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (6,) + a.shape), params)
+    batch = {"x": jax.random.normal(key, (6, 8, 24)),
+             "y": jnp.zeros((6, 8), jnp.int32)}
+    outs = []
+    for fuse in (False, True):
+        proto = ProtocolConfig(scheme=scheme, n_workers=6, gamma=0.05,
+                               eta=0.5, clip=1.0, target_epsilon=1.0,
+                               sigma_m=sigma_m, participation=participation,
+                               fuse_exchange=fuse)
+        step = jax.jit(make_train_step(cfg, proto))
+        wp2, _ = step(wp, batch, key)
+        outs.append(wp2)
+    return outs
+
+
+def test_fuse_exchange_gossip_exact_equivalence():
+    """Noiseless gossip: the bucketed (single flat all-reduce) path must
+    reproduce the per-leaf path EXACTLY — same tree, same values."""
+    plain, fused = _fused_pair("gossip")
+    assert (jax.tree_util.tree_structure(plain)
+            == jax.tree_util.tree_structure(fused))
+    for a, b in zip(jax.tree_util.tree_leaves(plain),
+                    jax.tree_util.tree_leaves(fused)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_fuse_exchange_dwfl_mean_invariant():
+    """DWFL with noise: fused and per-leaf paths consume PRNG differently
+    (one key for the flat leaf vs one per leaf) so values differ — but with
+    sigma_m=0 BOTH must preserve the worker mean exactly (Eqt. 9), which
+    pins the bucket/unravel layout without fixing the noise draw."""
+    plain, fused = _fused_pair("dwfl", sigma_m=0.0)
+    for a, b in zip(jax.tree_util.tree_leaves(plain),
+                    jax.tree_util.tree_leaves(fused)):
+        np.testing.assert_allclose(np.asarray(a.mean(0)),
+                                   np.asarray(b.mean(0)),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_fuse_exchange_sampled_runs():
+    """fuse_exchange composes with per-round worker sampling."""
+    plain, fused = _fused_pair("dwfl", participation=0.5)
+    for l in jax.tree_util.tree_leaves(fused):
+        assert bool(jnp.all(jnp.isfinite(l)))
 
 
 def test_sampled_protocol_runs():

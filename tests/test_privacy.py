@@ -3,7 +3,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:  # hypothesis is optional offline (see tests/_hypo_fallback.py)
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypo_fallback import given, settings, st
 
 from repro.core import privacy
 from repro.core.channel import ChannelConfig
@@ -89,6 +92,45 @@ def test_composition():
     assert en == pytest.approx(10.0)
     ea, da = privacy.compose_advanced(e1, d1, 100, delta_prime=1e-6)
     assert ea < en  # advanced composition wins for small eps, large T
+
+
+def test_scheme_aware_calibration_orthogonal():
+    """ProtocolConfig.channel() must calibrate an orthogonal run against
+    its OWN per-link budget (Remark 4.1) and epsilon_report must headline
+    that budget — the complete-graph DWFL formula would silently grant a
+    much weaker privacy level (and misreport it ~40x low)."""
+    from repro.core import protocol as P
+    proto = P.ProtocolConfig(scheme="orthogonal", n_workers=8, gamma=0.02,
+                             clip=1.0, target_epsilon=1.0, p_dbm=70.0)
+    chan = proto.channel()
+    realized = privacy.epsilon_orthogonal(proto.gamma, proto.clip, chan,
+                                          proto.delta).max()
+    assert realized == pytest.approx(1.0, rel=1e-5)
+    rep = P.epsilon_report(proto, chan)
+    assert rep["epsilon_worst"] == pytest.approx(1.0, rel=1e-5)
+    assert rep["epsilon_complete_graph_worst"] < rep["epsilon_worst"]
+
+
+def test_scheme_aware_calibration_topology():
+    """Same bug class for limited-degree gossip: a ring receiver is masked
+    by only 2k neighbors' noises, so channel() must calibrate with the
+    topology-aware formula and epsilon_report must headline the realized
+    per-receiver budget (previously ~12x over the promised target)."""
+    from repro.core import protocol as P
+    proto = P.ProtocolConfig(scheme="dwfl", topology="ring", topology_k=1,
+                             n_workers=16, gamma=0.5, clip=1.0,
+                             target_epsilon=1.0, p_dbm=70.0)
+    chan = proto.channel()
+    W = proto.mixing_matrix()
+    realized = privacy.epsilon_dwfl_topology(proto.gamma, proto.clip, chan,
+                                             proto.delta, W).max()
+    assert realized == pytest.approx(1.0, rel=1e-5)
+    rep = P.epsilon_report(proto, chan)
+    assert rep["epsilon_worst"] == pytest.approx(1.0, rel=1e-5)
+    # the ring needs MORE noise than the complete graph at the same target
+    proto_c = P.ProtocolConfig(scheme="dwfl", n_workers=16, gamma=0.5,
+                               clip=1.0, target_epsilon=1.0, p_dbm=70.0)
+    assert chan.cfg.sigma > proto_c.channel().cfg.sigma
 
 
 # ---------------------------------------------------------------------------

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:  # hypothesis is optional offline (see tests/_hypo_fallback.py)
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypo_fallback import given, settings, st
 
 from repro.core import dwfl, privacy
 from repro.core import topology as topo

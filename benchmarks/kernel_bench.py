@@ -53,6 +53,7 @@ def main():
     rows.append(f"kernel/ssd_scan_256,{us:.1f},{err:.2e}")
 
     rows.append(_bench_net_retrace())
+    rows.append(_bench_fleet_retrace())
     return rows
 
 
@@ -91,6 +92,53 @@ def _bench_net_retrace():
     out["w"].block_until_ready()
     us = (time.perf_counter() - t0) / len(draws) * 1e6
     return f"net/retrace_16x4096,{us:.1f},{traces['n']:.2e}"
+
+
+def _bench_fleet_retrace():
+    """repro.fleet acceptance case: the R-way vmapped exchange compiles
+    ONCE and serves every fresh replicate BATCH — derived = number of jit
+    traces across 4 distinct stacked [R, ...] realizations (must print
+    1.00e+00; zero retraces across replicate batches)."""
+    from repro.core import dwfl, protocol as P
+    from repro.fleet import FleetEngine
+
+    R, N, d = 8, 8, 2048
+    proto = P.ProtocolConfig(scheme="dwfl", n_workers=N, p_dbm=70.0,
+                             channel_model="dynamic", scenario="vehicular",
+                             replicates=R)
+    fleet = FleetEngine(proto)
+    key = jax.random.PRNGKey(0)
+    states = fleet.init(key)
+    fleet_round = jax.jit(fleet.round)
+
+    traces = {"n": 0}
+
+    def _exchange(X, n, m, chans, Ws):
+        traces["n"] += 1
+        return jax.vmap(
+            lambda x, nn, mm, ch, w: dwfl.exchange_dwfl_dynamic(
+                x, nn, mm, ch, 0.4, w))(X, n, m, chans, Ws)
+
+    exchange = jax.jit(_exchange)
+    X1 = {"w": jax.random.normal(key, (N, d))}
+    Xb = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (R,) + a.shape), X1)
+    batches = []
+    for t in range(4):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        states, chans, _masks, Ws = fleet_round(k1, states)
+        n = jax.vmap(lambda k, ch: dwfl.dp_noise(k, X1, ch))(
+            jax.random.split(k2, R), chans)
+        m = jax.vmap(lambda k, ch: dwfl.channel_noise(k, X1, ch.awgn_sigma))(
+            jax.random.split(k3, R), chans)
+        batches.append((n, m, chans, Ws))
+    exchange(Xb, *batches[0])  # compile
+    t0 = time.perf_counter()
+    for b in batches:
+        out = exchange(Xb, *b)
+    out["w"].block_until_ready()
+    us = (time.perf_counter() - t0) / len(batches) * 1e6
+    return f"fleet/retrace_{R}x{N}x{d},{us:.1f},{traces['n']:.2e}"
 
 
 if __name__ == "__main__":

@@ -20,7 +20,7 @@ def main() -> None:
     from benchmarks import (fig2_power, fig3_workers, fig4_epsilon,
                             fig5_orthogonal, fig6_centralized,
                             privacy_table, kernel_bench, sampling_ablation,
-                            coherence_sweep)
+                            coherence_sweep, fleet_sweep)
 
     suites = [
         ("fig2_power", lambda: fig2_power.main(args.steps)),
@@ -31,6 +31,7 @@ def main() -> None:
         ("privacy_table", privacy_table.main),
         ("kernel_bench", kernel_bench.main),
         ("sampling_ablation", lambda: sampling_ablation.main(args.steps)),
+        ("fleet_sweep", lambda: fleet_sweep.main(args.steps)),
         ("coherence_sweep", lambda: coherence_sweep.main(args.steps)),
     ]
     print("name,us_per_call,derived")

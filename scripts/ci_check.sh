@@ -30,4 +30,27 @@ name, us, traces = row.split(",")
 assert float(traces) == 1.0, f"dynamic exchange retraced: {traces}"
 EOF
 
+echo "== repro.fleet smoke: R=4 replicates, one compiled step =="
+python -m repro.launch.train \
+    --arch dwfl-paper --steps 10 --workers 6 \
+    --channel-model dynamic --scenario iot_dense --replicates 4 \
+    --eval-every 5
+
+echo "== repro.fleet smoke: zero retraces across replicate batches =="
+python - <<'EOF'
+from benchmarks.kernel_bench import _bench_fleet_retrace
+row = _bench_fleet_retrace()
+print(row)
+name, us, traces = row.split(",")
+assert float(traces) == 1.0, f"fleet exchange retraced: {traces}"
+EOF
+
+echo "== ISSUE 2 regression tests: sampling amplification + scheme composition =="
+python -m pytest -q \
+    tests/test_dwfl.py::test_sampled_mask_no_fixed_subset \
+    tests/test_dwfl.py::test_sampled_report_quotes_effective_rate \
+    tests/test_dwfl.py::test_orthogonal_deep_fade_bounded \
+    tests/test_privacy.py::test_epsilon_report_composes_scheme_budget \
+    tests/test_fleet.py
+
 echo "ci_check: OK"

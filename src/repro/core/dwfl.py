@@ -98,6 +98,15 @@ def exchange_dwfl(X: Tree, noise_n: Tree, noise_m: Tree,
     return jax.tree_util.tree_map(one, X, noise_n, noise_m)
 
 
+# Floor for the inverted per-link gain |h_j|√(α_j P_j) in the orthogonal
+# baseline: a deep-fade draw (|h_j| → 0) sends the gain to 0 and the
+# inverted AWGN std to infinity, poisoning the whole round with inf/NaN.
+# The clamp caps the noise inflation of any single link at 40 dB (power)
+# below the best link — beyond that a real receiver would declare the link
+# in outage rather than amplify pure noise.
+ORTHOGONAL_GAIN_FLOOR = 1e-2   # amplitude ratio to the best link (= -40 dB power)
+
+
 def exchange_orthogonal(X: Tree, key, chan: ChannelState, eta: float) -> Tree:
     """Orthogonal (pairwise digital-style) baseline: each link carries ONE
     sender's signal, masked only by that sender's own noise (constant-in-N
@@ -110,13 +119,17 @@ def exchange_orthogonal(X: Tree, key, chan: ChannelState, eta: float) -> Tree:
     per worker per round vs DWFL's single superposed one.
     """
     N = chan.n_workers
-    k_n, k_m = jax.random.split(key)
     # sender-side effective noise after gain inversion (static channel only:
     # the host-side float math below bakes these in at trace time)
     inv_gain = jnp.asarray(
         np.sqrt(chan.beta / np.maximum(chan.alpha, 1e-9)) * chan.dp_sigma, jnp.float32)
-    # per-link AWGN std after inversion, averaged over N-1 links
-    link_std = chan.awgn_sigma / (chan.h * np.sqrt(chan.alpha * chan.P))
+    # per-link AWGN std after inversion, averaged over N-1 links; the
+    # inverted gain is clamped (ORTHOGONAL_GAIN_FLOOR relative to the best
+    # link) so one deep-fade |h| cannot blow the std up to inf
+    gain = chan.h * np.sqrt(chan.alpha * chan.P)
+    gain = np.maximum(gain, max(ORTHOGONAL_GAIN_FLOOR * float(np.max(gain)),
+                                1e-30))
+    link_std = chan.awgn_sigma / gain
     mean_m_std = float(np.sqrt(np.mean(link_std ** 2) / (N - 1)))
 
     def one(kk, x):

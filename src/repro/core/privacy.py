@@ -223,6 +223,24 @@ def epsilon_trajectory(gamma: float, g_max: float, chans, delta: float,
     )(chans, Ws)
 
 
+def epsilon_trajectory_batched(gamma: float, g_max: float, chans, delta: float,
+                               Ws=None):
+    """Fleet (replicated) form of epsilon_trajectory: ``chans`` is a
+    TracedChannelState with [R, T, ...] leaves (R independent network
+    realizations, e.g. from FleetEngine.trajectory) and ``Ws`` the matching
+    [R, T, N, N] mixing matrices. Returns the full [R, T, N] budget tensor
+    from ONE vmapped program — no Python loop over replicates (the per-
+    replicate rows are bitwise what epsilon_trajectory returns for that
+    replicate's trajectory; tests/test_fleet.py asserts the equivalence)."""
+    import jax
+    if Ws is None:
+        return jax.vmap(
+            lambda ch: epsilon_trajectory(gamma, g_max, ch, delta))(chans)
+    return jax.vmap(
+        lambda ch, w: epsilon_trajectory(gamma, g_max, ch, delta, w)
+    )(chans, Ws)
+
+
 def compose_heterogeneous(eps_rounds, delta_round: float,
                           delta_prime: float = 1e-6):
     """Advanced composition for PER-ROUND-VARYING budgets (the fading
@@ -234,10 +252,25 @@ def compose_heterogeneous(eps_rounds, delta_round: float,
     Reduces to compose_advanced when all ε_t are equal. This is the
     worst-case guarantee over the realized trajectory — the number the
     dynamic epsilon_report quotes."""
-    e = np.asarray(eps_rounds, np.float64).reshape(-1)
-    eps = (math.sqrt(2.0 * math.log(1.0 / delta_prime) * float(np.sum(e ** 2)))
-           + float(np.sum(e * (np.expm1(e)))))
-    return eps, len(e) * delta_round + delta_prime
+    eps, delta = compose_heterogeneous_batched(
+        np.asarray(eps_rounds, np.float64).reshape(-1),
+        delta_round, delta_prime)
+    return float(eps), float(delta)
+
+
+def compose_heterogeneous_batched(eps_rounds, delta_round: float,
+                                  delta_prime: float = 1e-6):
+    """Vectorized heterogeneous composition: ``eps_rounds`` is [..., T]
+    (e.g. [R, T] per-replicate worst-receiver trajectories) and composition
+    runs along the LAST axis, returning (ε_total [...], δ_total [...]) with
+    no Python loop — the accounting analogue of the fleet's batched step."""
+    e = np.asarray(eps_rounds, np.float64)
+    T = e.shape[-1]
+    eps = (np.sqrt(2.0 * math.log(1.0 / delta_prime) * np.sum(e ** 2, axis=-1))
+           + np.sum(e * np.expm1(e), axis=-1))
+    delta = np.broadcast_to(
+        np.float64(T * delta_round + delta_prime), eps.shape).copy()
+    return eps, delta
 
 
 def epsilon_sampled(eps_round: float, delta_round: float, q: float):

@@ -63,6 +63,10 @@ class ProtocolConfig:
     scenario: str = "static_paper"  # net.scenarios preset (dynamic only)
     coherence_rounds: int = 0    # >0: override the scenario's fading block
                                  # length (benchmarks sweep this)
+    replicates: int = 1          # dynamic only: batch R independent network
+                                 # realizations through ONE compiled step
+                                 # (repro.fleet.FleetEngine; launch/train.py
+                                 # --replicates)
 
     def mixing_matrix(self):
         from repro.core import topology as topo
@@ -110,6 +114,34 @@ class ProtocolConfig:
             coherence_rounds=self.coherence_rounds,
             target_epsilon=self.target_epsilon, gamma=self.gamma,
             clip=self.clip, delta=self.delta)
+
+
+def sample_participation(key, n_workers: int, q: float) -> jnp.ndarray:
+    """Bool [N] transmit mask at rate q with a RANDOMIZED guaranteed pair.
+
+    The exchange needs >= 2 transmitters to be well defined. The seed's
+    guard (``mask.at[:2].set(True)``) silently made workers 0-1 transmit
+    EVERY round — a fixed subset with realized rate 1, while the
+    amplification accounting assumed the uniform rate q for everyone. Here
+    the guaranteed pair is drawn uniformly (without replacement) from the
+    round key, so the guard's extra transmissions spread evenly: every
+    worker's realized rate is effective_participation(q, N) (the rate the
+    report quotes; regression-tested in tests/test_dwfl.py)."""
+    k_coin, k_pair = jax.random.split(key)
+    mask = jax.random.uniform(k_coin, (n_workers,)) < q
+    pair = jax.random.choice(k_pair, n_workers, (2,), replace=False)
+    return mask.at[pair].set(True)
+
+
+def effective_participation(q: float, n_workers: int) -> float:
+    """Worst-case effective per-round transmit rate under the guaranteed
+    pair: P(transmit) = 1 − (1−q)(1 − 2/N) = q + (1−q)·2/N, identical for
+    every worker since the pair is uniform. This — not the nominal q — is
+    the subsampling rate the amplification bound may use
+    (privacy.epsilon_sampled)."""
+    if q >= 1.0:
+        return 1.0
+    return q + (1.0 - q) * 2.0 / n_workers
 
 
 def init_worker_params(key, cfg: ModelConfig, n_workers: int):
@@ -165,10 +197,26 @@ def epsilon_report(proto: ProtocolConfig, chan,
         "epsilon_orthogonal_worst": float(eps_orth.max()),
         "sigma": chan.cfg.sigma,
     }
-    e_round, d_round = float(eps.max()), proto.delta
-    if proto.participation < 1.0:
-        e_round, d_round = privacy.epsilon_sampled(e_round, d_round,
-                                                   proto.participation)
+    # T-round composition starts from the budget of the scheme actually RUN
+    # (eps_scheme) — composing the complete-graph eps.max() under-stated the
+    # total for ring/torus and orthogonal runs, whose per-round budgets are
+    # strictly larger at equal σ.
+    e_round, d_round = float(eps_scheme.max()), proto.delta
+    # amplification applies ONLY when the round actually samples: the
+    # make_train_step dispatch takes the sampled exchange just for the
+    # complete-graph dwfl scheme (topology/orthogonal/centralized branches
+    # transmit every round — quoting an amplified budget there would
+    # UNDER-state the real privacy loss).
+    samples = (proto.participation < 1.0 and proto.scheme == "dwfl"
+               and proto.topology == "complete")
+    if samples:
+        # amplification uses the WORST-CASE realized rate: the randomized
+        # guaranteed pair (sample_participation) lifts every worker's
+        # effective rate above the nominal q.
+        q_eff = effective_participation(proto.participation, proto.n_workers)
+        rep["participation_nominal"] = proto.participation
+        rep["participation_effective"] = q_eff
+        e_round, d_round = privacy.epsilon_sampled(e_round, d_round, q_eff)
         rep["epsilon_sampled"] = e_round
     if T:
         ea, da = privacy.compose_advanced(e_round, d_round, T)
@@ -270,10 +318,8 @@ def make_train_step(cfg: ModelConfig, proto: ProtocolConfig,
                 X = dwfl.exchange_dwfl_topology(X, n, m, chan, eta,
                                                 proto.mixing_matrix())
             elif proto.participation < 1.0:
-                mask = (jax.random.uniform(k_x, (proto.n_workers,))
-                        < proto.participation)
-                # guarantee >= 2 transmitters so the round is well defined
-                mask = mask.at[:2].set(True)
+                mask = sample_participation(k_x, proto.n_workers,
+                                            proto.participation)
                 X = dwfl.exchange_dwfl_sampled(X, n, m, chan, eta, mask)
             elif axis is not None:
                 X = dwfl.exchange_dwfl_collective(X, n, m, chan, eta, axis)

@@ -1,0 +1,31 @@
+"""repro.fleet — batched multi-replicate scenario simulation for DWFL.
+
+One compiled program advances R independent network realizations at once:
+the dynamic round (repro.net traced channel + train step) vmapped over a
+leading replicate axis, with an optional shard_map path over mesh devices
+(engine.FleetEngine), plus the cartesian ScenarioGrid sweep driver with
+mean/CI JSON aggregation (sweep). Batched privacy accounting lives in
+core.privacy (epsilon_trajectory_batched / compose_heterogeneous_batched);
+fleet_epsilon_report wraps both into the per-replicate composed report.
+
+Entry points: ``ProtocolConfig(channel_model="dynamic", replicates=R)`` +
+``launch/train.py --replicates R``; see examples/fleet_quickstart.py.
+"""
+from repro.fleet.engine import (FleetEngine, fleet_epsilon_report, mean_ci,
+                                stack_rounds)
+
+__all__ = [
+    "FleetEngine", "ScenarioGrid", "fleet_epsilon_report", "mean_ci",
+    "run_grid", "run_point", "stack_rounds",
+]
+
+_SWEEP_NAMES = {"ScenarioGrid", "run_grid", "run_point"}
+
+
+def __getattr__(name):
+    # lazy so `python -m repro.fleet.sweep` doesn't double-import the
+    # sweep module through the package __init__ (RuntimeWarning)
+    if name in _SWEEP_NAMES:
+        from repro.fleet import sweep as _sweep
+        return getattr(_sweep, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,217 @@
+"""FleetEngine — batched multi-replicate DWFL simulation.
+
+PR 1 made the dynamic channel a traced ARGUMENT of the compiled round, so
+one executable serves every realization of one network. This module adds
+the missing axis: a leading REPLICATE axis R, vmapped over everything the
+round consumes — stacked ``NetState``/``TracedChannelState`` pytrees
+([R, ...] leaves), stacked [R, N, N] mixing matrices, per-replicate PRNG
+keys, per-replicate worker params [R, W, ...] and batches [R, W, B, ...].
+One compiled step then advances R INDEPENDENT (seed × scenario-variant)
+networks at once — the batched-replicate scenario-evaluation pattern of
+decentralized-FL mesh simulators (cf. arXiv 2311.01186), with three wins
+over the R-iteration Python loop it replaces:
+
+  * dispatch amortization: 1 jitted call per round instead of 2R,
+  * fusion: XLA batches R tiny matmuls/reductions into one kernel each,
+  * zero retraces across replicate BATCHES (the [R, ...] shapes are fixed;
+    fresh stacked realizations are just new arguments — asserted by the
+    ``fleet/retrace`` kernel-bench case and tests/test_fleet.py).
+
+Replicates are i.i.d. ONLY through their PRNG keys (fading, placement,
+churn, data order, DP/channel noise); the scenario preset, worker count and
+protocol knobs are shared — except transmit power, which may be a per-
+replicate [R] array (``power_dbm``), folding the paper's Fig. 2 power-sweep
+axis into the same compiled program. An optional ``shard_map`` path
+(``make_fleet_step(..., mesh=...)``) shards the replicate axis over mesh
+devices: replicates are embarrassingly parallel, so the sharded program is
+the vmapped one with R/|mesh| replicates per device and no cross-device
+collectives. See DESIGN.md §repro.fleet.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import protocol as protocol_lib
+from repro.core.channel import dbm_to_watts
+from repro.net.simulator import NetState
+from repro.net.state import TracedChannelState
+
+
+def stack_rounds(rounds):
+    """Stack a per-round list of [R, ...]-leaved pytrees along a NEW axis 1:
+    the [R, T, ...] layout consumed by privacy.epsilon_trajectory_batched
+    (axis 0 stays the replicate axis, matching FleetEngine.trajectory)."""
+    rounds = list(rounds)
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs, axis=1), *rounds)
+
+
+def mean_ci(values, confidence_z: float = 1.96):
+    """Across-replicate aggregate: (mean, half-width of the normal-approx
+    95% CI of the mean). One replicate ⇒ CI 0 (no spread information)."""
+    v = np.asarray(values, np.float64).reshape(-1)
+    if v.size <= 1:
+        return float(v.mean()), 0.0
+    return (float(v.mean()),
+            float(confidence_z * v.std(ddof=1) / np.sqrt(v.size)))
+
+
+class FleetEngine:
+    """Batched (vmapped) front end of net.NetworkSimulator + the dynamic
+    train step: every method takes/returns pytrees with a leading replicate
+    axis R. Stateless like the simulator it wraps — jit-safe to close over.
+
+    ``power_dbm``: None (all replicates use proto.p_dbm) or an [R] array of
+    per-replicate transmit powers (the scenario-variant axis).
+    """
+
+    def __init__(self, proto: "protocol_lib.ProtocolConfig",
+                 replicates: Optional[int] = None, *, power_dbm=None):
+        if proto.channel_model != "dynamic":
+            raise ValueError("FleetEngine requires channel_model='dynamic' "
+                             "(the static channel is baked into the compiled "
+                             "step — there is nothing to batch)")
+        self.proto = proto
+        self.replicates = int(replicates if replicates is not None
+                              else proto.replicates)
+        if self.replicates < 1:
+            raise ValueError(f"replicates must be >= 1, got {self.replicates}")
+        self.sim = proto.simulator()
+        if power_dbm is None:
+            self._P = None                      # shared proto.p_dbm
+        else:
+            p = np.asarray(power_dbm, np.float64).reshape(-1)
+            if p.shape[0] != self.replicates:
+                raise ValueError(f"power_dbm has {p.shape[0]} entries for "
+                                 f"{self.replicates} replicates")
+            self._P = jnp.asarray(dbm_to_watts(p), jnp.float32)  # [R] watts
+
+    # -- network lifecycle (all [R, ...]-leaved) ---------------------------
+
+    def split_keys(self, key) -> jnp.ndarray:
+        """[R] independent per-replicate keys from one fleet key."""
+        return jax.random.split(key, self.replicates)
+
+    def init(self, key) -> NetState:
+        """Stacked initial NetState: leaves [R, ...] — replicate r is
+        bitwise sim.init(split(key)[r]) (the loop-equivalence anchor)."""
+        return jax.vmap(self.sim.init)(self.split_keys(key))
+
+    def round(self, key, states: NetState
+              ) -> Tuple[NetState, TracedChannelState, jnp.ndarray, jnp.ndarray]:
+        """Advance all R networks one round. Returns (states', chans, masks,
+        Ws) with leaves [R, ...] / [R, N] / [R, N, N]."""
+        keys = self.split_keys(key)
+        if self._P is None:
+            return jax.vmap(self.sim.round)(keys, states)
+        return jax.vmap(lambda k, s, p: self.sim.round(k, s, P=p))(
+            keys, states, self._P)
+
+    def trajectory(self, key, T: int, states: Optional[NetState] = None
+                   ) -> Tuple[TracedChannelState, jnp.ndarray, jnp.ndarray]:
+        """R stacked T-round channel trajectories: ([R, T, ...] chans,
+        [R, T, N] masks, [R, T, N, N] Ws) — the direct input to
+        privacy.epsilon_trajectory_batched."""
+        keys = self.split_keys(key)
+        if states is None:
+            if self._P is None:
+                return jax.vmap(lambda k: self.sim.trajectory(k, T))(keys)
+            return jax.vmap(
+                lambda k, p: self.sim.trajectory(k, T, P=p))(keys, self._P)
+        if self._P is None:
+            return jax.vmap(
+                lambda k, s: self.sim.trajectory(k, T, state=s))(keys, states)
+        return jax.vmap(
+            lambda k, s, p: self.sim.trajectory(k, T, state=s, P=p)
+        )(keys, states, self._P)
+
+    # -- model side --------------------------------------------------------
+
+    def init_worker_params(self, key, cfg):
+        """[R, W, ...] params: replicate r's W workers share ONE init drawn
+        from key_r (the paper's common-start rule, independently per
+        network)."""
+        return jax.vmap(
+            lambda k: protocol_lib.init_worker_params(k, cfg, self.proto.n_workers)
+        )(self.split_keys(key))
+
+    def make_fleet_step(self, cfg, mesh=None, axis: str = "replicas"):
+        """The batched round:
+
+            step(worker_params, batch, keys, chans, Ws)
+                -> (worker_params', metrics)     # every leaf [R, ...]
+
+        vmap of protocol.make_dynamic_train_step over the replicate axis.
+        With ``mesh`` (optional, 1-axis jax mesh), the same program is
+        wrapped in shard_map instead, splitting R over the mesh devices
+        (R % |mesh| must be 0); replicates never communicate, so in/out
+        specs are plain leading-axis shards and the body stays the vmapped
+        step on the local R/|mesh| slab.
+        """
+        base = protocol_lib.make_dynamic_train_step(cfg, self.proto)
+        batched = jax.vmap(base)
+        if mesh is None:
+            return batched
+        from jax.sharding import PartitionSpec
+        try:
+            from jax.experimental.shard_map import shard_map
+        except ImportError as e:          # pragma: no cover - very old jax
+            raise RuntimeError("shard_map unavailable in this jax") from e
+        n_dev = int(np.prod(mesh.devices.shape))
+        if self.replicates % n_dev:
+            raise ValueError(f"replicates={self.replicates} not divisible by "
+                             f"mesh size {n_dev}")
+        spec = PartitionSpec(mesh.axis_names[0])
+        return shard_map(batched, mesh=mesh,
+                         in_specs=(spec, spec, spec, spec, spec),
+                         out_specs=(spec, spec), check_rep=False)
+
+    def make_fleet_round(self, cfg, mesh=None):
+        """Network advance + train step as ONE jittable call (what the
+        sweep driver and launch/train.py --replicates actually run):
+
+            fleet_round(key, states, worker_params, batch)
+                -> (states', worker_params', metrics, chans, Ws)
+
+        A single dispatch per round for the whole fleet — the unit the
+        ≥3×-vs-Python-loop acceptance benchmark times.
+        """
+        step = self.make_fleet_step(cfg, mesh=mesh)
+
+        def fleet_round(key, states, worker_params, batch):
+            k_net, k_step = jax.random.split(key)
+            states, chans, _masks, Ws = self.round(k_net, states)
+            worker_params, metrics = step(
+                worker_params, batch, self.split_keys(k_step), chans, Ws)
+            return states, worker_params, metrics, chans, Ws
+
+        return fleet_round
+
+
+def fleet_epsilon_report(proto, chans, Ws=None) -> dict:
+    """Replicated privacy report: Theorem 4.1 on every round of every
+    replicate ([R, T, N] via the batched accounting — no Python loop),
+    worst receiver per round, heterogeneous composition per replicate, and
+    across-replicate mean/CI of the composed budget. ``chans`` leaves are
+    [R, T, ...] (FleetEngine.trajectory or stack_rounds of logged rounds)."""
+    from repro.core import privacy
+    eps_rtn = np.asarray(privacy.epsilon_trajectory_batched(
+        proto.gamma, proto.clip, chans, proto.delta, Ws))      # [R, T, N]
+    per_round = eps_rtn.max(axis=2)                            # [R, T]
+    eps_c, delta_c = privacy.compose_heterogeneous_batched(
+        per_round, proto.delta)                                # [R], [R]
+    mean, ci = mean_ci(eps_c)
+    return {
+        "replicates": int(eps_rtn.shape[0]),
+        "rounds": int(eps_rtn.shape[1]),
+        "epsilon_per_round": per_round,                        # [R, T]
+        "epsilon_worst": float(per_round.max()),
+        "epsilon_composed_per_replicate": eps_c,               # [R]
+        "delta_composed": float(delta_c.reshape(-1)[0]),
+        "epsilon_composed_mean": mean,
+        "epsilon_composed_ci95": ci,
+    }

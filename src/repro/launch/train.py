@@ -60,6 +60,11 @@ def main(argv=None):
                          "iot_dense, vehicular, drone_sparse")
     ap.add_argument("--coherence-rounds", type=int, default=0,
                     help="override the scenario's fading block length")
+    ap.add_argument("--replicates", type=int, default=1,
+                    help="dynamic only: batch R independent network "
+                         "realizations through one compiled step "
+                         "(repro.fleet); metrics/privacy report mean±CI "
+                         "across replicates")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--checkpoint", default=None)
@@ -71,14 +76,27 @@ def main(argv=None):
         cfg = cfg.reduced()
     W = args.workers
 
+    if args.replicates > 1 and args.channel_model != "dynamic":
+        raise SystemExit("--replicates requires --channel-model dynamic "
+                         "(the static channel is baked into the compiled "
+                         "step; there is nothing to batch)")
+
     proto = P.ProtocolConfig(
         scheme=args.scheme, n_workers=W, gamma=args.gamma, eta=args.eta,
         clip=args.clip, sigma=args.sigma, sigma_m=args.sigma_m,
         p_dbm=args.p_dbm, seed=args.seed, target_epsilon=args.epsilon,
         channel_model=args.channel_model, scenario=args.scenario,
-        coherence_rounds=args.coherence_rounds)
-    sim = None
-    if args.channel_model == "dynamic":
+        coherence_rounds=args.coherence_rounds, replicates=args.replicates)
+    sim, fleet = None, None
+    if args.replicates > 1:
+        from repro.fleet import FleetEngine
+        fleet = FleetEngine(proto)
+        sim = fleet.sim
+        print(f"[train] {args.arch} scheme={args.scheme} N={W} "
+              f"dynamic scenario={args.scenario} R={args.replicates} "
+              f"replicates/compiled-step "
+              f"coherence={sim.scenario.fading.coherence_rounds} rounds")
+    elif args.channel_model == "dynamic":
         sim = proto.simulator()
         print(f"[train] {args.arch} scheme={args.scheme} N={W} "
               f"dynamic scenario={args.scenario} "
@@ -101,25 +119,54 @@ def main(argv=None):
         batcher = LMBatcher(toks, W, args.batch_size, args.seq_len,
                             seed=args.seed)
 
-    wp = P.init_worker_params(key, cfg, W)
-    n_params = sum(int(x.size) for x in jax.tree_util.tree_leaves(wp)) // W
+    if fleet is not None:
+        wp = fleet.init_worker_params(key, cfg)
+        n_params = (sum(int(x.size) for x in jax.tree_util.tree_leaves(wp))
+                    // (W * fleet.replicates))
+    else:
+        wp = P.init_worker_params(key, cfg, W)
+        n_params = sum(int(x.size) for x in jax.tree_util.tree_leaves(wp)) // W
     print(f"[train] params/worker: {n_params/1e6:.2f}M")
 
-    if sim is not None:
+    if fleet is not None:
+        # ONE jitted call advances all R networks: net evolution + train
+        # step fused (repro.fleet.FleetEngine.make_fleet_round); donate the
+        # threaded state/params like the single-network paths do
+        fleet_round = jax.jit(fleet.make_fleet_round(cfg),
+                              donate_argnums=(1, 2))
+        key, nk = jax.random.split(key)
+        net_state = fleet.init(nk)
+        chan_log, w_log = [], []
+        evaluate = jax.jit(jax.vmap(P.make_eval_fn(cfg)))
+
+        def next_batch():
+            # R independent per-replicate draws from the worker-batch
+            # stream, stacked to [R, W, B, ...]
+            return jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[batcher.next() for _ in range(fleet.replicates)])
+    elif sim is not None:
         step = jax.jit(P.make_dynamic_train_step(cfg, proto), donate_argnums=0)
         net_round = jax.jit(sim.round)
         key, nk = jax.random.split(key)
         net_state = sim.init(nk)
         chan_log, w_log = [], []
+        evaluate = jax.jit(P.make_eval_fn(cfg))
     else:
         step = jax.jit(P.make_train_step(cfg, proto), donate_argnums=0)
-    evaluate = jax.jit(P.make_eval_fn(cfg))
+        evaluate = jax.jit(P.make_eval_fn(cfg))
 
     logf = open(args.log, "w") if args.log else None
     t0 = time.time()
     for t in range(args.steps + 1):
         key, sk = jax.random.split(key)
-        if sim is not None:
+        if fleet is not None:
+            net_state, wp, metrics, chan_t, W_t = fleet_round(
+                sk, net_state, wp, next_batch())
+            chan_log.append(chan_t)
+            w_log.append(W_t)
+            metrics = jax.tree_util.tree_map(jnp.mean, metrics)
+        elif sim is not None:
             sk, ck = jax.random.split(sk)
             net_state, chan_t, mask_t, W_t = net_round(ck, net_state)
             chan_log.append(chan_t)
@@ -128,7 +175,14 @@ def main(argv=None):
         else:
             wp, metrics = step(wp, batcher.next(), sk)
         if t % args.eval_every == 0:
-            if cfg.family == "mlp":
+            if cfg.family == "mlp" and fleet is not None:
+                full = jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(
+                        a[None], (fleet.replicates,) + a.shape),
+                    batcher.full(256))
+                el_r, ea_r = evaluate(wp, full)           # [R], [R]
+                ev_loss, ev_acc = jnp.mean(el_r), jnp.mean(ea_r)
+            elif cfg.family == "mlp":
                 ev_loss, ev_acc = evaluate(wp, batcher.full(256))
             else:
                 ev_loss, ev_acc = metrics["loss"], jnp.float32(0)
@@ -143,7 +197,20 @@ def main(argv=None):
                 logf.write(json.dumps(rec) + "\n")
                 logf.flush()
 
-    if sim is not None:
+    if fleet is not None:
+        # batched accounting over ALL replicates' realized trajectories:
+        # [R, T, N] budgets in one vmapped program, composed per replicate,
+        # reported as across-replicate mean ± CI (DESIGN.md §repro.fleet).
+        from repro.fleet import fleet_epsilon_report, stack_rounds
+        rep = fleet_epsilon_report(proto, stack_rounds(chan_log),
+                                   stack_rounds(w_log))
+        print(f"[train] eps over {rep['rounds']} rounds x "
+              f"{rep['replicates']} replicates: worst/round="
+              f"{rep['epsilon_worst']:.3g} composed="
+              f"{rep['epsilon_composed_mean']:.3g}"
+              f"±{rep['epsilon_composed_ci95']:.2g} "
+              f"(delta={rep['delta_composed']:.2g})")
+    elif sim is not None:
         # per-round privacy over the REALIZED fading trajectory (not a
         # scalar): Thm 4.1 on each round's channel + worst-case
         # heterogeneous composition (DESIGN.md §repro.net).

@@ -17,8 +17,11 @@ neither transmits, mixes, nor contributes masking noise to anyone's privacy
 budget that round (DESIGN.md §repro.net).
 
 ``min_active`` guards degenerate rounds: the first ``min_active`` workers
-are forced on, matching the static path's ``mask.at[:2].set(True)`` rule so
-every round has a well-defined exchange.
+are forced on so every round has a well-defined exchange. NOTE this is a
+FIXED always-on subset — fine for availability modeling (these workers'
+budgets are simply not amplified), but the static sampling path uses a
+RANDOMIZED guaranteed pair instead (protocol.sample_participation) because
+there the mask feeds the subsampling amplification accounting.
 """
 from __future__ import annotations
 

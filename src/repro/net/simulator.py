@@ -96,11 +96,12 @@ class NetworkSimulator:
                                                 self.n_workers),
             churn=churn_lib.init_churn(scn.churn, k_c, self.n_workers))
 
-    def _channel(self, state: NetState, W) -> TracedChannelState:
+    def _channel(self, state: NetState, W, P=None) -> TracedChannelState:
         scn = self.scenario
         gains = geometry_lib.path_gain(scn.geometry, state.geometry.pos)
         chan = fading_lib.channel_state(
-            scn.fading, state.fading, self.P, self.sigma, self.sigma_m,
+            scn.fading, state.fading, self.P if P is None else P,
+            self.sigma, self.sigma_m,
             path_gain=gains, noise_policy=self.noise_policy,
             beta_slack=self.beta_slack)
         if self.target_epsilon > 0:
@@ -114,10 +115,15 @@ class NetworkSimulator:
             chan = chan.with_sigma(jnp.maximum(sig, 1e-12))
         return chan
 
-    def round(self, key, state: NetState
+    def round(self, key, state: NetState, P=None
               ) -> Tuple[NetState, TracedChannelState, jnp.ndarray, jnp.ndarray]:
         """Advance one DWFL round. Returns (state', chan, mask, W) — all
-        traced; jit this (or the train loop that calls it) once."""
+        traced; jit this (or the train loop that calls it) once.
+
+        ``P`` (optional, scalar or [N] watts, traced): per-call transmit-
+        power override of the constructor's p_dbm. The fleet engine vmaps
+        it over the replicate axis, batching a POWER SWEEP (the paper's
+        Fig. 2 axis) into one compiled program."""
         k_f, k_g, k_c, k_s = jax.random.split(key, 4)
         scn = self.scenario
         state = NetState(
@@ -131,10 +137,11 @@ class NetworkSimulator:
             W = geometry_lib.metropolis_weights(adj)
         else:
             W = complete_mixing(mask)
-        chan = self._channel(state, W)
+        chan = self._channel(state, W, P=P)
         return state, chan, mask, W
 
-    def trajectory(self, key, T: int, state: Optional[NetState] = None
+    def trajectory(self, key, T: int, state: Optional[NetState] = None,
+                   P=None
                    ) -> Tuple[TracedChannelState, jnp.ndarray, jnp.ndarray]:
         """Roll the network forward T rounds (channel-level only — no model
         work) and return the stacked per-round TracedChannelState
@@ -147,7 +154,7 @@ class NetworkSimulator:
             state = self.init(k0)
 
         def body(carry, k):
-            st, ch, mask, W = self.round(k, carry)
+            st, ch, mask, W = self.round(k, carry, P=P)
             return st, (ch, mask, W)
 
         keys = jax.random.split(key, T)

@@ -336,3 +336,97 @@ def test_sampled_protocol_runs():
              "y": jnp.zeros((6, 8), jnp.int32)}
     wp2, metrics = step(wp, batch, key)
     assert np.isfinite(float(metrics["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 2 regressions: randomized guaranteed pair, orthogonal deep-fade floor
+# ---------------------------------------------------------------------------
+
+
+def test_sampled_mask_no_fixed_subset():
+    """Regression (ISSUE 2): the >=2-transmitters guard must not pin a FIXED
+    worker pair (the seed's mask.at[:2].set(True) made workers 0-1 transmit
+    every round at realized rate 1 while the amplification accounting
+    assumed rate q). With the randomized pair: no worker transmits in every
+    round, every round still has >= 2 transmitters, and each worker's
+    realized frequency matches the effective rate the report quotes."""
+    from repro.core.protocol import (effective_participation,
+                                     sample_participation)
+    N, q, T = 8, 0.3, 2000
+    keys = jax.random.split(jax.random.PRNGKey(0), T)
+    masks = np.asarray(jax.vmap(
+        lambda k: sample_participation(k, N, q))(keys))
+    assert masks.shape == (T, N)
+    assert (masks.sum(axis=1) >= 2).all()          # round stays well defined
+    rates = masks.mean(axis=0)                     # realized per-worker rate
+    assert rates.max() < 1.0                       # no always-on subset
+    q_eff = effective_participation(q, N)
+    # every worker's realized rate within 5 sigma of the quoted effective
+    # rate (binomial std over T rounds) — workers 0-1 no longer special
+    tol = 5.0 * np.sqrt(q_eff * (1.0 - q_eff) / T)
+    assert np.abs(rates - q_eff).max() < tol, (rates, q_eff, tol)
+
+
+def test_sampled_report_quotes_effective_rate():
+    """epsilon_report must amplify with the worst-case EFFECTIVE rate
+    (nominal q + the guaranteed-pair lift), and that rate must match the
+    realized transmit frequency of the actual mask sampler."""
+    from repro.core import privacy
+    from repro.core.protocol import (ProtocolConfig, effective_participation,
+                                     epsilon_report, sample_participation)
+    N, q = 8, 0.3
+    proto = ProtocolConfig(scheme="dwfl", n_workers=N, participation=q)
+    rep = epsilon_report(proto, proto.channel(), T=10)
+    q_eff = effective_participation(q, N)
+    assert rep["participation_nominal"] == q
+    assert rep["participation_effective"] == pytest.approx(q_eff)
+    assert q < q_eff < 1.0
+    # the quoted amplified budget uses q_eff, not the nominal q
+    want_e, _ = privacy.epsilon_sampled(rep["epsilon_worst"], proto.delta,
+                                        q_eff)
+    assert rep["epsilon_sampled"] == pytest.approx(want_e)
+    # and q_eff is the realized frequency of the sampler itself
+    T = 4000
+    masks = np.asarray(jax.vmap(
+        lambda k: sample_participation(k, N, q)
+    )(jax.random.split(jax.random.PRNGKey(1), T)))
+    realized = masks.mean()
+    assert abs(realized - q_eff) < 5.0 * np.sqrt(q_eff * (1 - q_eff) / (T * N))
+
+
+def test_orthogonal_deep_fade_bounded():
+    """Regression (ISSUE 2): a deep-fade draw (|h| -> 0) used to send the
+    inverted per-link gain to 0 and the link-AWGN std to infinity. The
+    documented floor (dwfl.ORTHOGONAL_GAIN_FLOOR relative to the best link)
+    keeps the exchange finite and bounded."""
+    chan = _chan(N=6, seed=21)
+    # force worker 3 into deep fade; keep alpha/P as realized so the
+    # inverted gain h*sqrt(alpha*P) collapses for that link
+    h = np.array(chan.h)
+    h[3] = 1e-12
+    deep = dataclasses.replace(chan, h=h)
+    key = jax.random.PRNGKey(5)
+    X = {"w": jax.random.normal(key, (6, 16))}
+    out = dwfl.exchange_orthogonal(X, key, deep, 0.4)["w"]
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # bounded: the floored link inflates noise by at most 1/GAIN_FLOOR
+    # relative to the healthy links — not by 1e12
+    assert float(jnp.max(jnp.abs(out))) < 1e4
+
+
+def test_sampled_report_not_amplified_off_sampled_path():
+    """Amplification must NOT be quoted for configs whose dispatch never
+    reaches the sampled exchange (ring topology / orthogonal transmit every
+    round regardless of `participation`) — quoting it would UNDER-state the
+    real budget."""
+    from repro.core import privacy
+    from repro.core.protocol import ProtocolConfig, epsilon_report
+    for kw in (dict(scheme="dwfl", topology="ring"),
+               dict(scheme="orthogonal"),):
+        proto = ProtocolConfig(n_workers=8, participation=0.3, **kw)
+        rep = epsilon_report(proto, proto.channel(), T=10)
+        assert "epsilon_sampled" not in rep
+        assert "participation_effective" not in rep
+        want, _ = privacy.compose_advanced(rep["epsilon_worst"],
+                                           proto.delta, 10)
+        assert rep["epsilon_T_advanced"] == pytest.approx(want)

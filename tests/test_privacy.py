@@ -177,3 +177,30 @@ def test_property_calibration_roundtrip(target, N):
     else:
         got = privacy.epsilon_dwfl(0.02, 1.0, chan.with_sigma(sig), 1e-5).max()
         assert got == pytest.approx(target, rel=1e-5)
+
+
+def test_epsilon_report_composes_scheme_budget():
+    """Regression (ISSUE 2): the static epsilon_report composed the T-round
+    budget from the COMPLETE-GRAPH eps.max() even for ring/torus and
+    orthogonal runs, whose per-round scheme budgets are strictly larger at
+    equal sigma — the composed total silently under-stated the loss. The
+    composition must start from the scheme's own worst per-round budget."""
+    from repro.core.protocol import ProtocolConfig, epsilon_report
+
+    T = 50
+    for scheme, topology in (("dwfl", "ring"), ("orthogonal", "complete")):
+        proto = ProtocolConfig(scheme=scheme, n_workers=12, gamma=0.05,
+                               clip=1.0, sigma=1.0, sigma_m=1.0,
+                               topology=topology, target_epsilon=0.0)
+        chan = proto.channel()
+        rep = epsilon_report(proto, chan, T=T)
+        # composed from the scheme budget (the report's own headline) ...
+        want, want_d = privacy.compose_advanced(rep["epsilon_worst"],
+                                                proto.delta, T)
+        assert rep["epsilon_T_advanced"] == pytest.approx(want)
+        assert rep["delta_T_advanced"] == pytest.approx(want_d)
+        # ... which strictly exceeds the old complete-graph composition
+        old, _ = privacy.compose_advanced(rep["epsilon_complete_graph_worst"],
+                                          proto.delta, T)
+        assert rep["epsilon_T_advanced"] > old
+        assert rep["epsilon_worst"] > rep["epsilon_complete_graph_worst"]

@@ -1,0 +1,93 @@
+"""Exchange-engine perf tracking: fused (flat-buffer dp_mix) vs unfused
+(bucketed tree) round latency at R=1 and R=8 replicates, written to
+``BENCH_exchange.json`` at the repo root so the perf trajectory is
+versioned alongside the code.
+
+    PYTHONPATH=src python -m benchmarks.exchange_bench [--smoke]
+
+CSV rows (benchmarks.run convention): derived = fused-over-unfused
+speedup. The JSON carries both latencies per case plus the shape.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT = ROOT / "BENCH_exchange.json"
+# the CI --smoke gate writes its tiny-shape numbers HERE so it never
+# clobbers the versioned full-run trajectory artifact above
+OUT_SMOKE = ROOT / "BENCH_exchange_smoke.json"
+
+SIZES_FULL = ((256, 512), (512,), (512, 512), (512,), (512, 256), (256,),
+              (256, 10), (10,))
+SIZES_SMOKE = ((128, 128), (128,), (128, 64), (64,))
+
+
+def _time(fn, *a, n=5):
+    r = fn(*a)
+    jax.tree_util.tree_leaves(r)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn(*a)
+    jax.tree_util.tree_leaves(r)[0].block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _case(R: int, sizes, n_iter: int):
+    """One (R, shape) case: per-round latency of the unfused bucketed dwfl
+    round vs the fused flat dp_mix round, vmapped over R replicates."""
+    from benchmarks.kernel_bench import _dp_mix_pair
+    from repro.kernels.dp_mix import ops as mix_ops
+
+    unfused, (tree, gtree, key), fused, (flat, gflat, seed) = _dp_mix_pair(
+        sizes=sizes)
+    d = int(flat.shape[-1])
+    if R == 1:
+        us_u = _time(unfused, tree, gtree, key, n=n_iter)
+        us_f = _time(fused, flat, gflat, seed, n=n_iter)
+    else:
+        stack = lambda a: jnp.broadcast_to(a[None], (R,) + a.shape) + 0.0
+        treeR = jax.tree_util.tree_map(stack, tree)
+        gtreeR = jax.tree_util.tree_map(stack, gtree)
+        keysR = jax.random.split(key, R)
+        seedsR = jax.vmap(mix_ops.seed_from_key)(keysR)
+        us_u = _time(jax.jit(jax.vmap(unfused)), treeR, gtreeR, keysR,
+                     n=n_iter)
+        us_f = _time(jax.jit(jax.vmap(fused)), stack(flat), stack(gflat),
+                     seedsR, n=n_iter)
+    return {"replicates": R, "workers": int(flat.shape[0]), "d": d,
+            "unfused_us": round(us_u, 1), "fused_us": round(us_f, 1),
+            "speedup": round(us_u / us_f, 3)}
+
+
+def main(steps: int = 250, smoke: bool = False):
+    sizes = SIZES_SMOKE if smoke else SIZES_FULL
+    n_iter = 3 if smoke else max(3, min(steps // 50, 10))
+    cases = [_case(1, sizes, n_iter), _case(8, sizes, n_iter)]
+    report = {
+        "benchmark": "exchange_fused_vs_unfused",
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "cases": cases,
+    }
+    out = OUT_SMOKE if smoke else OUT
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    rows = [f"exchange/fused_r{c['replicates']}_d{c['d']},"
+            f"{c['fused_us']:.1f},{c['speedup']:.2f}" for c in cases]
+    rows.append(f"exchange/report,{0.0:.1f},{str(out.name)}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes, fast (CI gate)")
+    ap.add_argument("--steps", type=int, default=250)
+    args = ap.parse_args()
+    print("\n".join(main(args.steps, smoke=args.smoke)))

@@ -52,9 +52,99 @@ def main():
     err = float(jnp.max(jnp.abs(y1 - y2)))
     rows.append(f"kernel/ssd_scan_256,{us:.1f},{err:.2e}")
 
+    rows.append(_bench_dp_mix())
+    rows.append(_bench_dp_mix_retrace())
     rows.append(_bench_net_retrace())
     rows.append(_bench_fleet_retrace())
     return rows
+
+
+def _dp_mix_pair(N=8, sizes=((256, 512), (512,), (512, 512), (512,),
+                             (512, 256), (256,), (256, 10), (10,))):
+    """(unfused bucketed dwfl round, fused dp_mix flat round) on the same
+    multi-leaf worker tree — the fusion acceptance comparison."""
+    from repro.core import dwfl, exchange as X
+    from repro.core.channel import ChannelConfig
+    from repro.core.protocol import _bucket
+    from repro.kernels.dp_mix import ops as mix_ops
+
+    chan = ChannelConfig(n_workers=N, p_dbm=60.0, sigma=0.7, sigma_m=0.5,
+                         seed=0).realize()
+    key = jax.random.PRNGKey(0)
+    tree = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i), (N,) + s)
+            for i, s in enumerate(sizes)}
+    gtree = {k: 0.01 * v for k, v in tree.items()}
+    gamma, eta = 0.05, 0.4
+    plan = X.plan_complete(None, chan)
+
+    def unfused(tree, gtree, k):
+        Xs = jax.tree_util.tree_map(lambda p, g: p - gamma * g, tree, gtree)
+        Xb, unravel = _bucket(Xs)
+        k1, k2 = jax.random.split(k)
+        n = dwfl.dp_noise(k1, Xb, chan)
+        m = dwfl.channel_noise(k2, Xb, chan.awgn_sigma)
+        return unravel(dwfl.exchange_dwfl(Xb, n, m, chan, eta)["flat"])
+
+    def fused(flat, gflat, seed):
+        return mix_ops.dp_mix_round_plan(flat, gflat, seed, plan,
+                                         gamma=gamma, eta=eta)
+
+    flat = X.flatten_worker_tree(tree)
+    gflat = X.flatten_worker_tree(gtree)
+    return (jax.jit(unfused), (tree, gtree, key),
+            jax.jit(fused), (flat, gflat, mix_ops.seed_from_key(key)))
+
+
+def _bench_dp_mix():
+    """ACCEPTANCE: the fused flat-buffer dp_mix round must beat the
+    unfused bucketed dwfl round (per-leaf-free but still concat + 2
+    threefry sweeps + einsum + unravel) by >= 1.5x at bench shape.
+    derived = speedup."""
+    unfused, ua, fused, fa = _dp_mix_pair()
+    us_u, _ = _time(unfused, *ua)
+    us_f, _ = _time(fused, *fa)
+    speedup = us_u / us_f
+    assert speedup >= 1.5, (
+        f"fused dp_mix round only {speedup:.2f}x vs unfused (need >= 1.5x): "
+        f"{us_f:.0f}us vs {us_u:.0f}us")
+    return f"kernel/dp_mix_fused_8x528k,{us_f:.1f},{speedup:.2f}"
+
+
+def _bench_dp_mix_retrace():
+    """dp_mix acceptance: every channel quantity is an operand, so the
+    fused round compiles ONCE across fresh traced-channel draws — derived
+    = number of jit traces over 4 draws (must print 1.00e+00)."""
+    from repro.core import exchange as X
+    from repro.kernels.dp_mix import ops as mix_ops
+    from repro.net import NetworkSimulator, get_scenario
+
+    N, d = 8, 65536
+    sim = NetworkSimulator(get_scenario("vehicular"), N, p_dbm=70.0)
+    key = jax.random.PRNGKey(0)
+    state = sim.init(key)
+    net_round = jax.jit(sim.round)
+    traces = {"n": 0}
+
+    def _fused(p, g, seed, plan):
+        traces["n"] += 1
+        return mix_ops.dp_mix_round_plan(p, g, seed, plan, gamma=0.05,
+                                         eta=0.4)
+
+    fused = jax.jit(_fused)
+    p = jax.random.normal(key, (N, d))
+    draws = []
+    for t in range(4):
+        key, k1 = jax.random.split(key)
+        state, chan, _mask, W = net_round(k1, state)
+        draws.append((mix_ops.seed_from_key(k1),
+                      X.plan_dynamic(None, chan, W_arg=W)))
+    fused(p, 0.01 * p, *draws[0])  # compile
+    t0 = time.perf_counter()
+    for d_ in draws:
+        out = fused(p, 0.01 * p, *d_)
+    out.block_until_ready()
+    us = (time.perf_counter() - t0) / len(draws) * 1e6
+    return f"dp_mix/retrace_{N}x{d},{us:.1f},{traces['n']:.2e}"
 
 
 def _bench_net_retrace():

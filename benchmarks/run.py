@@ -20,7 +20,7 @@ def main() -> None:
     from benchmarks import (fig2_power, fig3_workers, fig4_epsilon,
                             fig5_orthogonal, fig6_centralized,
                             privacy_table, kernel_bench, sampling_ablation,
-                            coherence_sweep, fleet_sweep)
+                            coherence_sweep, exchange_bench, fleet_sweep)
 
     suites = [
         ("fig2_power", lambda: fig2_power.main(args.steps)),
@@ -30,6 +30,9 @@ def main() -> None:
         ("fig6_centralized", lambda: fig6_centralized.main(args.steps)),
         ("privacy_table", privacy_table.main),
         ("kernel_bench", kernel_bench.main),
+        # emits BENCH_exchange.json at the repo root (fused-vs-unfused
+        # exchange latency, R=1 and R=8 — the perf trajectory artifact)
+        ("exchange_bench", lambda: exchange_bench.main(args.steps)),
         ("sampling_ablation", lambda: sampling_ablation.main(args.steps)),
         ("fleet_sweep", lambda: fleet_sweep.main(args.steps)),
         ("coherence_sweep", lambda: coherence_sweep.main(args.steps)),

@@ -37,15 +37,23 @@ params = mlp.init(jax.random.PRNGKey(0), cfg, input_dim=256)
 worker_params = jax.tree_util.tree_map(
     lambda a: jnp.broadcast_to(a[None], (N,) + a.shape), params)
 
-# 4. Train: each round = local grad + SGD step + noisy over-the-air gossip.
-step = jax.jit(P.make_train_step(cfg, proto))
+# 4. Train on the persistent FLAT buffer (the fast path): params are
+#    raveled ONCE into a [N, d] f32 buffer, every round is one fused
+#    dp_mix kernel call (local SGD + on-chip DP noise + mixing matmul +
+#    self-correction + AWGN — a single pass over the buffer), and the
+#    pytree is recovered only at eval time. Swap make_flat_train_step for
+#    make_train_step (and drop the ravel) to get the classic pytree path.
+from repro.core import exchange as E
+flat = E.flatten_worker_tree(worker_params)            # [N, d] — once
+unravel, unravel_row = E.worker_unravelers(worker_params)
+step = jax.jit(P.make_flat_train_step(cfg, proto, unravel_row))
 evaluate = jax.jit(P.make_eval_fn(cfg))
 key = jax.random.PRNGKey(1)
 for t in range(301):
     key, sk = jax.random.split(key)
-    worker_params, metrics = step(worker_params, batcher.next(), sk)
+    flat, metrics = step(flat, batcher.next(), sk)
     if t % 100 == 0:
-        ev_loss, ev_acc = evaluate(worker_params, batcher.full(128))
+        ev_loss, ev_acc = evaluate(unravel(flat), batcher.full(128))
         print(f"round {t:4d}  train_loss={float(metrics['loss']):.3f}  "
               f"eval_acc={float(ev_acc):.3f}")
 print("done — per-round epsilon:",

@@ -53,4 +53,41 @@ python -m pytest -q \
     tests/test_privacy.py::test_epsilon_report_composes_scheme_budget \
     tests/test_fleet.py
 
+echo "== ISSUE 3 smoke: fused dp_mix round (>=1.5x + zero retraces) =="
+python - <<'EOF'
+from benchmarks.kernel_bench import _bench_dp_mix, _bench_dp_mix_retrace
+row = _bench_dp_mix()              # asserts the >= 1.5x fusion speedup
+print(row)
+row = _bench_dp_mix_retrace()
+print(row)
+assert float(row.split(",")[2]) == 1.0, f"dp_mix retraced: {row}"
+EOF
+
+echo "== ISSUE 3 smoke: exchange perf artifact (smoke shapes) =="
+python -m benchmarks.exchange_bench --smoke
+python - <<'EOF'
+import json
+# smoke writes its own file so it never clobbers the versioned full-run
+# BENCH_exchange.json trajectory artifact
+rep = json.load(open("BENCH_exchange_smoke.json"))
+assert {c["replicates"] for c in rep["cases"]} == {1, 8}, rep
+for c in rep["cases"]:
+    assert c["speedup"] > 1.0, c   # fused must not regress below unfused
+print("BENCH_exchange_smoke.json:",
+      ", ".join(f"R={c['replicates']}: {c['speedup']}x" for c in rep["cases"]))
+EOF
+
+echo "== ISSUE 3 smoke: flat-buffer training path =="
+python -m repro.launch.train \
+    --arch dwfl-paper --steps 10 --workers 6 --flat-buffer --eval-every 5
+python -m repro.launch.train \
+    --arch dwfl-paper --steps 10 --workers 6 \
+    --channel-model dynamic --scenario iot_dense --replicates 2 \
+    --flat-buffer --eval-every 5
+
+echo "== ISSUE 3 regression tests: unified exchange engine =="
+python -m pytest -q tests/test_exchange.py \
+    tests/test_dwfl.py::test_eval_fn_lm_next_token_accuracy
+python -m pytest -q tests/test_kernels.py -k "dp_mix or dp_perturb"
+
 echo "ci_check: OK"

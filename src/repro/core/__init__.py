@@ -1,6 +1,12 @@
-"""DWFL core: the paper's contribution (channel, privacy, protocol)."""
+"""DWFL core: the paper's contribution (channel, privacy, protocol) plus
+the unified mixing-matrix exchange engine (repro.core.exchange)."""
 from repro.core.channel import ChannelConfig, ChannelState  # noqa: F401
+from repro.core.exchange import (  # noqa: F401
+    ExchangeSpec, MixPlan, flatten_worker_tree, mix_exchange, resolve_spec,
+    worker_unravelers,
+)
 from repro.core.protocol import (  # noqa: F401
-    ProtocolConfig, make_train_step, make_eval_fn, init_worker_params,
-    epsilon_report,
+    ProtocolConfig, make_train_step, make_dynamic_train_step,
+    make_flat_train_step, make_dynamic_flat_train_step, make_eval_fn,
+    init_worker_params, epsilon_report,
 )

@@ -6,6 +6,13 @@ setting). The over-the-air aggregation Î£_k h_k xÌƒ_k is a sum over that axis â€
 XLA lowers it to ONE all-reduce, which is precisely the TPU realization of
 the paper's analog-MAC superposition (DESIGN.md Â§Hardware adaptation).
 
+Every exchange variant below is a named wrapper over the unified
+mixing-matrix engine (``repro.core.exchange.mix_exchange`` â€” Eqt. (8) as
+one primitive): each wrapper only builds the variant's ``W`` and
+per-receiver vectors (the taxonomy table in exchange.py) and delegates.
+The shard_map collective (``exchange_dwfl_collective``) is the same
+complete-graph update realized with a lax.psum instead of the matmul.
+
 Interpretation note (documented in DESIGN.md): the self-correction term
 Î¦_i^{(t,i)} of Eqt. (7) contains the receiver's own channel noise m_i, which
 a real worker cannot know. We implement the computable reading: worker i
@@ -19,148 +26,50 @@ noises cancel in the mean because each receiver subtracts what it injected
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import exchange as engine
 from repro.core.channel import ChannelState
+from repro.core.exchange import (ORTHOGONAL_GAIN_FLOOR, _leaf_keys,
+                                 channel_noise, dp_noise)
 
 Tree = object  # pytree alias
 
 
 # ---------------------------------------------------------------------------
-# noise generation
-# ---------------------------------------------------------------------------
-
-
-def _leaf_keys(key, tree):
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    keys = jax.random.split(key, len(leaves))
-    return jax.tree_util.tree_unflatten(treedef, list(keys))
-
-
-def dp_noise(key, X: Tree, chan) -> Tree:
-    """n_k = |h_k| sqrt(Î²_k P_k) * ð’¢_k,  ð’¢_k ~ N(0, ÏƒÂ²) i.i.d per entry.
-
-    X leaves are worker-stacked [W, ...]; the per-worker amplitude
-    broadcasts along the leading axis. ``chan`` may be the static
-    ChannelState (amplitudes are compile-time constants) or a traced
-    net.TracedChannelState (amplitudes are runtime arrays).
-    """
-    scale = (jnp.asarray(chan.noise_scale, jnp.float32)
-             * jnp.asarray(chan.dp_sigma, jnp.float32))
-
-    def one(k, x):
-        amp = scale.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
-        return (amp * jax.random.normal(k, x.shape, jnp.float32)).astype(x.dtype)
-
-    return jax.tree_util.tree_map(one, _leaf_keys(key, X), X)
-
-
-def channel_noise(key, X: Tree, sigma_m: float) -> Tree:
-    """m_i ~ N(0, Ïƒ_mÂ²) per receiver (leading axis) per entry."""
-    def one(k, x):
-        return (sigma_m * jax.random.normal(k, x.shape, jnp.float32)).astype(x.dtype)
-    return jax.tree_util.tree_map(one, _leaf_keys(key, X), X)
-
-
-# ---------------------------------------------------------------------------
-# exchanges (vectorized over the worker axis; pjit path)
+# exchanges (vectorized over the worker axis; pjit path) â€” engine wrappers
 # ---------------------------------------------------------------------------
 
 
 def exchange_dwfl(X: Tree, noise_n: Tree, noise_m: Tree,
                   chan, eta: float) -> Tree:
-    """One DWFL parameter exchange (Alg. 1 lines 6-9), Eqt. (5)-(7).
+    """One DWFL parameter exchange (Alg. 1 lines 6-9), Eqt. (5)-(7):
+    the complete-graph instance W = ((1) âˆ’ I)/(Nâˆ’1) of the engine,
 
-    v_i = c Î£_{kâ‰ i} x_k + Î£_{kâ‰ i} n_k + m_i
-    x_i â† x_i + (Î·/c) ( v_i/(N-1) âˆ’ c x_i âˆ’ n_i )
+        x_i â† x_i + Î· [ Î£_{kâ‰ i} (x_k + n_k/c)/(Nâˆ’1) + m_i/(c(Nâˆ’1))
+                        âˆ’ x_i âˆ’ n_i/c ]
 
     ``chan``: static ChannelState (c is a compile-time constant) or traced
     net.TracedChannelState (c is a runtime scalar â€” one compiled step
     serves every realization).
     """
-    N = chan.n_workers
-    c = chan.c
-
-    def one(x, n, m):
-        xf = x.astype(jnp.float32)
-        nf = n.astype(jnp.float32)
-        S_x = jnp.sum(xf, axis=0, keepdims=True)   # over-the-air superposition
-        S_n = jnp.sum(nf, axis=0, keepdims=True)   # (one all-reduce over workers)
-        v = c * (S_x - xf) + (S_n - nf) + m.astype(jnp.float32)
-        x_new = xf + (eta / c) * (v / (N - 1) - c * xf - nf)
-        return x_new.astype(x.dtype)
-
-    return jax.tree_util.tree_map(one, X, noise_n, noise_m)
-
-
-# Floor for the inverted per-link gain |h_j|âˆš(Î±_j P_j) in the orthogonal
-# baseline: a deep-fade draw (|h_j| â†’ 0) sends the gain to 0 and the
-# inverted AWGN std to infinity, poisoning the whole round with inf/NaN.
-# The clamp caps the noise inflation of any single link at 40 dB (power)
-# below the best link â€” beyond that a real receiver would declare the link
-# in outage rather than amplify pure noise.
-ORTHOGONAL_GAIN_FLOOR = 1e-2   # amplitude ratio to the best link (= -40 dB power)
+    return engine.run_mix(X, noise_n, noise_m, eta,
+                          engine.plan_complete(None, chan))
 
 
 def exchange_orthogonal(X: Tree, key, chan: ChannelState, eta: float) -> Tree:
-    """Orthogonal (pairwise digital-style) baseline: each link carries ONE
-    sender's signal, masked only by that sender's own noise (constant-in-N
-    privacy, Remark 4.1), plus per-link AWGN.
-
-    The receiver inverts the known per-sender gain, so the effective received
-    value is xÌ‚_j = x_j + (âˆšÎ²_j/âˆšÎ±_j) ð’¢_j + mÌƒ_ij. The mean over jâ‰ i of the
-    independent per-link AWGN terms is sampled directly (statistically
-    identical, avoids the O(WÂ²d) tensor). Communication: N-1 transmissions
-    per worker per round vs DWFL's single superposed one.
-    """
-    N = chan.n_workers
-    # sender-side effective noise after gain inversion (static channel only:
-    # the host-side float math below bakes these in at trace time)
-    inv_gain = jnp.asarray(
-        np.sqrt(chan.beta / np.maximum(chan.alpha, 1e-9)) * chan.dp_sigma, jnp.float32)
-    # per-link AWGN std after inversion, averaged over N-1 links; the
-    # inverted gain is clamped (ORTHOGONAL_GAIN_FLOOR relative to the best
-    # link) so one deep-fade |h| cannot blow the std up to inf
-    gain = chan.h * np.sqrt(chan.alpha * chan.P)
-    gain = np.maximum(gain, max(ORTHOGONAL_GAIN_FLOOR * float(np.max(gain)),
-                                1e-30))
-    link_std = chan.awgn_sigma / gain
-    mean_m_std = float(np.sqrt(np.mean(link_std ** 2) / (N - 1)))
-
-    def one(kk, x):
-        xf = x.astype(jnp.float32)
-        k1, k2 = jax.random.split(kk)
-        amp = inv_gain.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
-        xhat = xf + amp * jax.random.normal(k1, x.shape, jnp.float32)
-        S = jnp.sum(xhat, axis=0, keepdims=True)
-        neigh_mean = (S - xhat) / (N - 1)
-        neigh_mean = neigh_mean + mean_m_std * jax.random.normal(k2, x.shape, jnp.float32)
-        return (xf + eta * (neigh_mean - xf)).astype(x.dtype)
-
-    return jax.tree_util.tree_map(one, _leaf_keys(key, X), X)
+    """Orthogonal (pairwise digital-style) baseline â€” see
+    exchange.run_orthogonal (complete-graph W over gain-inverted signals,
+    c = 1, no self-correction)."""
+    return engine.run_orthogonal(X, key, chan, eta)
 
 
 def exchange_centralized(X: Tree, noise_n: Tree, key, chan: ChannelState) -> Tree:
-    """Centralized PS baseline (Seif et al. [11] style): all workers transmit
-    over the MAC to a parameter server, which rescales and broadcasts the
-    average. One over-the-air aggregation + noiseless downlink."""
-    N = chan.n_workers
-    c = chan.c
-
-    def one(kk, x, n):
-        xf = x.astype(jnp.float32)
-        v = c * jnp.sum(xf, axis=0, keepdims=True) + jnp.sum(
-            n.astype(jnp.float32), axis=0, keepdims=True)
-        m = chan.awgn_sigma * jax.random.normal(kk, v.shape, jnp.float32)
-        avg = (v + m) / (c * N)
-        return jnp.broadcast_to(avg, x.shape).astype(x.dtype)
-
-    return jax.tree_util.tree_map(one, _leaf_keys(key, X), X, noise_n)
+    """Centralized PS baseline (Seif et al. [11] style) â€” see
+    exchange.run_centralized (W = (1)/N, Î· = 1, shared PS AWGN)."""
+    return engine.run_centralized(X, noise_n, key, chan)
 
 
 def exchange_dwfl_topology(X: Tree, noise_n: Tree, noise_m: Tree,
@@ -169,26 +78,12 @@ def exchange_dwfl_topology(X: Tree, noise_n: Tree, noise_m: Tree,
     reading: worker i's over-the-air superposition covers its radio
     neighborhood N(i); see repro.core.topology).
 
-        v_i = c Î£_{kâˆˆN(i)} W_ik x_k + Î£_{kâˆˆN(i)} W_ik n_k + m_i/deg_i-scaled
-        x_i â† x_i + Î· ( v_i/c âˆ’ x_i âˆ’ n_i/c )
-
     Reduces exactly to exchange_dwfl for the complete graph. The self-noise
     subtraction keeps the DP noises zero-sum across receivers for ANY
     doubly-stochastic W (mean-descent Eqt. 9 still holds; test-verified).
     """
-    Wj = jnp.asarray(W, jnp.float32)
-    deg = jnp.asarray((W > 0).sum(1), jnp.float32)
-
-    def one(x, n, m):
-        xf = x.astype(jnp.float32)
-        nf = n.astype(jnp.float32) / chan.c
-        mixed = jnp.einsum("ij,j...->i...", Wj, xf + nf)
-        m_scaled = (m.astype(jnp.float32) / chan.c
-                    / deg.reshape((x.shape[0],) + (1,) * (x.ndim - 1)))
-        x_new = xf + eta * (mixed + m_scaled - xf - nf)
-        return x_new.astype(x.dtype)
-
-    return jax.tree_util.tree_map(one, X, noise_n, noise_m)
+    return engine.run_mix(X, noise_n, noise_m, eta,
+                          engine.plan_topology(None, chan, W_arg=W))
 
 
 def exchange_dwfl_dynamic(X: Tree, noise_n: Tree, noise_m: Tree,
@@ -197,34 +92,10 @@ def exchange_dwfl_dynamic(X: Tree, noise_n: Tree, noise_m: Tree,
     traced channel (repro.net): geometry/churn fold into W per round
     (net.geometry.metropolis_weights of the masked interference graph), the
     alignment constant c is a runtime scalar â€” one compiled step serves any
-    (W, chan) realization.
-
-        x_i â† x_i + Î· [ Î£_k W_ik (x_k + n_k/c) + mÌƒ_i âˆ’ x_i âˆ’ n_i/c ]
-
-    Workers with no active neighbors (churned out, or isolated by the
-    interference graph: W row = e_i) take NO update this round â€” they
-    neither hear the superposition nor its AWGN. The DP noises stay
-    zero-sum across receivers for any doubly-stochastic W (column sums 1 â‡’
-    Î£_i [W n/c]_i = Î£_i n_i/c, so the mean evolves per Eqt. (9) exactly
-    when Ïƒ_m = 0 â€” test_net.py::test_mean_descent_under_block_fading).
-    """
-    c = chan.c
-    Wj = jnp.asarray(W, jnp.float32)
-    off_deg = jnp.sum((Wj > 0) & ~jnp.eye(Wj.shape[0], dtype=bool), axis=1)
-    listening = (off_deg > 0).astype(jnp.float32)            # [N]
-    deg = jnp.maximum(off_deg.astype(jnp.float32), 1.0)
-
-    def one(x, n, m):
-        xf = x.astype(jnp.float32)
-        nf = n.astype(jnp.float32) / c
-        mixed = jnp.einsum("ij,j...->i...", Wj, xf + nf)
-        bshape = (x.shape[0],) + (1,) * (x.ndim - 1)
-        m_scaled = m.astype(jnp.float32) / c / deg.reshape(bshape)
-        upd = mixed + m_scaled - xf - nf
-        x_new = xf + eta * listening.reshape(bshape) * upd
-        return x_new.astype(x.dtype)
-
-    return jax.tree_util.tree_map(one, X, noise_n, noise_m)
+    (W, chan) realization. Workers with no active neighbors take NO update
+    this round (exchange.plan_dynamic's ``listen`` gate)."""
+    return engine.run_mix(X, noise_n, noise_m, eta,
+                          engine.plan_dynamic(None, chan, W_arg=W))
 
 
 def exchange_dwfl_sampled(X: Tree, noise_n: Tree, noise_m: Tree,
@@ -233,29 +104,16 @@ def exchange_dwfl_sampled(X: Tree, noise_n: Tree, noise_m: Tree,
     amplification by subsampling, Ã  la Seif-Tandon-Li [10]).
 
     ``participate``: bool [W] â€” workers in this round's transmit set S_t.
-    Receivers aggregate only transmitters (v_i over kâˆˆS_t, kâ‰ i) and mix
-    toward their mean; non-transmitters still receive and mix. A worker's
-    data influences the network only in rounds it transmits, so its
-    per-round privacy loss is amplified by the sampling rate q (reported by
-    privacy.epsilon_sampled).
-    """
-    c = chan.c
-    p = participate.astype(jnp.float32)
-    n_tx = jnp.maximum(jnp.sum(p), 2.0)
-
-    def one(x, n, m):
-        xf = x.astype(jnp.float32)
-        nf = n.astype(jnp.float32)
-        pb = p.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
-        S_x = jnp.sum(xf * pb, axis=0, keepdims=True)
-        S_n = jnp.sum(nf * pb, axis=0, keepdims=True)
-        # receiver i removes its own contribution only if it transmitted
-        v = c * (S_x - pb * xf) + (S_n - pb * nf) + m.astype(jnp.float32)
-        denom = jnp.maximum(n_tx - pb, 1.0)  # transmitters visible to i
-        x_new = xf + (eta / c) * (v / denom - c * xf - pb * nf)
-        return x_new.astype(x.dtype)
-
-    return jax.tree_util.tree_map(one, X, noise_n, noise_m)
+    Receivers aggregate only transmitters (W_ik = p_k(1âˆ’Î´_ik)/max(n_txâˆ’p_i,
+    1)) and mix toward their mean; non-transmitters still receive and mix,
+    and subtract their own DP noise only in rounds they transmitted
+    (self_scale = p). A worker's data influences the network only in rounds
+    it transmits, so its per-round privacy loss is amplified by the
+    sampling rate q (reported by privacy.epsilon_sampled)."""
+    W, p, denom = engine.sampled_W(participate)
+    return engine.mix_exchange(X, noise_n, noise_m, chan.c, eta, W,
+                               self_scale=p,
+                               m_scale=1.0 / (chan.c * denom))
 
 
 # ---------------------------------------------------------------------------
@@ -264,28 +122,38 @@ def exchange_dwfl_sampled(X: Tree, noise_n: Tree, noise_m: Tree,
 
 
 def matrix_form_reference(X_flat, G_flat, noise_n_flat, noise_m_flat,
-                          chan: ChannelState, gamma: float, eta: float):
+                          chan: ChannelState, gamma: float, eta: float,
+                          W=None):
     """Global-view update, Eqt. (8): X â† (X âˆ’ Î³G)Î¨ + Î¦(Î¨ âˆ’ I).
 
     X_flat, G_flat: [W, d] arrays (d = flattened params). The Î¦ matrix is
     built per receiver i with the computable-self-correction interpretation:
-    column k of Î¦^{(i)} is n_k/c + m_i/((N-1)c) for k â‰  i and n_i/c for
-    k = i. Returns [W, d].
+    column k of Î¦^{(i)} is n_k/c + m_i/(deg_iÂ·c) for k â‰  i and n_i/c for
+    k = i. ``W`` (optional [N, N], any doubly-stochastic mixing matrix)
+    defaults to the paper's complete graph ((1) âˆ’ I)/(Nâˆ’1); deg_i counts
+    receiver i's positive W entries (Nâˆ’1 on the complete graph). Returns
+    [W, d].
     """
-    W = chan.n_workers
+    N = chan.n_workers
     c = chan.c
-    Wmat = (np.ones((W, W)) - np.eye(W)) / (W - 1)
-    Psi = (1 - eta) * np.eye(W) + eta * Wmat
+    if W is None:
+        Wmat = (np.ones((N, N)) - np.eye(N)) / (N - 1)
+    else:
+        Wmat = np.asarray(W, np.float64)
+    deg = np.maximum((Wmat > 0).sum(1), 1)
+    Psi = (1 - eta) * np.eye(N) + eta * Wmat
 
-    X1 = X_flat - gamma * G_flat  # local step (line 4-5)
-    out = X1.T @ Psi  # [d, W]
+    X1 = np.asarray(X_flat, np.float64) - gamma * np.asarray(G_flat, np.float64)
+    out = Psi @ X1  # [W, d]: row i mixes over receiver i's neighborhood
 
-    # noise term per receiver i: Î· [ Î£_{kâ‰ i}(n_k + m_i/(N-1))/ (c(N-1)) âˆ’ n_i/c ]
-    res = np.zeros_like(X_flat)
-    for i in range(W):
-        S_other = (noise_n_flat.sum(0) - noise_n_flat[i])
-        noise_i = (eta / c) * ((S_other + noise_m_flat[i]) / (W - 1) - noise_n_flat[i])
-        res[i] = out[:, i] + noise_i
+    # noise term per receiver i:
+    #   Î· [ Î£_k W_ik n_k/c + m_i/(deg_iÂ·c) âˆ’ n_i/c ]
+    n = np.asarray(noise_n_flat, np.float64)
+    m = np.asarray(noise_m_flat, np.float64)
+    res = np.zeros_like(np.asarray(X_flat, np.float64))
+    for i in range(N):
+        noise_i = eta * ((Wmat[i] @ n) / c + m[i] / (deg[i] * c) - n[i] / c)
+        res[i] = out[i] + noise_i
     return res
 
 

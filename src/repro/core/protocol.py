@@ -3,20 +3,28 @@
 ``make_train_step`` composes: per-worker stochastic gradients (vmap over the
 worker axis) → gradient clipping to g_max → local SGD step (Alg. 1 line 5;
 optionally the fused Pallas dp_perturb kernel) → DP noise generation →
-parameter exchange (scheme-dependent) → metrics.
+parameter exchange → metrics. The exchange is dispatched through the
+unified mixing-matrix engine (repro.core.exchange.resolve_spec — ONE
+routing table for the static and dynamic steps; the scheme if/elif ladder
+is gone).
 
 Schemes:
     dwfl         — the paper's algorithm (over-the-air superposition)
     orthogonal   — pairwise transmission baseline (Remark 4.1 / Fig. 5)
     centralized  — PS over MAC baseline ([11] / Fig. 6)
     gossip       — noiseless decentralized averaging (σ = σ_m = 0 ablation)
+
+``make_flat_train_step`` / ``make_dynamic_flat_train_step`` are the
+flat-buffer twins: parameters live in ONE persistent [W, d] f32 buffer
+(exchange.flatten_worker_tree — ravel once at init, train flat, unravel
+only at eval/checkpoint) and the whole O(d) post-gradient pipeline is the
+fused Pallas dp_mix kernel (local step + on-chip noise + mixing matmul +
+self-correction + AWGN in one HBM pass).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import partial
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +32,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import dwfl, privacy
+from repro.core import exchange as exchange_lib
 from repro.core.channel import ChannelConfig, ChannelState
 from repro.models import model as M
 
@@ -67,6 +76,13 @@ class ProtocolConfig:
                                  # realizations through ONE compiled step
                                  # (repro.fleet.FleetEngine; launch/train.py
                                  # --replicates)
+    flat_buffer: bool = False    # train on the persistent flat [W, d]
+                                 # buffer with the fused dp_mix kernel
+                                 # (make_flat_train_step /
+                                 # make_dynamic_flat_train_step;
+                                 # launch/train.py --flat-buffer). Mixing-
+                                 # family schemes only (dwfl/gossip incl.
+                                 # topology/sampled/dynamic).
 
     def mixing_matrix(self):
         from repro.core import topology as topo
@@ -249,21 +265,12 @@ def _make_local_pass(cfg: ModelConfig, proto: ProtocolConfig):
 
 
 def _bucket(X):
-    """Worker-stacked pytree -> single [W, total] f32 leaf + unravel."""
-    leaves, treedef = jax.tree_util.tree_flatten(X)
-    shapes = [l.shape for l in leaves]
-    dtypes = [l.dtype for l in leaves]
-    flat = jnp.concatenate(
-        [l.reshape(l.shape[0], -1).astype(jnp.float32) for l in leaves], axis=1)
-
-    def unravel(f):
-        out, off = [], 0
-        for s, dt in zip(shapes, dtypes):
-            n = int(np.prod(s[1:]))
-            out.append(f[:, off:off + n].reshape(s).astype(dt))
-            off += n
-        return jax.tree_util.tree_unflatten(treedef, out)
-    return {"flat": flat}, unravel
+    """Worker-stacked pytree -> single [W, total] f32 leaf + unravel
+    (the per-round fuse_exchange path; the flat-buffer path flattens ONCE
+    at init instead — exchange.flatten_worker_tree)."""
+    flat = exchange_lib.flatten_worker_tree(X)
+    unravel_full, _ = exchange_lib.worker_unravelers(X)
+    return {"flat": flat}, unravel_full
 
 
 def _metrics(losses, gnorms, X):
@@ -287,12 +294,12 @@ def make_train_step(cfg: ModelConfig, proto: ProtocolConfig,
     Collective path (axis="data"): call under shard_map; leaves are local.
     """
     chan = proto.channel()
-    eta = proto.eta
+    spec = exchange_lib.resolve_spec(proto, axis)
     local_grads, local_step = _make_local_pass(cfg, proto)
 
     def step(worker_params, batch, key):
         """batch leaves: [W, per_worker_batch, ...]."""
-        k_n, k_m, k_x = jax.random.split(key, 3)
+        keys = jax.random.split(key, 3)
         losses, grads, gnorms = local_grads(worker_params, batch)
         X = local_step(worker_params, grads)
 
@@ -302,36 +309,10 @@ def make_train_step(cfg: ModelConfig, proto: ProtocolConfig,
             return X, _metrics(losses, gnorms, X)
 
         unravel = None
-        if proto.fuse_exchange and proto.scheme in ("dwfl", "gossip"):
+        if proto.fuse_exchange and spec.fuse_ok:
             X, unravel = _bucket(X)
 
-        if proto.scheme == "gossip":
-            zero_chan = chan.with_sigma(0.0)
-            n = jax.tree_util.tree_map(jnp.zeros_like, X)
-            m = jax.tree_util.tree_map(jnp.zeros_like, X)
-            X = dwfl.exchange_dwfl(X, n, m, dataclasses.replace(
-                zero_chan, cfg=dataclasses.replace(zero_chan.cfg, sigma_m=0.0)), eta)
-        elif proto.scheme == "dwfl":
-            n = dwfl.dp_noise(k_n, X, chan)
-            m = dwfl.channel_noise(k_m, X, proto.sigma_m)
-            if proto.topology != "complete":
-                X = dwfl.exchange_dwfl_topology(X, n, m, chan, eta,
-                                                proto.mixing_matrix())
-            elif proto.participation < 1.0:
-                mask = sample_participation(k_x, proto.n_workers,
-                                            proto.participation)
-                X = dwfl.exchange_dwfl_sampled(X, n, m, chan, eta, mask)
-            elif axis is not None:
-                X = dwfl.exchange_dwfl_collective(X, n, m, chan, eta, axis)
-            else:
-                X = dwfl.exchange_dwfl(X, n, m, chan, eta)
-        elif proto.scheme == "orthogonal":
-            X = dwfl.exchange_orthogonal(X, k_x, chan, eta)
-        elif proto.scheme == "centralized":
-            n = dwfl.dp_noise(k_n, X, chan)
-            X = dwfl.exchange_centralized(X, n, k_m, chan)
-        else:
-            raise ValueError(proto.scheme)
+        X = spec.run(X, keys, chan, proto, axis=axis)
 
         if unravel is not None:
             X = unravel(X["flat"])
@@ -357,25 +338,20 @@ def make_dynamic_train_step(cfg: ModelConfig, proto: ProtocolConfig) -> Callable
     Only scheme="dwfl" has dynamic semantics (the baselines are static-
     channel comparisons).
     """
-    if proto.scheme != "dwfl":
-        raise ValueError(f"dynamic channel model requires scheme='dwfl', "
-                         f"got {proto.scheme!r}")
-    eta = proto.eta
+    spec = exchange_lib.resolve_spec(proto, dynamic=True)
     local_grads, local_step = _make_local_pass(cfg, proto)
 
     def step(worker_params, batch, key, chan, W):
-        k_n, k_m = jax.random.split(key)
+        keys = jax.random.split(key)
         losses, grads, gnorms = local_grads(worker_params, batch)
         X = local_step(worker_params, grads)
         if proto.n_workers < 2:
             return X, _metrics(losses, gnorms, X)
 
         unravel = None
-        if proto.fuse_exchange:
+        if proto.fuse_exchange and spec.fuse_ok:
             X, unravel = _bucket(X)
-        n = dwfl.dp_noise(k_n, X, chan)
-        m = dwfl.channel_noise(k_m, X, chan.awgn_sigma)
-        X = dwfl.exchange_dwfl_dynamic(X, n, m, chan, eta, W)
+        X = spec.run(X, keys, chan, proto, W=W)
         if unravel is not None:
             X = unravel(X["flat"])
         return X, _metrics(losses, gnorms, X)
@@ -383,15 +359,128 @@ def make_dynamic_train_step(cfg: ModelConfig, proto: ProtocolConfig) -> Callable
     return step
 
 
+# ---------------------------------------------------------------------------
+# flat-buffer path: persistent [W, d] params + the fused dp_mix round
+# ---------------------------------------------------------------------------
+
+
+def _make_flat_local_pass(cfg: ModelConfig, proto: ProtocolConfig,
+                          unravel_row):
+    """Per-worker clipped gradients ON THE FLAT BUFFER: each worker's loss
+    is a function of its flat [d] row (autodiff carries the ravel — no
+    explicit per-round concatenate), and the L2 clip is one vector norm."""
+    clip = proto.clip
+
+    def local_grads(flat, batch):
+        def one(fv, b):
+            loss, g = jax.value_and_grad(
+                lambda v: M.loss_fn(unravel_row(v), b, cfg))(fv)
+            g, gnorm = privacy.clip_gradient_tree(g, clip)
+            return loss, g, gnorm
+        return jax.vmap(one)(flat, batch)
+
+    return local_grads
+
+
+def _flat_metrics(losses, gnorms, flat):
+    return {
+        "loss": jnp.mean(losses),
+        "grad_norm": jnp.mean(gnorms),
+        "param_norm": jnp.sqrt(jnp.sum(flat.astype(jnp.float32) ** 2)),
+    }
+
+
+def _flat_spec(proto: ProtocolConfig, dynamic: bool,
+               axis=None) -> "exchange_lib.ExchangeSpec":
+    spec = exchange_lib.resolve_spec(proto, axis, dynamic=dynamic)
+    if spec.plan is None:
+        raise ValueError(
+            f"flat-buffer training supports the mixing-family exchanges "
+            f"only (dwfl/gossip incl. topology/sampled/dynamic); "
+            f"spec {spec.name!r} has no fused plan")
+    return spec
+
+
+def make_flat_train_step(cfg: ModelConfig, proto: ProtocolConfig,
+                         unravel_row) -> Callable:
+    """Flat-buffer twin of make_train_step (STATIC channel):
+
+        step(flat, batch, key) -> (flat', metrics)      # flat: [W, d] f32
+
+    ``unravel_row`` maps one flat row to one worker's pytree
+    (exchange.worker_unravelers) — used only inside the grad vmap; the
+    O(d) post-gradient pipeline is ONE fused dp_mix kernel call.
+    """
+    from repro.kernels.dp_mix import ops as mix_ops
+    chan = proto.channel()
+    spec = _flat_spec(proto, dynamic=False)
+    local_grads = _make_flat_local_pass(cfg, proto, unravel_row)
+    gamma, eta = proto.gamma, proto.eta
+
+    def step(flat, batch, key):
+        k_n, k_m, k_x = jax.random.split(key, 3)
+        losses, g, gnorms = local_grads(flat, batch)
+        if proto.n_workers < 2:
+            flat = flat - gamma * g
+            return flat, _flat_metrics(losses, gnorms, flat)
+        plan = spec.plan(proto, chan, k_x)
+        flat = mix_ops.dp_mix_round_plan(
+            flat, g, mix_ops.seed_from_key(k_n), plan, gamma=gamma, eta=eta)
+        return flat, _flat_metrics(losses, gnorms, flat)
+
+    return step
+
+
+def make_dynamic_flat_train_step(cfg: ModelConfig, proto: ProtocolConfig,
+                                 unravel_row) -> Callable:
+    """Flat-buffer twin of make_dynamic_train_step (repro.net):
+
+        step(flat, batch, key, chan, W) -> (flat', metrics)
+
+    ``chan``/``W`` are traced per-round arguments (NetworkSimulator.round);
+    the fused kernel takes every channel quantity as an operand, so one
+    compiled step serves every realization with zero retraces."""
+    from repro.kernels.dp_mix import ops as mix_ops
+    spec = _flat_spec(proto, dynamic=True)
+    local_grads = _make_flat_local_pass(cfg, proto, unravel_row)
+    gamma, eta = proto.gamma, proto.eta
+
+    def step(flat, batch, key, chan, W):
+        k_n, k_x = jax.random.split(key)
+        losses, g, gnorms = local_grads(flat, batch)
+        if proto.n_workers < 2:
+            flat = flat - gamma * g
+            return flat, _flat_metrics(losses, gnorms, flat)
+        plan = spec.plan(proto, chan, k_x, W_arg=W)
+        flat = mix_ops.dp_mix_round_plan(
+            flat, g, mix_ops.seed_from_key(k_n), plan, gamma=gamma, eta=eta)
+        return flat, _flat_metrics(losses, gnorms, flat)
+
+    return step
+
+
 def make_eval_fn(cfg: ModelConfig) -> Callable:
+    """Per-worker eval: mean loss + mean accuracy. Accuracy is computed
+    whenever the model emits classification logits against labels the
+    batch actually carries (the mlp classifier's "y", explicit "labels",
+    or the LM next-token targets); when it genuinely can't be defined the
+    fn returns NaN — NOT a silent 0.0 that reads as a broken model."""
     def evaluate(worker_params, batch):
         def one(p, b):
             loss = M.loss_fn(p, b, cfg)
-            if cfg.family == "mlp":
-                logits, _ = M.forward(p, b, cfg)[0], None
-                acc = jnp.mean((jnp.argmax(logits, -1) == b["y"]).astype(jnp.float32))
+            logits, _, _ = M.forward(p, b, cfg)
+            if "y" in b:                      # classifier: logits [B, C]
+                acc = jnp.mean((jnp.argmax(logits, -1) == b["y"])
+                               .astype(jnp.float32))
+            elif "labels" in b:
+                acc = jnp.mean((jnp.argmax(logits, -1) == b["labels"])
+                               .astype(jnp.float32))
+            elif "tokens" in b:               # LM: next-token accuracy
+                acc = jnp.mean(
+                    (jnp.argmax(logits[:, :-1], -1) == b["tokens"][:, 1:])
+                    .astype(jnp.float32))
             else:
-                acc = jnp.float32(0.0)
+                acc = jnp.float32(jnp.nan)
             return loss, acc
         losses, accs = jax.vmap(one)(worker_params, batch)
         return jnp.mean(losses), jnp.mean(accs)

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import exchange as exchange_lib
 from repro.core import protocol as protocol_lib
 from repro.core.channel import dbm_to_watts
 from repro.net.simulator import NetState
@@ -139,20 +140,43 @@ class FleetEngine:
             lambda k: protocol_lib.init_worker_params(k, cfg, self.proto.n_workers)
         )(self.split_keys(key))
 
-    def make_fleet_step(self, cfg, mesh=None, axis: str = "replicas"):
+    def init_flat_params(self, key, cfg):
+        """Flat-buffer fleet params: ([R, W, d] f32 buffer, unravel,
+        unravel_row). Raveled ONCE here (exchange.flatten_worker_tree,
+        lead_axes=2); ``unravel`` recovers the [R, W, ...] pytree at
+        eval/checkpoint, ``unravel_row`` one worker's tree inside the grad
+        vmap of the fused step."""
+        wp = self.init_worker_params(key, cfg)
+        flat = exchange_lib.flatten_worker_tree(wp, lead_axes=2)
+        unravel, unravel_row = exchange_lib.worker_unravelers(wp, lead_axes=2)
+        return flat, unravel, unravel_row
+
+    def make_fleet_step(self, cfg, mesh=None, axis: str = "replicas",
+                        flat: bool = False, unravel_row=None):
         """The batched round:
 
             step(worker_params, batch, keys, chans, Ws)
                 -> (worker_params', metrics)     # every leaf [R, ...]
 
-        vmap of protocol.make_dynamic_train_step over the replicate axis.
-        With ``mesh`` (optional, 1-axis jax mesh), the same program is
-        wrapped in shard_map instead, splitting R over the mesh devices
-        (R % |mesh| must be 0); replicates never communicate, so in/out
-        specs are plain leading-axis shards and the body stays the vmapped
-        step on the local R/|mesh| slab.
+        vmap of protocol.make_dynamic_train_step over the replicate axis —
+        or, with ``flat=True`` (pass the ``unravel_row`` from
+        init_flat_params), of the fused flat-buffer step
+        protocol.make_dynamic_flat_train_step: worker_params is then the
+        [R, W, d] buffer and the whole per-replicate O(d) pipeline is one
+        vmapped dp_mix kernel call. With ``mesh`` (optional, 1-axis jax
+        mesh), the same program is wrapped in shard_map instead, splitting
+        R over the mesh devices (R % |mesh| must be 0); replicates never
+        communicate, so in/out specs are plain leading-axis shards and the
+        body stays the vmapped step on the local R/|mesh| slab.
         """
-        base = protocol_lib.make_dynamic_train_step(cfg, self.proto)
+        if flat:
+            if unravel_row is None:
+                raise ValueError("flat=True requires the unravel_row from "
+                                 "init_flat_params")
+            base = protocol_lib.make_dynamic_flat_train_step(
+                cfg, self.proto, unravel_row)
+        else:
+            base = protocol_lib.make_dynamic_train_step(cfg, self.proto)
         batched = jax.vmap(base)
         if mesh is None:
             return batched
@@ -170,7 +194,8 @@ class FleetEngine:
                          in_specs=(spec, spec, spec, spec, spec),
                          out_specs=(spec, spec), check_rep=False)
 
-    def make_fleet_round(self, cfg, mesh=None):
+    def make_fleet_round(self, cfg, mesh=None, flat: bool = False,
+                         unravel_row=None):
         """Network advance + train step as ONE jittable call (what the
         sweep driver and launch/train.py --replicates actually run):
 
@@ -178,9 +203,12 @@ class FleetEngine:
                 -> (states', worker_params', metrics, chans, Ws)
 
         A single dispatch per round for the whole fleet — the unit the
-        ≥3×-vs-Python-loop acceptance benchmark times.
+        ≥3×-vs-Python-loop acceptance benchmark times. ``flat=True``:
+        worker_params is the persistent [R, W, d] buffer
+        (init_flat_params) and the round runs the fused dp_mix kernel.
         """
-        step = self.make_fleet_step(cfg, mesh=mesh)
+        step = self.make_fleet_step(cfg, mesh=mesh, flat=flat,
+                                    unravel_row=unravel_row)
 
         def fleet_round(key, states, worker_params, batch):
             k_net, k_step = jax.random.split(key)

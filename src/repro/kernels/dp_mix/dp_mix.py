@@ -1,0 +1,167 @@
+"""Pallas TPU kernel: the fused DWFL round — the protocol's entire O(d)
+post-gradient pipeline in ONE HBM pass over the flat [N, d] parameter
+buffer.
+
+Fuses (per column block of the unified engine update, exchange.py):
+
+    x   = p − γ g                                   local SGD step
+    n/c = (amp/c)·𝒢,  m = σ_m·𝒢'                   on-chip DP + AWGN noise
+    mix = W @ (x + n/c)                             [N,N]×[N,BD] MXU matmul
+    out = x + η·listen·[mix + m_scale·m − x − self·(n/c)]
+
+replacing the unfused chain (per-leaf PRNG tree_map → bucket concatenate →
+einsum exchange → unravel): 3+ HBM passes and two threefry sweeps become
+one pass. Gaussians come from inverse-CDF sampling (√2·erf⁻¹(2u−1), a
+cheap rational polynomial — ~4× faster than Box-Muller's log/cos/sin on
+CPU and MXU-friendly on TPU) over 24-bit uniforms in the OPEN interval
+(0, 1), drawn from the Pallas TPU PRNG (pltpu.prng_seed /
+prng_random_bits) seeded per (call, program).
+
+Grid: 1-D over column blocks of the flat buffer; each program handles the
+full worker axis (N is small — padded to the f32 sublane multiple) times a
+(BLOCK_D)-column VMEM tile, so the [N, N] mixing matrix stays resident.
+All channel quantities (c, σ_m, per-worker amplitudes, the mixing matrix
+itself) are runtime OPERANDS — one compiled kernel serves every fading /
+geometry / churn realization with zero retraces.
+
+Off-TPU the SAME math runs as a plain fused-jnp program
+(``dp_mix_fused_jnp`` — the counter-hash generator substitutes the TPU
+PRNG with identical statistics); the Pallas body itself remains executable
+under interpret=True and is validated against the jnp lowering and ref.py
+in tests.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.dp_perturb.dp_perturb import _hash_bits
+
+LANES = 128     # last-dim tile multiple (f32)
+SUBLANES = 8    # worker-axis pad multiple (f32 sublane)
+
+
+def _normal_from_bits(bits):
+    """uint32 -> standard normal f32 via the inverse CDF: the 24-bit count
+    k maps to the symmetric lattice t = (k − (2²³ − ½))/2²³ — every point
+    is EXACTLY representable in f32 (half-integer numerator ≤ 2²⁴, power-
+    of-two denominator), so |t| ≤ 1 − 2⁻²⁴ strictly and erf⁻¹ never sees
+    ±1 (the naive (k + ½)/2²⁴ lattice ROUNDS to 1.0 at the top point and
+    erf⁻¹(1) = inf — one poisoned draw per ~16M). Tails truncate at
+    ≈ 5.4σ, the resolution of any 24-bit inverse-CDF sampler."""
+    t = ((bits >> 8).astype(jnp.float32) - (float(1 << 23) - 0.5)) \
+        * (1.0 / (1 << 23))
+    return math.sqrt(2.0) * jax.lax.erf_inv(t)
+
+
+def _normal_pair_hash(shape, d_padded, col0, seed):
+    """Two INDEPENDENT standard-normal fields from the counter-hash
+    generator (CPU path / interpret mode): element (i, j) of block column
+    offset ``col0`` draws from global counters 2·idx and 2·idx+1."""
+    rows = jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+    idx = (rows * jnp.uint32(d_padded)
+           + jnp.asarray(col0).astype(jnp.uint32) + cols)
+    g1 = _normal_from_bits(_hash_bits(idx * jnp.uint32(2), seed))
+    g2 = _normal_from_bits(_hash_bits(idx * jnp.uint32(2) + jnp.uint32(1),
+                                      seed))
+    return g1, g2
+
+
+def _round_math(p, g, normal_pair, c, sigma_m, amp, selfs, mscale, listen, w,
+                *, gamma, eta, noisy):
+    """The fused-round arithmetic, shared verbatim by the Pallas kernel
+    body and the jnp lowering. All vector args are [N]-columns already
+    reshaped to [N, 1]; ``normal_pair`` lazily yields the two noise
+    fields."""
+    x = p - gamma * g
+    if noisy:
+        g_n, g_m = normal_pair()
+        nf = (amp / c) * g_n                 # n/c: pre-scaled DP noise
+        z = x + nf
+        mixed = jnp.dot(w, z, preferred_element_type=jnp.float32)
+        upd = mixed + mscale * (sigma_m * g_m) - x - selfs * nf
+    else:
+        mixed = jnp.dot(w, x, preferred_element_type=jnp.float32)
+        upd = mixed - x
+    return x + eta * listen * upd
+
+
+def _dp_mix_kernel(seed_ref, scal_ref, amp_ref, selfs_ref, mscale_ref,
+                   listen_ref, w_ref, p_ref, g_ref, out_ref, *,
+                   gamma, eta, noisy, d_padded, interpret):
+    pid = pl.program_id(0)
+    p = p_ref[...].astype(jnp.float32)       # [Np, BD]
+    g = g_ref[...].astype(jnp.float32)
+    col = lambda v: v[...].reshape(p.shape[0], 1)
+
+    def normal_pair():
+        if interpret:
+            return _normal_pair_hash(p.shape, d_padded, pid * p.shape[1],
+                                     seed_ref[0])
+        from jax.experimental.pallas import tpu as pltpu
+        # hash-mix pid into the seed (NOT seed + pid: with a ~1000-program
+        # grid, additive seeding lets nearby round seeds reproduce
+        # bitwise-identical DP-noise blocks across rounds/replicates,
+        # breaking the independent-Gaussian assumption of the accounting)
+        pltpu.prng_seed(_hash_bits(pid, seed_ref[0]).astype(jnp.int32))
+        b1 = pltpu.prng_random_bits(p.shape).astype(jnp.uint32)
+        b2 = pltpu.prng_random_bits(p.shape).astype(jnp.uint32)
+        return _normal_from_bits(b1), _normal_from_bits(b2)
+
+    out = _round_math(p, g, normal_pair, scal_ref[0], scal_ref[1],
+                      col(amp_ref), col(selfs_ref), col(mscale_ref),
+                      col(listen_ref), w_ref[...].astype(jnp.float32),
+                      gamma=gamma, eta=eta, noisy=noisy)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def dp_mix_2d(p2, g2, seed, scal, amp, selfs, mscale, listen, W, *,
+              gamma, eta, noisy, block_d, interpret=True):
+    """Pallas entry point. p2, g2: [Np, Dp] padded views (Np multiple of
+    SUBLANES, Dp multiple of block_d). Vector operands are [Np]; ``scal``
+    = [c, σ_m]. Returns the updated [Np, Dp] buffer (same dtype as p2)."""
+    Np, Dp = p2.shape
+    grid = (Dp // block_d,)
+    kernel = functools.partial(
+        _dp_mix_kernel, gamma=gamma, eta=eta, noisy=noisy, d_padded=Dp,
+        interpret=interpret)
+    vec = pl.BlockSpec((Np,), lambda i: (0,))
+    tile = pl.BlockSpec((Np, block_d), lambda i: (0, i))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),    # seed
+            pl.BlockSpec((2,), lambda i: (0,)),    # (c, sigma_m)
+            vec, vec, vec, vec,                    # amp, self, m_scale, listen
+            pl.BlockSpec((Np, Np), lambda i: (0, 0)),  # W
+            tile, tile,
+        ],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct(p2.shape, p2.dtype),
+        interpret=interpret,
+    )(seed, scal, amp, selfs, mscale, listen, W, p2, g2)
+
+
+def dp_mix_fused_jnp(p2, g2, seed, scal, amp, selfs, mscale, listen, W, *,
+                     gamma, eta, noisy):
+    """The CPU lowering: identical arithmetic and identical counter-hash
+    noise to the interpret-mode kernel run as ONE program (grid=1), minus
+    the Pallas interpreter overhead — bitwise the same draws, so the two
+    paths cross-validate (tests/test_kernels.py)."""
+    Np, Dp = p2.shape
+    p = p2.astype(jnp.float32)
+    g = g2.astype(jnp.float32)
+    col = lambda v: v.reshape(Np, 1)
+    normal_pair = lambda: _normal_pair_hash((Np, Dp), Dp, 0,
+                                            seed.reshape(-1)[0])
+    out = _round_math(p, g, normal_pair, scal[0], scal[1], col(amp),
+                      col(selfs), col(mscale), col(listen),
+                      jnp.asarray(W, jnp.float32),
+                      gamma=gamma, eta=eta, noisy=noisy)
+    return out.astype(p2.dtype)

@@ -1,0 +1,113 @@
+"""Jitted wrappers for the dp_mix kernel: flat-buffer and MixPlan APIs.
+
+``dp_mix_round`` consumes the persistent flat [N, d] parameter buffer
+(exchange.flatten_worker_tree) directly — no per-round concatenate, no
+per-leaf PRNG tree_map. Channel quantities are runtime operands, so one
+compiled call serves every realization (zero retraces — asserted by the
+``dp_mix/retrace`` kernel-bench case). Implementation dispatch (``impl``):
+the Pallas kernel on TPU, its bitwise-equivalent fused-jnp lowering on
+CPU, and the Pallas interpreter on demand for kernel validation.
+
+Dtype contract (shared with dp_perturb): the output buffer has the INPUT
+buffer's dtype — internal arithmetic is f32, results cast back once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dp_mix import dp_mix as K
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _roundup(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def seed_from_key(key) -> jnp.ndarray:
+    """PRNG key → int32 scalar kernel seed (traced; works for typed keys
+    and raw uint32 key arrays)."""
+    try:
+        if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+            key = jax.random.key_data(key)
+    except TypeError:  # pragma: no cover - exotic key reprs
+        pass
+    return key.reshape(-1)[-1].astype(jnp.int32)
+
+
+def _pad_vec(v, N, Np, fill=0.0):
+    v = jnp.asarray(v, jnp.float32)
+    if v.ndim == 0:
+        v = jnp.full((N,), v, jnp.float32)
+    return jnp.pad(v, (0, Np - N), constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "eta", "noisy",
+                                             "block_d", "impl"))
+def dp_mix_round(p, g, seed, W, amp, c, sigma_m, *, gamma: float, eta: float,
+                 self_scale=None, m_scale=None, listen=None,
+                 noisy: bool = True, block_d=None, impl=None):
+    """One fused DWFL round over the flat buffer.
+
+    p, g: [N, d] (params / clipped grads, any float dtype — preserved).
+    seed: int32 scalar (see ``seed_from_key``). W: [N, N] mixing matrix.
+    amp: [N] DP-noise amplitude |h_k|√(β_k P_k)·σ (exchange.mix_noise_amp).
+    c / sigma_m: alignment constant and AWGN std (scalars, may be traced).
+    self_scale / m_scale / listen: the unified-engine per-receiver vectors
+    (defaults: full self-correction, complete-graph AWGN scaling
+    1/(c·(N−1)), everyone listening). noisy=False skips the on-chip PRNG
+    entirely (gossip).
+
+    impl: None (auto: "pallas" on TPU, "jnp" elsewhere) | "pallas" |
+    "pallas_interpret" (the Pallas body executed by the interpreter —
+    slow; kernel-validation only) | "jnp" (the fused-jnp CPU lowering,
+    bitwise-identical draws to "pallas_interpret").
+    """
+    N, d = p.shape
+    if impl is None:
+        impl = "pallas" if _on_tpu() else "jnp"
+    Np = _roundup(N, K.SUBLANES)
+    if block_d is None:
+        # one program off-TPU (no grid to amortize); a fixed VMEM-sized
+        # tile on TPU
+        block_d = 4 * K.LANES if impl == "pallas" else _roundup(d, K.LANES)
+    Dp = _roundup(d, block_d)
+
+    p2 = jnp.pad(p, ((0, Np - N), (0, Dp - d)))
+    g2 = jnp.pad(g, ((0, Np - N), (0, Dp - d)))
+    W2 = jnp.pad(jnp.asarray(W, jnp.float32), ((0, Np - N), (0, Np - N)))
+    c = jnp.asarray(c, jnp.float32).reshape(())
+    scal = jnp.stack([c, jnp.asarray(sigma_m, jnp.float32).reshape(())])
+    amp2 = _pad_vec(amp, N, Np)
+    selfs = _pad_vec(1.0 if self_scale is None else self_scale, N, Np)
+    if m_scale is None:
+        m_scale = jnp.full((N,), 1.0, jnp.float32) / (c * max(N - 1, 1))
+    mscale = _pad_vec(m_scale, N, Np)
+    # padded rows must stay exactly x (= 0): they don't listen
+    lst = _pad_vec(1.0 if listen is None else listen, N, Np)
+    seed = jnp.asarray(seed, jnp.int32).reshape(1)
+
+    if impl == "jnp":
+        out2 = K.dp_mix_fused_jnp(p2, g2, seed, scal, amp2, selfs, mscale,
+                                  lst, W2, gamma=gamma, eta=eta, noisy=noisy)
+    else:
+        out2 = K.dp_mix_2d(p2, g2, seed, scal, amp2, selfs, mscale, lst, W2,
+                           gamma=gamma, eta=eta, noisy=noisy,
+                           block_d=block_d,
+                           interpret=(impl == "pallas_interpret"))
+    return out2[:N, :d].astype(p.dtype)
+
+
+def dp_mix_round_plan(p, g, seed, plan, *, gamma: float, eta: float,
+                      impl=None):
+    """MixPlan front end (exchange.plan_* → one fused round)."""
+    return dp_mix_round(
+        p, g, seed, plan.W, plan.amp, plan.c, plan.sigma_m,
+        gamma=gamma, eta=eta, self_scale=plan.self_scale,
+        m_scale=plan.m_scale, listen=plan.listen, noisy=plan.noisy,
+        impl=impl)

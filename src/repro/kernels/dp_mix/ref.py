@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the fused dp_mix round (the unified engine update of
+exchange.py on a flat [N, d] buffer).
+
+The unfused pipeline makes 3+ passes over the O(d) parameter buffer:
+    1. x = p − γ g                         (local SGD step)
+    2. n = amp·𝒢,  m = σ_m·𝒢'             (two threefry PRNG sweeps)
+    3. x ← x + η·listen·[W(x + n/c) + m_scale·m − x − self·(n/c)]
+The kernel (dp_mix.py) fuses these into one HBM pass with on-chip PRNG.
+This oracle shares the kernel's exact arithmetic but draws its noise with
+jax.random — the kernel is validated against it in moments (and exactly on
+the deterministic path), and against dwfl.matrix_form_reference for the
+mixing math.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _defaults(N, c, self_scale, m_scale, listen):
+    if self_scale is None:
+        self_scale = jnp.ones((N,), jnp.float32)
+    if m_scale is None:
+        m_scale = jnp.full((N,), 1.0, jnp.float32) / (c * max(N - 1, 1))
+    if listen is None:
+        listen = jnp.ones((N,), jnp.float32)
+    return (jnp.asarray(self_scale, jnp.float32),
+            jnp.asarray(m_scale, jnp.float32),
+            jnp.asarray(listen, jnp.float32))
+
+
+def dp_mix_round_ref(p, g, key, W, amp, c, sigma_m, *, gamma, eta,
+                     self_scale=None, m_scale=None, listen=None,
+                     noisy: bool = True):
+    """Returns the post-round flat buffer [N, d] (same dtype as ``p``)."""
+    N = p.shape[0]
+    x = p.astype(jnp.float32) - gamma * g.astype(jnp.float32)
+    Wj = jnp.asarray(W, jnp.float32)
+    selfs, mscale, lst = _defaults(N, c, self_scale, m_scale, listen)
+    if noisy:
+        k_n, k_m = jax.random.split(key)
+        amp = jnp.asarray(amp, jnp.float32)
+        nf = (amp[:, None] / c) * jax.random.normal(k_n, x.shape, jnp.float32)
+        m = sigma_m * jax.random.normal(k_m, x.shape, jnp.float32)
+        mixed = Wj @ (x + nf)
+        upd = mixed + mscale[:, None] * m - x - selfs[:, None] * nf
+    else:
+        upd = Wj @ x - x
+    out = x + eta * lst[:, None] * upd
+    return out.astype(p.dtype)

@@ -58,7 +58,9 @@ def _dp_perturb_kernel(seed_ref, p_ref, g_ref, x_ref, xt_ref, *,
             u2 = _uniform_from_bits(_hash_bits(base + idx + jnp.uint32(n), seed_ref[0]))
         else:
             from jax.experimental.pallas import tpu as pltpu
-            pltpu.prng_seed(seed_ref[0] + pid)
+            # hash-mix pid into the seed — additive seed+pid lets nearby
+            # call seeds replay identical noise blocks across calls
+            pltpu.prng_seed(_hash_bits(pid, seed_ref[0]).astype(jnp.int32))
             u1 = _uniform_from_bits(pltpu.prng_random_bits(shape).astype(jnp.uint32))
             u2 = _uniform_from_bits(pltpu.prng_random_bits(shape).astype(jnp.uint32))
         # Box-Muller

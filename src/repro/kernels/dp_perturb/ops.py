@@ -59,4 +59,7 @@ def dp_perturb(p, g, seed, *, gamma: float, sigma: float,
     seed = jnp.asarray(seed, jnp.int32).reshape(1)
     x2, xt2 = K.dp_perturb_2d(p2, g2, seed, gamma=gamma, sigma=sigma,
                               s_sig=s_sig, s_noise=s_noise, interpret=interpret)
-    return _from_2d(x2, n, p.shape), _from_2d(xt2, n, p.shape)
+    # dtype contract (shared with dp_mix): outputs carry p's dtype — made
+    # explicit here rather than inherited from the padded view's dtype
+    return (_from_2d(x2, n, p.shape).astype(p.dtype),
+            _from_2d(xt2, n, p.shape).astype(p.dtype))

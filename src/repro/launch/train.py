@@ -65,6 +65,11 @@ def main(argv=None):
                          "realizations through one compiled step "
                          "(repro.fleet); metrics/privacy report mean±CI "
                          "across replicates")
+    ap.add_argument("--flat-buffer", action="store_true",
+                    help="train on the persistent flat [W, d] parameter "
+                         "buffer with the fused Pallas dp_mix round "
+                         "(ravel once at init, train flat, unravel only "
+                         "at eval/checkpoint); dwfl/gossip schemes only")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--checkpoint", default=None)
@@ -86,7 +91,11 @@ def main(argv=None):
         clip=args.clip, sigma=args.sigma, sigma_m=args.sigma_m,
         p_dbm=args.p_dbm, seed=args.seed, target_epsilon=args.epsilon,
         channel_model=args.channel_model, scenario=args.scenario,
-        coherence_rounds=args.coherence_rounds, replicates=args.replicates)
+        coherence_rounds=args.coherence_rounds, replicates=args.replicates,
+        flat_buffer=args.flat_buffer)
+    if proto.flat_buffer and args.scheme not in ("dwfl", "gossip"):
+        raise SystemExit("--flat-buffer supports the mixing-family schemes "
+                         "only (dwfl/gossip)")
     sim, fleet = None, None
     if args.replicates > 1:
         from repro.fleet import FleetEngine
@@ -119,21 +128,34 @@ def main(argv=None):
         batcher = LMBatcher(toks, W, args.batch_size, args.seq_len,
                             seed=args.seed)
 
+    # unravel: flat-buffer mode only — maps the persistent [.., W, d] buffer
+    # back to the worker-stacked pytree at eval/checkpoint time
+    unravel = unravel_row = None
     if fleet is not None:
-        wp = fleet.init_worker_params(key, cfg)
+        if proto.flat_buffer:
+            wp, unravel, unravel_row = fleet.init_flat_params(key, cfg)
+        else:
+            wp = fleet.init_worker_params(key, cfg)
         n_params = (sum(int(x.size) for x in jax.tree_util.tree_leaves(wp))
                     // (W * fleet.replicates))
     else:
         wp = P.init_worker_params(key, cfg, W)
         n_params = sum(int(x.size) for x in jax.tree_util.tree_leaves(wp)) // W
-    print(f"[train] params/worker: {n_params/1e6:.2f}M")
+        if proto.flat_buffer:
+            from repro.core import exchange as X
+            unravel, unravel_row = X.worker_unravelers(wp)
+            wp = X.flatten_worker_tree(wp)
+    print(f"[train] params/worker: {n_params/1e6:.2f}M"
+          + (" (flat dp_mix buffer)" if proto.flat_buffer else ""))
 
     if fleet is not None:
         # ONE jitted call advances all R networks: net evolution + train
         # step fused (repro.fleet.FleetEngine.make_fleet_round); donate the
         # threaded state/params like the single-network paths do
-        fleet_round = jax.jit(fleet.make_fleet_round(cfg),
-                              donate_argnums=(1, 2))
+        fleet_round = jax.jit(
+            fleet.make_fleet_round(cfg, flat=proto.flat_buffer,
+                                   unravel_row=unravel_row),
+            donate_argnums=(1, 2))
         key, nk = jax.random.split(key)
         net_state = fleet.init(nk)
         chan_log, w_log = [], []
@@ -146,15 +168,28 @@ def main(argv=None):
                 lambda *xs: jnp.stack(xs),
                 *[batcher.next() for _ in range(fleet.replicates)])
     elif sim is not None:
-        step = jax.jit(P.make_dynamic_train_step(cfg, proto), donate_argnums=0)
+        mk = (lambda: P.make_dynamic_flat_train_step(cfg, proto, unravel_row)
+              ) if proto.flat_buffer else (
+              lambda: P.make_dynamic_train_step(cfg, proto))
+        step = jax.jit(mk(), donate_argnums=0)
         net_round = jax.jit(sim.round)
         key, nk = jax.random.split(key)
         net_state = sim.init(nk)
         chan_log, w_log = [], []
         evaluate = jax.jit(P.make_eval_fn(cfg))
     else:
-        step = jax.jit(P.make_train_step(cfg, proto), donate_argnums=0)
+        mk = (lambda: P.make_flat_train_step(cfg, proto, unravel_row)
+              ) if proto.flat_buffer else (
+              lambda: P.make_train_step(cfg, proto))
+        step = jax.jit(mk(), donate_argnums=0)
         evaluate = jax.jit(P.make_eval_fn(cfg))
+
+    # LM families: pin ONE eval batch up front — evaluating on the live
+    # training stream would both train on the eval data and make the
+    # training-batch sequence depend on --eval-every
+    eval_batch = None
+    if cfg.family != "mlp":
+        eval_batch = next_batch() if fleet is not None else batcher.next()
 
     logf = open(args.log, "w") if args.log else None
     t0 = time.time()
@@ -175,17 +210,23 @@ def main(argv=None):
         else:
             wp, metrics = step(wp, batcher.next(), sk)
         if t % args.eval_every == 0:
-            if cfg.family == "mlp" and fleet is not None:
-                full = jax.tree_util.tree_map(
-                    lambda a: jnp.broadcast_to(
-                        a[None], (fleet.replicates,) + a.shape),
-                    batcher.full(256))
-                el_r, ea_r = evaluate(wp, full)           # [R], [R]
+            # flat-buffer mode: unravel the persistent buffer ONLY here
+            wp_eval = unravel(wp) if unravel is not None else wp
+            if fleet is not None:
+                if cfg.family == "mlp":
+                    full = jax.tree_util.tree_map(
+                        lambda a: jnp.broadcast_to(
+                            a[None], (fleet.replicates,) + a.shape),
+                        batcher.full(256))
+                else:
+                    full = eval_batch
+                el_r, ea_r = evaluate(wp_eval, full)      # [R], [R]
                 ev_loss, ev_acc = jnp.mean(el_r), jnp.mean(ea_r)
             elif cfg.family == "mlp":
-                ev_loss, ev_acc = evaluate(wp, batcher.full(256))
+                ev_loss, ev_acc = evaluate(wp_eval, batcher.full(256))
             else:
-                ev_loss, ev_acc = metrics["loss"], jnp.float32(0)
+                # LM families: next-token accuracy on the pinned eval batch
+                ev_loss, ev_acc = evaluate(wp_eval, eval_batch)
             rec = {"step": t, "loss": float(metrics["loss"]),
                    "eval_loss": float(ev_loss), "eval_acc": float(ev_acc),
                    "grad_norm": float(metrics["grad_norm"]),
@@ -224,7 +265,9 @@ def main(argv=None):
               f"composed(eps,delta)=({rep['epsilon_trajectory_composed']:.3g}, "
               f"{rep['delta_trajectory_composed']:.2g})")
     if args.checkpoint:
-        ckpt_save(args.checkpoint, wp, step=args.steps,
+        ckpt_save(args.checkpoint,
+                  unravel(wp) if unravel is not None else wp,
+                  step=args.steps,
                   metadata={"arch": args.arch, "scheme": args.scheme,
                             "epsilon": rep["epsilon_worst"]})
         print(f"[train] checkpoint -> {args.checkpoint}")

@@ -31,6 +31,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import exchange as exchange_lib
 from repro.core.channel import dbm_to_watts
 from repro.net import churn as churn_lib
 from repro.net import fading as fading_lib
@@ -50,17 +51,11 @@ jax.tree_util.register_dataclass(
     NetState, data_fields=["fading", "geometry", "churn"], meta_fields=[])
 
 
-def complete_mixing(mask: jnp.ndarray) -> jnp.ndarray:
-    """Masked complete-graph mixing: active workers average over the other
-    active workers (exactly the paper's W = ((1)−I)/(N−1) when everyone is
-    on), inactive workers get the identity row. Symmetric, doubly
-    stochastic for ≥ 2 active workers."""
-    p = jnp.asarray(mask, jnp.float32)
-    n = p.shape[0]
-    n_act = jnp.maximum(jnp.sum(p), 2.0)
-    off = p[:, None] * p[None, :] * (1.0 - jnp.eye(n, dtype=jnp.float32))
-    W = off / (n_act - 1.0)
-    return W + jnp.diag(1.0 - jnp.sum(W, axis=1))
+# Masked complete-graph mixing now lives in the unified exchange engine's
+# W taxonomy (repro.core.exchange) — the simulator hands its per-round W
+# and TracedChannelState straight to exchange.plan_dynamic / the fused
+# dp_mix kernel; re-exported here under the historical name.
+complete_mixing = exchange_lib.masked_complete_W
 
 
 class NetworkSimulator:

@@ -1,0 +1,299 @@
+"""Unified mixing-matrix exchange engine (repro.core.exchange): every
+ExchangeSpec against the Eqt. (8) oracle, property tests over arbitrary
+doubly-stochastic W, flat-buffer mean-descent invariance, and the unified
+fuse_exchange guard."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypo_fallback import given, settings, st
+
+from repro.configs.registry import get_arch
+from repro.core import dwfl, exchange as X
+from repro.core.channel import ChannelConfig
+from repro.core.protocol import (ProtocolConfig, make_flat_train_step,
+                                 make_train_step)
+
+
+def _chan(N=6, sigma=0.7, sigma_m=0.3, seed=3):
+    return ChannelConfig(n_workers=N, p_dbm=30.0, sigma=sigma,
+                         sigma_m=sigma_m, seed=seed).realize()
+
+
+def _doubly_stochastic(N, seed, terms=4):
+    """Random doubly-stochastic W via Birkhoff (convex combination of
+    permutation matrices) — symmetric by averaging with its transpose."""
+    rng = np.random.default_rng(seed)
+    lam = rng.dirichlet(np.ones(terms))
+    W = np.zeros((N, N))
+    for t in range(terms):
+        W += lam[t] * np.eye(N)[rng.permutation(N)]
+    W = 0.5 * (W + W.T)
+    return W
+
+
+def _draws(N, d, seed, chan):
+    key = jax.random.PRNGKey(seed)
+    Xt = {"w": jax.random.normal(key, (N, d))}
+    G = {"w": jax.random.normal(jax.random.fold_in(key, 1), (N, d)) * 0.2}
+    n = X.dp_noise(jax.random.fold_in(key, 2), Xt, chan)
+    m = X.channel_noise(jax.random.fold_in(key, 3), Xt, chan.awgn_sigma)
+    return Xt, G, n, m
+
+
+# ---------------------------------------------------------------------------
+# every ExchangeSpec vs the matrix-form oracle
+# ---------------------------------------------------------------------------
+
+
+def test_complete_plan_matches_reference():
+    N, d, eta, gamma = 6, 40, 0.45, 0.1
+    chan = _chan(N)
+    Xt, G, n, m = _draws(N, d, 0, chan)
+    X1 = {"w": Xt["w"] - gamma * G["w"]}
+    out = X.run_mix(X1, n, m, eta, X.plan_complete(None, chan))["w"]
+    ref = dwfl.matrix_form_reference(
+        np.asarray(Xt["w"]), np.asarray(G["w"]), np.asarray(n["w"]),
+        np.asarray(m["w"]), chan, gamma, eta)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-5)
+
+
+def test_gossip_plan_matches_noiseless_reference():
+    N, d, eta = 6, 32, 0.5
+    chan = _chan(N)
+    Xt, _, _, _ = _draws(N, d, 1, chan)
+    zero = jax.tree_util.tree_map(jnp.zeros_like, Xt)
+    out = X.run_mix(Xt, zero, zero, eta, X.plan_gossip(None, chan))["w"]
+    ref = dwfl.matrix_form_reference(
+        np.asarray(Xt["w"]), np.zeros((N, d)), np.zeros((N, d)),
+        np.zeros((N, d)), chan, 0.0, eta)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-5)
+
+
+def test_dynamic_plan_full_mask_matches_reference():
+    from repro.net.state import TracedChannelState
+    N, d, eta = 6, 24, 0.4
+    chan = _chan(N)
+    tr = TracedChannelState.from_static(chan)
+    Xt, _, n, m = _draws(N, d, 2, chan)
+    W = X.masked_complete_W(jnp.ones((N,), bool))
+    out = X.run_mix(Xt, n, m, eta, X.plan_dynamic(None, tr, W_arg=W))["w"]
+    ref = dwfl.matrix_form_reference(
+        np.asarray(Xt["w"]), np.zeros((N, d)), np.asarray(n["w"]),
+        np.asarray(m["w"]), chan, 0.0, eta)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-5)
+
+
+def test_sampled_plan_full_participation_matches_reference():
+    N, d, eta = 6, 24, 0.4
+    chan = _chan(N, seed=13)
+    Xt, _, n, m = _draws(N, d, 3, chan)
+    plan = X.plan_sampled(
+        ProtocolConfig(n_workers=N, participation=0.5), chan,
+        W_arg=jnp.ones((N,), bool))
+    out = X.run_mix(Xt, n, m, eta, plan)["w"]
+    ref = dwfl.matrix_form_reference(
+        np.asarray(Xt["w"]), np.zeros((N, d)), np.asarray(n["w"]),
+        np.asarray(m["w"]), chan, 0.0, eta)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15)
+@given(N=st.integers(3, 9), d=st.integers(4, 64),
+       eta=st.floats(0.05, 1.0), seed=st.integers(0, 10_000))
+def test_property_arbitrary_doubly_stochastic_W(N, d, eta, seed):
+    """PROPERTY: for ANY doubly-stochastic W, the engine equals the
+    matrix-form oracle extended to that W."""
+    chan = _chan(N, seed=seed % 17)
+    W = _doubly_stochastic(N, seed)
+    assert np.allclose(W.sum(0), 1) and np.allclose(W.sum(1), 1)
+    Xt, G, n, m = _draws(N, d, seed, chan)
+    gamma = 0.07
+    X1 = {"w": Xt["w"] - gamma * G["w"]}
+    out = X.run_mix(X1, n, m, eta,
+                    X.plan_topology(None, chan, W_arg=W))["w"]
+    ref = dwfl.matrix_form_reference(
+        np.asarray(Xt["w"]), np.asarray(G["w"]), np.asarray(n["w"]),
+        np.asarray(m["w"]), chan, gamma, eta, W=W)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=10)
+@given(N=st.integers(3, 9), d=st.integers(8, 200),
+       eta=st.floats(0.05, 1.0), seed=st.integers(0, 10_000))
+def test_property_flat_buffer_mean_descent(N, d, eta, seed):
+    """PROPERTY (Eqt. 9): under the fused flat-buffer round, the worker
+    mean evolves EXACTLY as x̄ ← x̄ − γ ḡ for any doubly-stochastic W when
+    σ_m = 0 — the on-chip DP noises cancel across receivers."""
+    from repro.kernels.dp_mix import ops as mix_ops
+    chan = _chan(N, sigma=1.5, seed=seed % 13)
+    W = _doubly_stochastic(N, seed + 1)
+    key = jax.random.PRNGKey(seed)
+    p = jax.random.normal(key, (N, d))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (N, d)) * 0.3
+    gamma = 0.05
+    out = mix_ops.dp_mix_round(
+        p, g, seed % 997, W, X.mix_noise_amp(chan), chan.c, 0.0,
+        gamma=gamma, eta=eta,
+        m_scale=X._deg_scale(jnp.asarray(W, jnp.float32), chan.c))
+    np.testing.assert_allclose(np.asarray(out.mean(0)),
+                               np.asarray((p - gamma * g).mean(0)),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# dispatch table (the former scheme if/elif ladder)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw,want", [
+    (dict(scheme="dwfl"), "complete"),
+    (dict(scheme="gossip"), "gossip"),
+    (dict(scheme="orthogonal"), "orthogonal"),
+    (dict(scheme="centralized"), "centralized"),
+    (dict(scheme="dwfl", topology="ring"), "topology"),
+    (dict(scheme="dwfl", participation=0.5), "sampled"),
+])
+def test_resolve_spec_routing(kw, want):
+    assert X.resolve_spec(ProtocolConfig(n_workers=8, **kw)).name == want
+
+
+def test_resolve_spec_collective_and_dynamic():
+    proto = ProtocolConfig(scheme="dwfl", n_workers=8)
+    assert X.resolve_spec(proto, axis="data").name == "collective"
+    assert X.resolve_spec(proto, dynamic=True).name == "dynamic"
+    with pytest.raises(ValueError):
+        X.resolve_spec(ProtocolConfig(scheme="orthogonal", n_workers=8),
+                       dynamic=True)
+
+
+def test_resolve_spec_unknown_scheme():
+    proto = dataclasses.replace(ProtocolConfig(n_workers=4), scheme="nope")
+    with pytest.raises(ValueError):
+        X.resolve_spec(proto)
+
+
+# ---------------------------------------------------------------------------
+# unified fuse_exchange guard (regression: the static step fused only
+# ("dwfl", "gossip") while the dynamic step fused unconditionally)
+# ---------------------------------------------------------------------------
+
+
+def _round_pair(scheme, fuse_vals=(False, True)):
+    import repro.models.mlp as mlp
+    cfg = get_arch("dwfl-paper").replace(d_model=32)
+    key = jax.random.PRNGKey(0)
+    params = mlp.init(key, cfg, input_dim=24)
+    wp = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (6,) + a.shape), params)
+    batch = {"x": jax.random.normal(key, (6, 8, 24)),
+             "y": jnp.zeros((6, 8), jnp.int32)}
+    outs = []
+    for fuse in fuse_vals:
+        proto = ProtocolConfig(scheme=scheme, n_workers=6, gamma=0.05,
+                               eta=0.5, clip=1.0, target_epsilon=1.0,
+                               fuse_exchange=fuse)
+        step = jax.jit(make_train_step(cfg, proto))
+        outs.append(step(wp, batch, key)[0])
+    return outs
+
+
+@pytest.mark.parametrize("scheme", ["orthogonal", "centralized"])
+def test_fuse_guard_baselines_never_bucketed(scheme):
+    """orthogonal/centralized must NEVER see a bucketed tree: with the
+    guard active their fused and unfused rounds consume PRNG identically,
+    so the results are BIT-IDENTICAL (a bucketed run would re-key the
+    single flat leaf and diverge)."""
+    assert not X.resolve_spec(
+        ProtocolConfig(scheme=scheme, n_workers=6)).fuse_ok
+    plain, fused = _round_pair(scheme)
+    for a, b in zip(jax.tree_util.tree_leaves(plain),
+                    jax.tree_util.tree_leaves(fused)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fuse_guard_uniform_across_steps():
+    """The SAME spec table drives both step factories: the mixing family
+    buckets, the baselines never do."""
+    for scheme, ok in [("dwfl", True), ("gossip", True),
+                       ("orthogonal", False), ("centralized", False)]:
+        assert X.resolve_spec(
+            ProtocolConfig(scheme=scheme, n_workers=6)).fuse_ok == ok
+    assert X.resolve_spec(ProtocolConfig(n_workers=6), dynamic=True).fuse_ok
+
+
+# ---------------------------------------------------------------------------
+# flat buffer round-trip + flat train step
+# ---------------------------------------------------------------------------
+
+
+def test_flatten_unravel_roundtrip():
+    key = jax.random.PRNGKey(0)
+    tree = {"a": jax.random.normal(key, (4, 3, 5)),
+            "b": (jax.random.normal(key, (4, 7)).astype(jnp.bfloat16),
+                  jax.random.normal(key, (4,)))}
+    flat = X.flatten_worker_tree(tree)
+    assert flat.shape == (4, 3 * 5 + 7 + 1) and flat.dtype == jnp.float32
+    unravel, unravel_row = X.worker_unravelers(tree)
+    back = unravel(flat)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-2)
+    row = unravel_row(flat[2])
+    np.testing.assert_allclose(np.asarray(row["a"]),
+                               np.asarray(tree["a"][2]), atol=1e-6)
+
+
+def test_flatten_fleet_axes():
+    key = jax.random.PRNGKey(1)
+    tree = {"w": jax.random.normal(key, (3, 4, 6))}   # [R, W, d0]
+    flat = X.flatten_worker_tree(tree, lead_axes=2)
+    assert flat.shape == (3, 4, 6)
+    unravel, unravel_row = X.worker_unravelers(tree, lead_axes=2)
+    np.testing.assert_allclose(np.asarray(unravel(flat)["w"]),
+                               np.asarray(tree["w"]), atol=1e-7)
+    assert unravel_row(flat[1, 2]).get("w").shape == (6,)
+
+
+def test_flat_train_step_matches_tree_step_stats():
+    """The flat-buffer static step trains the same problem the tree step
+    does: gossip (noiseless) rounds must agree on the parameter MEAN
+    (exact mixing invariant) though PRNG-free here entirely."""
+    import repro.models.mlp as mlp
+    cfg = get_arch("dwfl-paper").replace(d_model=32)
+    key = jax.random.PRNGKey(0)
+    params = mlp.init(key, cfg, input_dim=24)
+    wp = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (6,) + a.shape), params)
+    batch = {"x": jax.random.normal(key, (6, 8, 24)),
+             "y": jnp.zeros((6, 8), jnp.int32)}
+    proto = ProtocolConfig(scheme="gossip", n_workers=6, gamma=0.05, eta=0.5,
+                           clip=1.0)
+    tree_step = jax.jit(make_train_step(cfg, proto))
+    flat = X.flatten_worker_tree(wp)
+    unravel, unravel_row = X.worker_unravelers(wp)
+    flat_step = jax.jit(make_flat_train_step(cfg, proto, unravel_row))
+    wp2, m_tree = tree_step(wp, batch, key)
+    flat2, m_flat = flat_step(flat, batch, key)
+    assert m_flat["loss"] == pytest.approx(float(m_tree["loss"]), rel=1e-5)
+    back = unravel(flat2)
+    for a, b in zip(jax.tree_util.tree_leaves(wp2),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_flat_step_rejects_baseline_schemes():
+    cfg = get_arch("dwfl-paper").replace(d_model=32)
+    for scheme in ("orthogonal", "centralized"):
+        proto = ProtocolConfig(scheme=scheme, n_workers=6)
+        with pytest.raises(ValueError):
+            make_flat_train_step(cfg, proto, lambda v: v)

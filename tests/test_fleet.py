@@ -276,6 +276,42 @@ def test_scenario_grid_runs(tmp_path):
         assert json.load(f)["rows"][0]["scenario"] == "static_paper"
 
 
+def test_fleet_flat_buffer_round():
+    """ISSUE 3: the flat-buffer fleet path — [R, W, d] persistent buffer,
+    vmapped fused dp_mix round — runs, keeps the replicate axis intact,
+    and its unraveled params match the tree path's structure."""
+    from repro.core import exchange as X
+    proto = _proto()
+    fleet = FleetEngine(proto)
+    cfg, wp1, batch1, wpR, batchR = _tiny_model()
+    key = jax.random.PRNGKey(5)
+    # engine-built buffer (default model dims): [R, W, d] f32, replicate-
+    # independent rows recoverable
+    flat0, unravel0, _ = fleet.init_flat_params(key, cfg)
+    assert flat0.ndim == 3 and flat0.shape[:2] == (R, N)
+    assert flat0.dtype == jnp.float32
+    for leaf in jax.tree_util.tree_leaves(unravel0(flat0)):
+        assert leaf.shape[:2] == (R, N)
+    # the fused round on the test-scale model
+    flat = X.flatten_worker_tree(wpR, lead_axes=2)
+    unravel, unravel_row = X.worker_unravelers(wpR, lead_axes=2)
+    tree = unravel(flat)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        assert leaf.shape[:2] == (R, N)
+    fleet_round = jax.jit(fleet.make_fleet_round(cfg, flat=True,
+                                                 unravel_row=unravel_row))
+    states = fleet.init(key)
+    states, flat2, metrics, chans, Ws = fleet_round(
+        jax.random.PRNGKey(6), states, flat, batchR)
+    assert flat2.shape == flat.shape
+    assert bool(jnp.isfinite(flat2).all())
+    assert metrics["loss"].shape == (R,)
+    assert np.isfinite(np.asarray(metrics["loss"])).all()
+    # flat=True without the unraveler is a loud error, not a silent break
+    with pytest.raises(ValueError):
+        fleet.make_fleet_step(cfg, flat=True)
+
+
 def test_mean_ci():
     m, ci = mean_ci([1.0, 1.0, 1.0])
     assert m == 1.0 and ci == 0.0

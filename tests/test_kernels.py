@@ -51,6 +51,134 @@ def test_dp_perturb_noise_moments():
     assert float(jnp.max(jnp.abs(xt - xt2))) > 0.1
 
 
+def test_dp_perturb_bf16_parity():
+    """Satellite (ISSUE 3): dtype contract — bf16 in, bf16 out, on BOTH
+    returns, with the noise statistics of ref.py preserved through the
+    bf16 round-trip."""
+    shape = (512, 256)
+    p = jax.random.normal(KEY, shape).astype(jnp.bfloat16)
+    g = jax.random.normal(jax.random.fold_in(KEY, 1), shape).astype(jnp.bfloat16)
+    sigma, s_sig, s_noise = 2.0, 1.0, 1.5
+    x, xt = dp_ops.dp_perturb(p, g, 11, gamma=0.1, sigma=sigma,
+                              s_sig=s_sig, s_noise=s_noise)
+    assert x.dtype == jnp.bfloat16 and xt.dtype == jnp.bfloat16
+    want_x, _ = dp_ref.dp_perturb_ref(p, g, KEY, gamma=0.1, sigma=sigma,
+                                      s_sig=s_sig, s_noise=s_noise)
+    np.testing.assert_allclose(np.asarray(x, np.float32),
+                               np.asarray(want_x, np.float32),
+                               rtol=1e-2, atol=1e-2)
+    resid = np.asarray(xt, np.float64) - s_sig * np.asarray(x, np.float64)
+    # bf16 quantization adds ~0.4% relative noise on top of sigma*s_noise
+    assert resid.std() == pytest.approx(sigma * s_noise, rel=0.05)
+    assert abs(resid.mean()) < 5 * sigma * s_noise / np.sqrt(resid.size)
+
+
+# ---------------------------------------------------------------------------
+# dp_mix (fused flat-buffer DWFL round)
+# ---------------------------------------------------------------------------
+
+from repro.core import dwfl as _dwfl
+from repro.core import exchange as _X
+from repro.core.channel import ChannelConfig as _CC
+from repro.kernels.dp_mix import ops as mix_ops
+from repro.kernels.dp_mix import ref as mix_ref
+
+
+def _mix_setup(N=6, d=2000, seed=3):
+    chan = _CC(n_workers=N, p_dbm=30.0, sigma=0.7, sigma_m=0.4,
+               seed=seed).realize()
+    key = jax.random.PRNGKey(seed)
+    p = jax.random.normal(key, (N, d))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (N, d)) * 0.2
+    return chan, p, g, _X.plan_complete(None, chan)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+def test_dp_mix_deterministic_matches_matrix_reference(impl):
+    """σ = σ_m = 0: both implementations reduce to the exact Eqt. (8)
+    mixing X ← (X − γG)Ψ (f32 tolerance vs the oracle)."""
+    N, d = 6, 500
+    chan, p, g, plan = _mix_setup(N, d)
+    gamma, eta = 0.1, 0.45
+    out = mix_ops.dp_mix_round(p, g, 7, plan.W, 0.0 * plan.amp, plan.c, 0.0,
+                               gamma=gamma, eta=eta, m_scale=plan.m_scale,
+                               impl=impl)
+    want = _dwfl.matrix_form_reference(
+        np.asarray(p), np.asarray(g), np.zeros((N, d)), np.zeros((N, d)),
+        chan, gamma, eta)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-4, atol=1e-5)
+
+
+def test_dp_mix_jnp_lowering_bitwise_matches_interpret():
+    """The CPU (fused-jnp) lowering and the interpret-mode Pallas kernel
+    draw IDENTICAL noise (same counter-hash, same index map) and compute
+    identical arithmetic — bitwise-equal outputs."""
+    chan, p, g, plan = _mix_setup()
+    a = mix_ops.dp_mix_round_plan(p, g, 7, plan, gamma=0.05, eta=0.4,
+                                  impl="jnp")
+    b = mix_ops.dp_mix_round_plan(p, g, 7, plan, gamma=0.05, eta=0.4,
+                                  impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dp_mix_noise_moments():
+    """Stochastic path vs the per-receiver variance of the unified update:
+    Var_i = η²[Σ_{k≠i} W_ik²·amp_k² + amp_i²]/c² + η²·m_scale_i²·σ_m²
+    (complete graph, W_ii = 0), plus agreement with ref.py's moments."""
+    N, d = 6, 60_000
+    chan, p, g, plan = _mix_setup(N, d)
+    gamma, eta = 0.1, 0.45
+    det = mix_ops.dp_mix_round(p, g, 7, plan.W, 0.0 * plan.amp, plan.c, 0.0,
+                               gamma=gamma, eta=eta, m_scale=plan.m_scale)
+    out = mix_ops.dp_mix_round(p, g, 7, plan.W, plan.amp, plan.c,
+                               chan.awgn_sigma, gamma=gamma, eta=eta,
+                               m_scale=plan.m_scale)
+    outr = mix_ref.dp_mix_round_ref(p, g, KEY, plan.W, plan.amp, plan.c,
+                                    chan.awgn_sigma, gamma=gamma, eta=eta,
+                                    m_scale=plan.m_scale)
+    amp = np.asarray(plan.amp, np.float64)
+    Wm = np.asarray(plan.W, np.float64)
+    c = float(chan.c)
+    ms = np.asarray(plan.m_scale, np.float64)
+    var = np.array([
+        eta ** 2 * ((Wm[i] ** 2 * amp ** 2).sum() + amp[i] ** 2) / c ** 2
+        + eta ** 2 * ms[i] ** 2 * chan.cfg.sigma_m ** 2 for i in range(N)])
+    for o in (out, outr):
+        resid = np.asarray(o, np.float64) - np.asarray(det, np.float64)
+        ratio = resid.std(axis=1) / np.sqrt(var)
+        np.testing.assert_allclose(ratio, 1.0, atol=0.04)
+        assert np.abs(resid.mean(axis=1)).max() < 5 * np.sqrt(var.max() / d)
+
+
+def test_dp_mix_seed_sensitivity_and_dtype():
+    """Different seeds → different noise; bf16 buffer in → bf16 out (the
+    dp_perturb dtype contract)."""
+    chan, p, g, plan = _mix_setup()
+    a = mix_ops.dp_mix_round_plan(p, g, 7, plan, gamma=0.05, eta=0.4)
+    b = mix_ops.dp_mix_round_plan(p, g, 8, plan, gamma=0.05, eta=0.4)
+    assert float(jnp.max(jnp.abs(a - b))) > 1e-3
+    pb = p.astype(jnp.bfloat16)
+    gb = g.astype(jnp.bfloat16)
+    ob = mix_ops.dp_mix_round_plan(pb, gb, 7, plan, gamma=0.05, eta=0.4)
+    assert ob.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(ob, np.float32), np.asarray(a),
+                               atol=0.15)
+
+
+def test_dp_mix_gossip_noiseless_path():
+    """noisy=False (gossip plan): pure mixing, no PRNG work, mean exactly
+    preserved."""
+    chan, p, g, plan = _mix_setup()
+    gplan = _X.plan_gossip(None, chan)
+    out = mix_ops.dp_mix_round_plan(p, g, 7, gplan, gamma=0.05, eta=0.5)
+    x = p - 0.05 * g
+    np.testing.assert_allclose(np.asarray(out.mean(0)),
+                               np.asarray(x.mean(0)), rtol=1e-5, atol=1e-6)
+    want = x + 0.5 * (jnp.asarray(gplan.W) @ x - x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

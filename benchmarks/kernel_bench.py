@@ -56,6 +56,7 @@ def main():
     rows.append(_bench_dp_mix_retrace())
     rows.append(_bench_net_retrace())
     rows.append(_bench_fleet_retrace())
+    rows.append(_bench_trajectory_scan())
     return rows
 
 
@@ -145,6 +146,20 @@ def _bench_dp_mix_retrace():
     out.block_until_ready()
     us = (time.perf_counter() - t0) / len(draws) * 1e6
     return f"dp_mix/retrace_{N}x{d},{us:.1f},{traces['n']:.2e}"
+
+
+def _bench_trajectory_scan():
+    """ACCEPTANCE (ISSUE 4): the K=32 scan-chunked trajectory must beat
+    the per-round-dispatch legacy loop (host batching + one jitted call
+    per round) by >= 2x rounds/sec on the fused flat-buffer round.
+    derived = speedup."""
+    from benchmarks.trajectory_bench import smoke_case
+    c = smoke_case()
+    assert c["speedup"] >= 2.0, (
+        f"scan trajectory only {c['speedup']:.2f}x vs per-round dispatch "
+        f"at K={c['chunk']} (need >= 2x): {c}")
+    return (f"trajectory/scan_k{c['chunk']}_{c['workers']}w,"
+            f"{c['scan_us_per_round']:.1f},{c['speedup']:.2f}")
 
 
 def _bench_net_retrace():

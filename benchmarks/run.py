@@ -20,7 +20,8 @@ def main() -> None:
     from benchmarks import (fig2_power, fig3_workers, fig4_epsilon,
                             fig5_orthogonal, fig6_centralized,
                             privacy_table, kernel_bench, sampling_ablation,
-                            coherence_sweep, exchange_bench, fleet_sweep)
+                            coherence_sweep, exchange_bench, fleet_sweep,
+                            trajectory_bench)
 
     suites = [
         ("fig2_power", lambda: fig2_power.main(args.steps)),
@@ -33,6 +34,9 @@ def main() -> None:
         # emits BENCH_exchange.json at the repo root (fused-vs-unfused
         # exchange latency, R=1 and R=8 — the perf trajectory artifact)
         ("exchange_bench", lambda: exchange_bench.main(args.steps)),
+        # emits BENCH_trajectory.json at the repo root (K-chunked scan vs
+        # per-round dispatch rounds/sec; asserts the >= 2x acceptance)
+        ("trajectory_bench", lambda: trajectory_bench.main(args.steps)),
         ("sampling_ablation", lambda: sampling_ablation.main(args.steps)),
         ("fleet_sweep", lambda: fleet_sweep.main(args.steps)),
         ("coherence_sweep", lambda: coherence_sweep.main(args.steps)),

@@ -90,4 +90,38 @@ python -m pytest -q tests/test_exchange.py \
     tests/test_dwfl.py::test_eval_fn_lm_next_token_accuracy
 python -m pytest -q tests/test_kernels.py -k "dp_mix or dp_perturb"
 
+echo "== ISSUE 4 smoke: scan-fused trajectory engine (>=2x vs per-round) =="
+python - <<'EOF'
+from benchmarks.kernel_bench import _bench_trajectory_scan
+print(_bench_trajectory_scan())   # asserts the >= 2x scan speedup
+EOF
+
+echo "== ISSUE 4 smoke: trajectory perf artifact (smoke run) =="
+python -m benchmarks.trajectory_bench --smoke
+python - <<'EOF'
+import json
+# smoke writes its own file so it never clobbers the versioned full-run
+# BENCH_trajectory.json trajectory artifact
+rep = json.load(open("BENCH_trajectory_smoke.json"))
+assert {c["path"] for c in rep["cases"]} == {"static", "dynamic", "fleet"}, rep
+assert any(c["replicates"] == 8 for c in rep["cases"]), rep
+for c in rep["cases"]:
+    # shorter smoke run => looser floor than the full-run 2x acceptance
+    assert c["speedup"] > 1.3, c
+print("BENCH_trajectory_smoke.json:",
+      ", ".join(f"{c['path']}: {c['speedup']}x" for c in rep["cases"]))
+EOF
+
+echo "== ISSUE 4 smoke: chunked scan driver (static + dynamic fleet) =="
+python -m repro.launch.train \
+    --arch dwfl-paper --steps 10 --workers 6 --batch-size 8 \
+    --chunk-rounds 4 --eval-every 5
+python -m repro.launch.train \
+    --arch dwfl-paper --steps 10 --workers 6 --batch-size 8 \
+    --channel-model dynamic --scenario iot_dense --replicates 2 \
+    --flat-buffer --chunk-rounds 4 --eval-every 5
+
+echo "== ISSUE 4 regression tests: scan-vs-loop equivalence =="
+python -m pytest -q tests/test_trajectory.py
+
 echo "ci_check: OK"

@@ -10,3 +10,7 @@ from repro.core.protocol import (  # noqa: F401
     make_flat_train_step, make_dynamic_flat_train_step, make_eval_fn,
     init_worker_params, epsilon_report,
 )
+from repro.core.trajectory import (  # noqa: F401
+    ChunkRunner, TrajCarry, auto_chunk, concat_chunks, make_round_body,
+    plan_chunks, replicate_major, run_per_round,
+)

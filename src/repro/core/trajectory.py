@@ -1,0 +1,232 @@
+"""Scan-fused trajectory engine — whole coherence blocks of DWFL rounds
+compiled into ONE program.
+
+The paper's guarantees (Thms 4.1/4.2) are statements about a T-round
+trajectory, but the seed driver executed that trajectory as T separate
+jitted dispatches from a Python loop: per-round host NumPy batch assembly,
+per-round ``jax.random.split`` on the host, per-round device arrays
+appended to unbounded Python lists. After PR 3 fused the O(d) round body
+(dp_mix), that dispatch + host work dominates wall-clock for the small-
+model long-horizon (T >> 1e3) sweeps the fleet engine targets.
+
+This module rolls K consecutive rounds into a single ``lax.scan``:
+
+    body(carry) -> (carry', out)           one full DWFL round, on device
+    ChunkRunner.run(carry, K)              ONE dispatch = K rounds
+
+with a donated carry (PRNG key, params — worker tree or flat [W, d] /
+[R, W, d] buffer — and the repro.net ``NetState`` when dynamic) and
+stacked ``[K, ...]`` outputs (metrics, per-round TracedChannelState and
+mixing matrices) that feed ``epsilon_report`` / ``fleet_epsilon_report``
+directly. Inside the scan: on-device key folding (the SAME split
+discipline whether the trajectory is chunked K-at-a-time or stepped one
+round per dispatch — chunk boundaries cannot change the realized PRNG
+stream), net evolution via ``NetworkSimulator.round``, the unified-engine
+round (fused dp_mix in flat mode), and on-device batch sampling from a
+device-resident store (repro.data.device) instead of per-round host NumPy.
+
+All three driver paths share the one body factory:
+
+    make_round_body(cfg, proto, store)                      static channel
+    make_round_body(cfg, proto, store, sim=sim)             dynamic (repro.net)
+    make_round_body(cfg, proto, store, fleet=fleet)         fleet ([R, ...])
+
+``run_per_round`` executes the same body one jitted dispatch per round —
+the equivalence/benchmark baseline (tests/test_trajectory.py asserts the
+two are BITWISE identical on CPU; benchmarks/trajectory_bench.py measures
+the speedup).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import protocol as protocol_lib
+
+
+class TrajCarry(NamedTuple):
+    """The donated scan carry: everything a round consumes and rewrites.
+
+    ``params`` is the worker-stacked pytree ([W, ...] leaves; [R, W, ...]
+    for the fleet) or the persistent flat buffer ([W, d] / [R, W, d]) in
+    flat mode. ``net`` is the repro.net NetState (stacked for the fleet),
+    or None on the static-channel path."""
+    key: jnp.ndarray
+    params: Any
+    net: Any = None
+
+
+def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
+                    flat: bool = False, unravel_row=None) -> Callable:
+    """Build ``body(carry) -> (carry', out)`` — one full DWFL round.
+
+    ``store`` is a repro.data.device store (sample/sample_fleet). Exactly
+    one of the three paths is taken: ``fleet`` (FleetEngine — vmapped
+    [R, ...] round), ``sim`` (NetworkSimulator — single dynamic network),
+    neither (static channel). ``flat``/``unravel_row`` select the fused
+    flat-buffer round (protocol.make_*_flat_train_step).
+
+    Key discipline (shared by every path, and by the per-round reference
+    ``run_per_round``): the carry key splits once per round into the
+    round key, which splits into (data key, [net key,] step key) — a pure
+    function of the initial key and the round INDEX, never of the chunk
+    partition.
+
+    ``out`` carries the round's stacked outputs: ``metrics`` always;
+    ``chan`` (TracedChannelState) and ``W`` (mixing matrix) on the
+    dynamic/fleet paths — [K, ...] / [K, R, ...] leaves after a K-round
+    scan, one array per chunk instead of one Python list entry per round.
+    """
+    if fleet is not None:
+        step = fleet.make_fleet_step(cfg, flat=flat, unravel_row=unravel_row)
+        R = fleet.replicates
+
+        def body(carry: TrajCarry):
+            key, sk = jax.random.split(carry.key)
+            k_data, k_net, k_step = jax.random.split(sk, 3)
+            states, chans, _masks, Ws = fleet.round(k_net, carry.net)
+            batch = store.sample_fleet(k_data, R)
+            params, metrics = step(carry.params, batch,
+                                   fleet.split_keys(k_step), chans, Ws)
+            return (TrajCarry(key, params, states),
+                    {"metrics": metrics, "chan": chans, "W": Ws})
+
+        return body
+
+    if sim is not None:
+        step = (protocol_lib.make_dynamic_flat_train_step(
+                    cfg, proto, unravel_row) if flat
+                else protocol_lib.make_dynamic_train_step(cfg, proto))
+
+        def body(carry: TrajCarry):
+            key, sk = jax.random.split(carry.key)
+            k_data, k_net, k_step = jax.random.split(sk, 3)
+            net, chan, _mask, W = sim.round(k_net, carry.net)
+            batch = store.sample(k_data)
+            params, metrics = step(carry.params, batch, k_step, chan, W)
+            return (TrajCarry(key, params, net),
+                    {"metrics": metrics, "chan": chan, "W": W})
+
+        return body
+
+    step = (protocol_lib.make_flat_train_step(cfg, proto, unravel_row)
+            if flat else protocol_lib.make_train_step(cfg, proto))
+
+    def body(carry: TrajCarry):
+        key, sk = jax.random.split(carry.key)
+        k_data, k_step = jax.random.split(sk)
+        batch = store.sample(k_data)
+        params, metrics = step(carry.params, batch, k_step)
+        return TrajCarry(key, params, carry.net), {"metrics": metrics}
+
+    return body
+
+
+class ChunkRunner:
+    """Compile-once-per-length scan driver: ``run(carry, k)`` advances k
+    rounds in ONE jitted dispatch (lax.scan over the round body, carry
+    donated) and returns (carry', out) with stacked [k, ...] out leaves.
+
+    Distinct chunk lengths compile distinct programs (k is a static scan
+    length); a driver that cuts chunks at eval boundaries sees at most a
+    handful of lengths (plan_chunks), each cached here."""
+
+    def __init__(self, body: Callable, donate: bool = True):
+        self._body = body
+        self._donate = donate
+        self._cache = {}
+
+    def run(self, carry: TrajCarry, k: int) -> Tuple[TrajCarry, Any]:
+        k = int(k)
+        if k < 1:
+            raise ValueError(f"chunk length must be >= 1, got {k}")
+        fn = self._cache.get(k)
+        if fn is None:
+            body = self._body
+
+            def scan_k(c):
+                return jax.lax.scan(lambda cc, _: body(cc), c, None, length=k)
+
+            fn = jax.jit(scan_k,
+                         donate_argnums=(0,) if self._donate else ())
+            self._cache[k] = fn
+        return fn(carry)
+
+
+def run_per_round(body: Callable, carry: TrajCarry, k: int
+                  ) -> Tuple[TrajCarry, Any]:
+    """Reference executor: the SAME round body, one jitted dispatch per
+    round, outputs stacked on the host afterwards — the per-round-dispatch
+    baseline that ChunkRunner.run(carry, k) must reproduce bitwise (and
+    beat on wall-clock; benchmarks/trajectory_bench.py)."""
+    step = jax.jit(body)
+    outs = []
+    for _ in range(int(k)):
+        carry, out = step(carry)
+        outs.append(out)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+    return carry, stacked
+
+
+def plan_chunks(total: int, k: int, eval_every: int
+                ) -> List[Tuple[int, bool]]:
+    """Partition ``total`` rounds into scan chunks of at most ``k``,
+    cutting at every eval boundary. Returns [(length, do_eval), ...] where
+    ``do_eval`` marks chunks whose LAST round t satisfies
+    t % eval_every == 0 (the legacy per-round driver's eval points, t
+    counted from 0) — eval/log happen only at those chunk boundaries."""
+    if total < 1:
+        return []
+    if k < 1:
+        raise ValueError(f"chunk length must be >= 1, got {k}")
+    out: List[Tuple[int, bool]] = []
+    done = 0
+    while done < total:
+        if eval_every > 0:
+            # next eval cut strictly after `done`: round t = multiple of
+            # eval_every with t + 1 > done, cut after it (at t + 1)
+            t_next = (done // eval_every) * eval_every
+            if t_next + 1 <= done:
+                t_next += eval_every
+            cut = min(t_next + 1, total)
+        else:
+            cut = total
+        n = min(k, cut - done)
+        done += n
+        out.append((n, eval_every > 0 and (done - 1) % eval_every == 0))
+    return out
+
+
+def auto_chunk(eval_every: int, coherence_rounds: Optional[int] = None,
+               cap: int = 512) -> int:
+    """Default chunk length: one fading coherence block when the scenario
+    defines a finite one, else one eval interval — never longer than an
+    eval interval (plan_chunks would cut it anyway) and bounded by ``cap``
+    (compile time / stacked-output memory)."""
+    k = eval_every if eval_every > 0 else cap
+    if coherence_rounds and 0 < coherence_rounds <= cap:
+        k = coherence_rounds
+    if eval_every > 0:
+        k = min(k, eval_every)
+    return max(1, min(int(k), cap))
+
+
+def concat_chunks(chunks):
+    """Per-chunk stacked pytrees ([K_i, ...] leaves) -> one [T, ...] tree:
+    the single concatenate at report time that replaces T per-round list
+    appends."""
+    chunks = list(chunks)
+    if len(chunks) == 1:
+        return chunks[0]
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *chunks)
+
+
+def replicate_major(stacked):
+    """Fleet chunk logs are round-major ([T, R, ...] after concat_chunks);
+    the batched accounting (privacy.epsilon_trajectory_batched /
+    fleet_epsilon_report) wants replicate-major [R, T, ...]."""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.swapaxes(a, 0, 1), stacked)

@@ -1,3 +1,6 @@
 from repro.data.synthetic import classification_dataset, lm_dataset  # noqa: F401
 from repro.data.partition import dirichlet_partition, iid_partition  # noqa: F401
 from repro.data.pipeline import FederatedBatcher, LMBatcher  # noqa: F401
+from repro.data.device import (  # noqa: F401
+    ClassificationStore, LMStore, store_from_batcher,
+)

@@ -1,0 +1,139 @@
+"""Device-resident dataset stores — on-device batch sampling for the
+scan-fused trajectory engine (repro.core.trajectory).
+
+The host batchers (``pipeline.FederatedBatcher`` / ``LMBatcher``) assemble
+every round's [W, B, ...] batch in NumPy and ship it to the device — fine
+for a Python-loop driver, but a per-round host sync that cannot live
+inside a ``lax.scan`` chunk. The stores here hold the WHOLE dataset on
+device once (a few MB at repro scale) and draw each round's batch with
+traced PRNG gathers:
+
+    store.sample(key)            -> {"x": [W, B, D], "y": [W, B]}   (class)
+                                 -> {"tokens": [W, B, S]}           (LM)
+    store.sample_fleet(key, R)   -> the same with a leading [R] axis,
+                                    replicate r drawn from split(key)[r]
+
+Both stores are registered pytrees, so they can be closed over by (or
+passed through) jitted scan bodies; sampling is a pure function of the
+key, which is what makes K-chunked scans bitwise-reproducible against the
+per-round loop (tests/test_trajectory.py).
+
+Per-worker pools have unequal sizes (Dirichlet partitions): the index
+pool is a padded [W, max_size] matrix and draws are ``floor(u * size_w)``
+per worker — with replacement, every index < size_w, padding never read.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import FederatedBatcher, LMBatcher
+
+
+@dataclass(frozen=True)
+class ClassificationStore:
+    """Device-resident classification dataset + per-worker index pools."""
+    x: jnp.ndarray          # [n, D] features
+    y: jnp.ndarray          # [n] int32 labels
+    pool: jnp.ndarray       # [W, m] int32 global sample indices (padded)
+    pool_size: jnp.ndarray  # [W] int32 valid prefix length per worker
+    batch: int              # per-worker batch size (static)
+
+    @property
+    def n_workers(self) -> int:
+        return int(self.pool.shape[0])
+
+    def sample(self, key) -> Dict[str, jnp.ndarray]:
+        """One worker-stacked batch: gather by PRNG-drawn per-worker
+        indices (with replacement, uniform over each worker's pool)."""
+        W = self.pool.shape[0]
+        u = jax.random.uniform(key, (W, self.batch))
+        size = self.pool_size[:, None]
+        j = jnp.minimum((u * size.astype(jnp.float32)).astype(jnp.int32),
+                        size - 1)
+        gidx = jnp.take_along_axis(self.pool, j, axis=1)        # [W, B]
+        return {"x": self.x[gidx], "y": self.y[gidx]}
+
+    def sample_fleet(self, key, replicates: int) -> Dict[str, jnp.ndarray]:
+        """[R, W, B, ...] batch — replicate r is sample(split(key)[r])."""
+        keys = jax.random.split(key, replicates)
+        return jax.vmap(self.sample)(keys)
+
+    @classmethod
+    def build(cls, x, y, partitions: List[np.ndarray], batch_size: int
+              ) -> "ClassificationStore":
+        W = len(partitions)
+        m = max(len(p) for p in partitions)
+        pool = np.zeros((W, m), np.int32)
+        size = np.empty((W,), np.int32)
+        for w, part in enumerate(partitions):
+            # wrap-pad; draws never index past size[w], content irrelevant
+            pool[w] = np.resize(np.asarray(part, np.int32), m)
+            size[w] = len(part)
+        return cls(x=jnp.asarray(x), y=jnp.asarray(y, jnp.int32),
+                   pool=jnp.asarray(pool), pool_size=jnp.asarray(size),
+                   batch=int(batch_size))
+
+
+jax.tree_util.register_dataclass(
+    ClassificationStore, data_fields=["x", "y", "pool", "pool_size"],
+    meta_fields=["batch"])
+
+
+@dataclass(frozen=True)
+class LMStore:
+    """Device-resident token stream, disjoint per-worker slices."""
+    tokens: jnp.ndarray     # [n] int32
+    starts: jnp.ndarray     # [W] int32 slice start of each worker
+    span: int               # per-worker slice length (static)
+    batch: int              # per-worker batch size (static)
+    seq_len: int            # window length (static)
+
+    @property
+    def n_workers(self) -> int:
+        return int(self.starts.shape[0])
+
+    def sample(self, key) -> Dict[str, jnp.ndarray]:
+        W = self.starts.shape[0]
+        s = jax.random.randint(key, (W, self.batch), 0,
+                               self.span - self.seq_len - 1)
+        pos = (self.starts[:, None, None] + s[:, :, None]
+               + jnp.arange(self.seq_len)[None, None, :])     # [W, B, S]
+        return {"tokens": self.tokens[pos]}
+
+    def sample_fleet(self, key, replicates: int) -> Dict[str, jnp.ndarray]:
+        keys = jax.random.split(key, replicates)
+        return jax.vmap(self.sample)(keys)
+
+    @classmethod
+    def build(cls, tokens, n_workers: int, batch_size: int, seq_len: int
+              ) -> "LMStore":
+        per = len(tokens) // n_workers
+        if per <= seq_len + 1:
+            raise ValueError(f"per-worker slice {per} too short for "
+                             f"seq_len={seq_len}")
+        return cls(tokens=jnp.asarray(tokens, jnp.int32),
+                   starts=jnp.arange(n_workers, dtype=jnp.int32) * per,
+                   span=int(per), batch=int(batch_size), seq_len=int(seq_len))
+
+
+jax.tree_util.register_dataclass(
+    LMStore, data_fields=["tokens", "starts"],
+    meta_fields=["span", "batch", "seq_len"])
+
+
+def store_from_batcher(batcher):
+    """Mirror a host batcher's dataset/partition/shape configuration into
+    the device-resident store the trajectory engine samples from (the
+    sample STREAMS differ — NumPy RNG vs traced PRNG — the datasets and
+    batch layouts are identical)."""
+    if isinstance(batcher, FederatedBatcher):
+        return ClassificationStore.build(batcher.x, batcher.y, batcher.parts,
+                                         batcher.b)
+    if isinstance(batcher, LMBatcher):
+        return LMStore.build(batcher.tokens, batcher.W, batcher.b, batcher.S)
+    raise TypeError(f"no device store for {type(batcher).__name__}")

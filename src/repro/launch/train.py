@@ -5,8 +5,19 @@ devices exist. On this CPU rig it drives the reduced configs / the
 paper-scale MLP; on a TPU pod the same driver drives the full configs (the
 mesh and shardings come from repro.launch.mesh / shardings).
 
+By default the trajectory is executed by the scan-fused engine
+(repro.core.trajectory): whole chunks of ``--chunk-rounds`` consecutive
+rounds — one coherence block or one eval interval unless overridden —
+compile into a single ``lax.scan`` program with on-device batch sampling
+(repro.data.device), so the driver dispatches once per CHUNK instead of
+once per round. Eval/log happen at chunk boundaries. ``--no-scan`` falls
+back to the legacy one-dispatch-per-round loop with host NumPy batching.
+
 Examples:
     PYTHONPATH=src python -m repro.launch.train --arch dwfl-paper --steps 300
+    PYTHONPATH=src python -m repro.launch.train --arch dwfl-paper \
+        --steps 2000 --channel-model dynamic --scenario vehicular \
+        --chunk-rounds 64 --eval-every 256
     PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --reduced \
         --scheme dwfl --workers 4 --steps 50 --seq-len 128
     PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
@@ -26,8 +37,9 @@ from repro.checkpoint import save as ckpt_save
 from repro.configs.registry import ARCHS, get_arch
 from repro.configs import dwfl_paper
 from repro.core import protocol as P
+from repro.core import trajectory as TJ
 from repro.data import (FederatedBatcher, LMBatcher, classification_dataset,
-                        dirichlet_partition, lm_dataset)
+                        dirichlet_partition, lm_dataset, store_from_batcher)
 
 
 def main(argv=None):
@@ -70,6 +82,13 @@ def main(argv=None):
                          "buffer with the fused Pallas dp_mix round "
                          "(ravel once at init, train flat, unravel only "
                          "at eval/checkpoint); dwfl/gossip schemes only")
+    ap.add_argument("--chunk-rounds", type=int, default=0,
+                    help="scan-fused trajectory engine: rounds compiled "
+                         "into one lax.scan dispatch (0 = auto: one "
+                         "coherence block or one eval interval)")
+    ap.add_argument("--no-scan", action="store_true",
+                    help="legacy driver: one jitted dispatch per round, "
+                         "host NumPy batch assembly")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--checkpoint", default=None)
@@ -148,103 +167,150 @@ def main(argv=None):
     print(f"[train] params/worker: {n_params/1e6:.2f}M"
           + (" (flat dp_mix buffer)" if proto.flat_buffer else ""))
 
+    net_state = None
     if fleet is not None:
-        # ONE jitted call advances all R networks: net evolution + train
-        # step fused (repro.fleet.FleetEngine.make_fleet_round); donate the
-        # threaded state/params like the single-network paths do
-        fleet_round = jax.jit(
-            fleet.make_fleet_round(cfg, flat=proto.flat_buffer,
-                                   unravel_row=unravel_row),
-            donate_argnums=(1, 2))
         key, nk = jax.random.split(key)
         net_state = fleet.init(nk)
-        chan_log, w_log = [], []
         evaluate = jax.jit(jax.vmap(P.make_eval_fn(cfg)))
 
         def next_batch():
             # R independent per-replicate draws from the worker-batch
-            # stream, stacked to [R, W, B, ...]
+            # stream, stacked to [R, W, B, ...] (legacy / LM-eval only)
             return jax.tree_util.tree_map(
                 lambda *xs: jnp.stack(xs),
                 *[batcher.next() for _ in range(fleet.replicates)])
     elif sim is not None:
-        mk = (lambda: P.make_dynamic_flat_train_step(cfg, proto, unravel_row)
-              ) if proto.flat_buffer else (
-              lambda: P.make_dynamic_train_step(cfg, proto))
-        step = jax.jit(mk(), donate_argnums=0)
-        net_round = jax.jit(sim.round)
         key, nk = jax.random.split(key)
         net_state = sim.init(nk)
-        chan_log, w_log = [], []
         evaluate = jax.jit(P.make_eval_fn(cfg))
     else:
-        mk = (lambda: P.make_flat_train_step(cfg, proto, unravel_row)
-              ) if proto.flat_buffer else (
-              lambda: P.make_train_step(cfg, proto))
-        step = jax.jit(mk(), donate_argnums=0)
         evaluate = jax.jit(P.make_eval_fn(cfg))
 
-    # LM families: pin ONE eval batch up front — evaluating on the live
+    # The eval batch is pinned ONCE, device-resident, before the loop.
+    # MLP: the fixed per-worker eval slice (broadcast to [R, ...] once for
+    # the fleet — rebuilding + re-broadcasting it per eval call was a
+    # per-eval host sync). LM: one pinned draw — evaluating on the live
     # training stream would both train on the eval data and make the
-    # training-batch sequence depend on --eval-every
-    eval_batch = None
-    if cfg.family != "mlp":
-        eval_batch = next_batch() if fleet is not None else batcher.next()
+    # training-batch sequence depend on --eval-every.
+    if cfg.family == "mlp":
+        eval_batch = jax.tree_util.tree_map(jnp.asarray, batcher.full(256))
+        if fleet is not None:
+            eval_batch = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (fleet.replicates,) + a.shape), eval_batch)
+    else:
+        eval_batch = next_batch() if fleet is not None else jax.tree_util.\
+            tree_map(jnp.asarray, batcher.next())
 
     logf = open(args.log, "w") if args.log else None
     t0 = time.time()
-    for t in range(args.steps + 1):
-        key, sk = jax.random.split(key)
+
+    def log_eval(t, metrics, params):
+        # flat-buffer mode: unravel the persistent buffer ONLY here
+        wp_eval = unravel(params) if unravel is not None else params
         if fleet is not None:
-            net_state, wp, metrics, chan_t, W_t = fleet_round(
-                sk, net_state, wp, next_batch())
-            chan_log.append(chan_t)
-            w_log.append(W_t)
+            # across-replicate reduction happens ONLY at eval/log
+            # boundaries — never once per round
             metrics = jax.tree_util.tree_map(jnp.mean, metrics)
-        elif sim is not None:
-            sk, ck = jax.random.split(sk)
-            net_state, chan_t, mask_t, W_t = net_round(ck, net_state)
-            chan_log.append(chan_t)
-            w_log.append(W_t)
-            wp, metrics = step(wp, batcher.next(), sk, chan_t, W_t)
+            el_r, ea_r = evaluate(wp_eval, eval_batch)        # [R], [R]
+            ev_loss, ev_acc = jnp.mean(el_r), jnp.mean(ea_r)
         else:
-            wp, metrics = step(wp, batcher.next(), sk)
-        if t % args.eval_every == 0:
-            # flat-buffer mode: unravel the persistent buffer ONLY here
-            wp_eval = unravel(wp) if unravel is not None else wp
+            ev_loss, ev_acc = evaluate(wp_eval, eval_batch)
+        rec = {"step": t, "loss": float(metrics["loss"]),
+               "eval_loss": float(ev_loss), "eval_acc": float(ev_acc),
+               "grad_norm": float(metrics["grad_norm"]),
+               "wall_s": round(time.time() - t0, 1)}
+        print(f"[train] step={t:5d} loss={rec['loss']:.4f} "
+              f"eval={rec['eval_loss']:.4f} acc={rec['eval_acc']:.3f} "
+              f"({rec['wall_s']}s)")
+        if logf:
+            logf.write(json.dumps(rec) + "\n")
+            logf.flush()
+
+    chan_chunks, w_chunks = [], []    # scan path: ONE [K, ...] array/chunk
+    chan_log, w_log = [], []          # legacy path: one array per round
+
+    if not args.no_scan:
+        # scan-fused trajectory: one dispatch per chunk, on-device batch
+        # sampling, eval/log at chunk boundaries only
+        store = store_from_batcher(batcher)
+        body = TJ.make_round_body(
+            cfg, proto, store, sim=None if fleet is not None else sim,
+            fleet=fleet, flat=proto.flat_buffer, unravel_row=unravel_row)
+        coher = (sim.scenario.fading.coherence_rounds
+                 if sim is not None else None)
+        chunk = (args.chunk_rounds if args.chunk_rounds > 0
+                 else TJ.auto_chunk(args.eval_every, coher))
+        print(f"[train] scan-fused trajectory: chunk={chunk} rounds/dispatch")
+        runner = TJ.ChunkRunner(body)
+        carry = TJ.TrajCarry(key, wp, net_state)
+        t = 0
+        for n, do_eval in TJ.plan_chunks(args.steps + 1, chunk,
+                                         args.eval_every):
+            carry, out = runner.run(carry, n)
+            t += n
+            if "chan" in out:
+                chan_chunks.append(out["chan"])
+                w_chunks.append(out["W"])
+            if do_eval:
+                metrics = jax.tree_util.tree_map(lambda a: a[-1],
+                                                 out["metrics"])
+                log_eval(t - 1, metrics, carry.params)
+        key, wp = carry.key, carry.params
+    else:
+        if fleet is not None:
+            # ONE jitted call advances all R networks: net evolution +
+            # train step fused (repro.fleet.FleetEngine.make_fleet_round);
+            # donate the threaded state/params like the single-network
+            # paths do
+            fleet_round = jax.jit(
+                fleet.make_fleet_round(cfg, flat=proto.flat_buffer,
+                                       unravel_row=unravel_row),
+                donate_argnums=(1, 2))
+        elif sim is not None:
+            mk = (lambda: P.make_dynamic_flat_train_step(cfg, proto,
+                                                         unravel_row)
+                  ) if proto.flat_buffer else (
+                  lambda: P.make_dynamic_train_step(cfg, proto))
+            step = jax.jit(mk(), donate_argnums=0)
+            net_round = jax.jit(sim.round)
+        else:
+            mk = (lambda: P.make_flat_train_step(cfg, proto, unravel_row)
+                  ) if proto.flat_buffer else (
+                  lambda: P.make_train_step(cfg, proto))
+            step = jax.jit(mk(), donate_argnums=0)
+
+        for t in range(args.steps + 1):
+            key, sk = jax.random.split(key)
             if fleet is not None:
-                if cfg.family == "mlp":
-                    full = jax.tree_util.tree_map(
-                        lambda a: jnp.broadcast_to(
-                            a[None], (fleet.replicates,) + a.shape),
-                        batcher.full(256))
-                else:
-                    full = eval_batch
-                el_r, ea_r = evaluate(wp_eval, full)      # [R], [R]
-                ev_loss, ev_acc = jnp.mean(el_r), jnp.mean(ea_r)
-            elif cfg.family == "mlp":
-                ev_loss, ev_acc = evaluate(wp_eval, batcher.full(256))
+                net_state, wp, metrics, chan_t, W_t = fleet_round(
+                    sk, net_state, wp, next_batch())
+                chan_log.append(chan_t)
+                w_log.append(W_t)
+            elif sim is not None:
+                sk, ck = jax.random.split(sk)
+                net_state, chan_t, mask_t, W_t = net_round(ck, net_state)
+                chan_log.append(chan_t)
+                w_log.append(W_t)
+                wp, metrics = step(wp, batcher.next(), sk, chan_t, W_t)
             else:
-                # LM families: next-token accuracy on the pinned eval batch
-                ev_loss, ev_acc = evaluate(wp_eval, eval_batch)
-            rec = {"step": t, "loss": float(metrics["loss"]),
-                   "eval_loss": float(ev_loss), "eval_acc": float(ev_acc),
-                   "grad_norm": float(metrics["grad_norm"]),
-                   "wall_s": round(time.time() - t0, 1)}
-            print(f"[train] step={t:5d} loss={rec['loss']:.4f} "
-                  f"eval={rec['eval_loss']:.4f} acc={rec['eval_acc']:.3f} "
-                  f"({rec['wall_s']}s)")
-            if logf:
-                logf.write(json.dumps(rec) + "\n")
-                logf.flush()
+                wp, metrics = step(wp, batcher.next(), sk)
+            if t % args.eval_every == 0:
+                log_eval(t, metrics, wp)
 
     if fleet is not None:
         # batched accounting over ALL replicates' realized trajectories:
         # [R, T, N] budgets in one vmapped program, composed per replicate,
         # reported as across-replicate mean ± CI (DESIGN.md §repro.fleet).
         from repro.fleet import fleet_epsilon_report, stack_rounds
-        rep = fleet_epsilon_report(proto, stack_rounds(chan_log),
-                                   stack_rounds(w_log))
+        if chan_chunks:
+            # scan path logged one stacked [K, R, ...] array per chunk —
+            # concatenate ONCE and flip to the replicate-major [R, T, ...]
+            chans = TJ.replicate_major(TJ.concat_chunks(chan_chunks))
+            Ws = TJ.replicate_major(TJ.concat_chunks(w_chunks))
+        else:
+            chans, Ws = stack_rounds(chan_log), stack_rounds(w_log)
+        rep = fleet_epsilon_report(proto, chans, Ws)
         print(f"[train] eps over {rep['rounds']} rounds x "
               f"{rep['replicates']} replicates: worst/round="
               f"{rep['epsilon_worst']:.3g} composed="
@@ -256,8 +322,12 @@ def main(argv=None):
         # scalar): Thm 4.1 on each round's channel + worst-case
         # heterogeneous composition (DESIGN.md §repro.net).
         from repro.net.state import stack_states
-        rep = P.epsilon_report(proto, stack_states(chan_log),
-                               Ws=jnp.stack(w_log))
+        if chan_chunks:
+            chans = TJ.concat_chunks(chan_chunks)
+            Ws = TJ.concat_chunks(w_chunks)
+        else:
+            chans, Ws = stack_states(chan_log), jnp.stack(w_log)
+        rep = P.epsilon_report(proto, chans, Ws=Ws)
         traj = rep["epsilon_per_round"]
         print(f"[train] per-round eps over {rep['rounds']} rounds: "
               f"min={traj.min():.3g} mean={rep['epsilon_mean']:.3g} "

@@ -1,0 +1,351 @@
+"""Scan-fused trajectory engine (ISSUE 4 tentpole).
+
+The load-bearing guarantee: chunking is INVISIBLE to the computation.
+For every driver path (static, dynamic, fleet) and both parameter layouts
+(worker tree, flat dp_mix buffer), running T rounds as K-chunked
+``lax.scan`` programs produces BITWISE-identical final params, channel
+trajectories, mixing-matrix logs and metrics to the per-round
+one-dispatch-per-round loop over the same body — and the realized PRNG
+stream depends only on the initial key and the round index, never on
+where the chunk boundaries fall (K ∤ T included).
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: deterministic fallback shim
+    from _hypo_fallback import given, settings, st
+
+from repro.core import exchange as X
+from repro.core import protocol as P
+from repro.core import trajectory as TJ
+from repro.data.device import (ClassificationStore, LMStore,
+                               store_from_batcher)
+from repro.data.pipeline import FederatedBatcher, LMBatcher
+
+W, R = 5, 2
+DIM, BATCH, NDATA = 12, 4, 160
+
+
+def _cfg():
+    from repro.configs.registry import get_arch
+    return get_arch("dwfl-paper").replace(d_model=8)
+
+
+def _data(seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(NDATA, DIM)).astype(np.float32)
+    y = rng.integers(0, 10, NDATA).astype(np.int32)
+    parts = [np.arange(w, NDATA, W) for w in range(W)]
+    return x, y, parts
+
+
+def _store(seed=0):
+    x, y, parts = _data(seed)
+    return ClassificationStore.build(x, y, parts, BATCH)
+
+
+def _wp(cfg, key=None):
+    import repro.models.mlp as mlp
+    params = mlp.init(key if key is not None else jax.random.PRNGKey(0),
+                      cfg, input_dim=DIM)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (W,) + a.shape), params)
+
+
+def _proto(**kw):
+    base = dict(scheme="dwfl", n_workers=W, gamma=0.05, eta=0.4, clip=1.0,
+                p_dbm=60.0, sigma=0.7, sigma_m=0.5)
+    base.update(kw)
+    return P.ProtocolConfig(**base)
+
+
+def _assert_tree_equal(a, b, what=""):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x1, x2 in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2),
+                                      err_msg=what)
+
+
+def _assert_tree_ulp_close(a, b, what=""):
+    """Float-identical up to XLA's per-program FMA contraction (~2 ULP).
+
+    Used ONLY for the fleet-flat configuration: the R-vmapped dp_mix
+    matmul lands in different fusion clusters for different compiled
+    programs (scan lengths), and XLA CPU contracts a*b+c into fma in some
+    of them — a 1-2 ULP rounding difference with identical PRNG draws.
+    Every other configuration is asserted BITWISE (DESIGN.md §10)."""
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x1, x2 in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x1), np.asarray(x2),
+                                   rtol=5e-6, atol=5e-7, err_msg=what)
+
+
+def _run_chunked(body, carry, partition):
+    runner = TJ.ChunkRunner(body, donate=False)
+    outs = []
+    for k in partition:
+        carry, out = runner.run(carry, k)
+        outs.append(out)
+    return carry, TJ.concat_chunks(outs)
+
+
+# ---------------------------------------------------------------------------
+# scan-vs-loop bitwise equivalence, all three paths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("flat", [False, True], ids=["tree", "flat"])
+def test_static_scan_equals_loop(flat):
+    cfg = _cfg()
+    proto = _proto(flat_buffer=flat)
+    wp = _wp(cfg)
+    unravel_row = None
+    if flat:
+        _unravel, unravel_row = X.worker_unravelers(wp)
+        wp = X.flatten_worker_tree(wp)
+    body = TJ.make_round_body(cfg, proto, _store(), flat=flat,
+                              unravel_row=unravel_row)
+    carry0 = TJ.TrajCarry(jax.random.PRNGKey(3), wp)
+    c_loop, out_loop = TJ.run_per_round(body, carry0, 7)
+    c_scan, out_scan = _run_chunked(body, carry0, (3, 3, 1))
+    _assert_tree_equal(c_loop.params, c_scan.params, "final params")
+    _assert_tree_equal(c_loop.key, c_scan.key, "carry key")
+    _assert_tree_equal(out_loop["metrics"], out_scan["metrics"], "metrics")
+
+
+@pytest.mark.parametrize("flat", [False, True], ids=["tree", "flat"])
+def test_dynamic_scan_equals_loop(flat):
+    cfg = _cfg()
+    proto = _proto(channel_model="dynamic", scenario="iot_dense",
+                   flat_buffer=flat)
+    sim = proto.simulator()
+    wp = _wp(cfg)
+    unravel_row = None
+    if flat:
+        _unravel, unravel_row = X.worker_unravelers(wp)
+        wp = X.flatten_worker_tree(wp)
+    body = TJ.make_round_body(cfg, proto, _store(), sim=sim, flat=flat,
+                              unravel_row=unravel_row)
+    net0 = sim.init(jax.random.PRNGKey(4))
+    carry0 = TJ.TrajCarry(jax.random.PRNGKey(5), wp, net0)
+    c_loop, out_loop = TJ.run_per_round(body, carry0, 6)
+    c_scan, out_scan = _run_chunked(body, carry0, (4, 2))
+    _assert_tree_equal(c_loop.params, c_scan.params, "final params")
+    _assert_tree_equal(c_loop.net, c_scan.net, "net state")
+    _assert_tree_equal(out_loop["chan"], out_scan["chan"], "chan trajectory")
+    _assert_tree_equal(out_loop["W"], out_scan["W"], "W log")
+    assert out_scan["chan"].h.shape == (6, W)
+    assert out_scan["W"].shape == (6, W, W)
+
+
+@pytest.mark.parametrize("flat", [False, True], ids=["tree", "flat"])
+def test_fleet_scan_equals_loop(flat):
+    from repro.fleet import FleetEngine
+    cfg = _cfg()
+    proto = _proto(channel_model="dynamic", scenario="iot_dense",
+                   replicates=R, flat_buffer=flat)
+    fleet = FleetEngine(proto)
+    wp1 = _wp(cfg)
+    wp = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (R,) + a.shape), wp1)
+    unravel_row = None
+    if flat:
+        _unravel, unravel_row = X.worker_unravelers(wp, lead_axes=2)
+        wp = X.flatten_worker_tree(wp, lead_axes=2)
+    body = TJ.make_round_body(cfg, proto, _store(), fleet=fleet, flat=flat,
+                              unravel_row=unravel_row)
+    net0 = fleet.init(jax.random.PRNGKey(6))
+    carry0 = TJ.TrajCarry(jax.random.PRNGKey(7), wp, net0)
+    c_loop, out_loop = TJ.run_per_round(body, carry0, 5)
+    c_scan, out_scan = _run_chunked(body, carry0, (2, 2, 1))
+    # channel/W streams are pure PRNG functions — bitwise in EVERY config;
+    # params are bitwise on the tree path, ULP-close on the flat path
+    # (per-program FMA contraction of the vmapped dp_mix matmul)
+    assert_params = _assert_tree_ulp_close if flat else _assert_tree_equal
+    assert_params(c_loop.params, c_scan.params, "final params")
+    _assert_tree_equal(out_loop["chan"], out_scan["chan"], "chan trajectory")
+    _assert_tree_equal(out_loop["W"], out_scan["W"], "W log")
+    assert out_scan["chan"].h.shape == (5, R, W)
+    assert out_scan["metrics"]["loss"].shape == (5, R)
+    # report layout: replicate-major [R, T, ...] for the batched accounting
+    rm = TJ.replicate_major(out_scan["chan"])
+    assert rm.h.shape == (R, 5, W)
+    np.testing.assert_array_equal(np.asarray(rm.h[:, 2]),
+                                  np.asarray(out_scan["chan"].h[2]))
+
+
+# ---------------------------------------------------------------------------
+# chunk boundaries cannot change the realized PRNG stream (K ∤ T)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(k=st.integers(min_value=1, max_value=9))
+def test_chunk_partition_preserves_prng_stream(k):
+    """Any chunk length K (divisor of T or not) realizes the SAME stream:
+    identical channel draws, params and metrics as the K=T single chunk."""
+    cfg = _cfg()
+    proto = _proto(channel_model="dynamic", scenario="iot_dense")
+    sim = proto.simulator()
+    body = TJ.make_round_body(cfg, proto, _store(), sim=sim)
+    net0 = sim.init(jax.random.PRNGKey(8))
+    carry0 = TJ.TrajCarry(jax.random.PRNGKey(9), _wp(cfg), net0)
+    T = 8
+    ref_carry, ref_out = _run_chunked(body, carry0, (T,))
+    partition = [k] * (T // k) + ([T % k] if T % k else [])
+    got_carry, got_out = _run_chunked(body, carry0, partition)
+    _assert_tree_equal(ref_out["chan"], got_out["chan"],
+                       f"chan stream, partition={partition}")
+    _assert_tree_equal(ref_carry.params, got_carry.params,
+                       f"params, partition={partition}")
+    _assert_tree_equal(ref_out["metrics"], got_out["metrics"],
+                       f"metrics, partition={partition}")
+
+
+# ---------------------------------------------------------------------------
+# chunk planning / auto sizing
+# ---------------------------------------------------------------------------
+
+
+def test_plan_chunks_covers_and_cuts_at_eval_boundaries():
+    plan = TJ.plan_chunks(201, 32, 50)
+    assert sum(n for n, _ in plan) == 201
+    assert all(1 <= n <= 32 for n, _ in plan)
+    # eval flags exactly at rounds t % 50 == 0 (t = cumulative-1)
+    done, evals = 0, []
+    for n, ev in plan:
+        done += n
+        if ev:
+            evals.append(done - 1)
+        else:
+            assert (done - 1) % 50 != 0
+    assert evals == [0, 50, 100, 150, 200]
+
+
+def test_plan_chunks_no_eval():
+    plan = TJ.plan_chunks(10, 4, 0)
+    assert plan == [(4, False), (4, False), (2, False)]
+
+
+def test_plan_chunks_degenerate():
+    assert TJ.plan_chunks(0, 4, 10) == []
+    with pytest.raises(ValueError):
+        TJ.plan_chunks(5, 0, 10)
+    with pytest.raises(ValueError):
+        TJ.ChunkRunner(lambda c: (c, {})).run(None, 0)
+
+
+def test_auto_chunk():
+    assert TJ.auto_chunk(50) == 50
+    assert TJ.auto_chunk(50, coherence_rounds=20) == 20
+    assert TJ.auto_chunk(10, coherence_rounds=20) == 10    # <= eval interval
+    assert TJ.auto_chunk(50, coherence_rounds=10**9) == 50  # static preset
+    assert TJ.auto_chunk(0, coherence_rounds=None) == 512
+    assert TJ.auto_chunk(0, coherence_rounds=64) == 64
+
+
+# ---------------------------------------------------------------------------
+# device-resident data store
+# ---------------------------------------------------------------------------
+
+
+def test_class_store_samples_within_partitions():
+    x, y, parts = _data()
+    # make features identify their global index so gathers are auditable
+    x[:, 0] = np.arange(NDATA)
+    store = ClassificationStore.build(x, y, parts, BATCH)
+    batch = jax.jit(store.sample)(jax.random.PRNGKey(0))
+    assert batch["x"].shape == (W, BATCH, DIM)
+    assert batch["y"].shape == (W, BATCH)
+    idx = np.asarray(batch["x"][:, :, 0]).astype(np.int64)
+    for w in range(W):
+        assert set(idx[w].tolist()) <= set(parts[w].tolist())
+        np.testing.assert_array_equal(np.asarray(batch["y"][w]),
+                                      np.asarray(y[idx[w]]))
+
+
+def test_class_store_unequal_partitions():
+    x, y, _ = _data()
+    parts = [np.arange(0, 3), np.arange(3, NDATA)]   # 3 vs 157 samples
+    store = ClassificationStore.build(x, y, parts, 8)
+    batch = store.sample(jax.random.PRNGKey(1))
+    idx0 = set(np.asarray(
+        jnp.argmin(jnp.abs(batch["x"][0, :, None, :] - jnp.asarray(x)[None]
+                           ).sum(-1), axis=-1)).tolist())
+    assert idx0 <= {0, 1, 2}
+
+
+def test_class_store_fleet_axis_and_key_determinism():
+    store = _store()
+    k = jax.random.PRNGKey(2)
+    br = store.sample_fleet(k, R)
+    assert br["x"].shape == (R, W, BATCH, DIM)
+    # replicate r IS sample(split(k)[r]) — the fleet/loop anchor
+    keys = jax.random.split(k, R)
+    for r in range(R):
+        one = store.sample(keys[r])
+        np.testing.assert_array_equal(np.asarray(br["x"][r]),
+                                      np.asarray(one["x"]))
+    # same key -> same batch; different key -> different batch
+    np.testing.assert_array_equal(np.asarray(store.sample(k)["x"]),
+                                  np.asarray(store.sample(k)["x"]))
+    assert not np.array_equal(np.asarray(store.sample(k)["x"]),
+                              np.asarray(store.sample(
+                                  jax.random.PRNGKey(3))["x"]))
+
+
+def test_lm_store_windows_stay_in_worker_slice():
+    n_tok, seq = 4000, 16
+    toks = np.arange(n_tok, dtype=np.int32) % 50
+    store = LMStore.build(toks, 4, 3, seq)
+    batch = store.sample(jax.random.PRNGKey(4))
+    assert batch["tokens"].shape == (4, 3, seq)
+    per = n_tok // 4
+    got = np.asarray(batch["tokens"])
+    for w in range(4):
+        for b in range(3):
+            # windows are contiguous mod-50 runs inside worker w's slice
+            seqv = got[w, b].astype(np.int64)
+            diffs = np.diff(seqv) % 50
+            assert (diffs == 1).all()
+
+
+def test_store_from_batcher_roundtrip():
+    x, y, parts = _data()
+    fb = FederatedBatcher(x, y, parts, BATCH, seed=0)
+    cs = store_from_batcher(fb)
+    assert isinstance(cs, ClassificationStore)
+    assert cs.batch == BATCH and cs.n_workers == W
+    toks = (np.arange(2000) % 7).astype(np.int32)
+    lb = LMBatcher(toks, 4, 2, 8, seed=0)
+    ls = store_from_batcher(lb)
+    assert isinstance(ls, LMStore)
+    assert (ls.batch, ls.seq_len, ls.n_workers) == (2, 8, 4)
+    with pytest.raises(TypeError):
+        store_from_batcher(object())
+
+
+def test_lm_round_body_runs():
+    """The LM-family scan body (tokens batches) compiles and steps."""
+    from repro.configs.registry import get_arch
+    cfg = get_arch("dwfl-paper").replace(
+        family="transformer", d_model=16, num_layers=1, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=11)
+    toks = (np.arange(6000) % 11).astype(np.int32)
+    store = LMStore.build(toks, W, 2, 8)
+    proto = _proto()
+    key = jax.random.PRNGKey(10)
+    wp = P.init_worker_params(key, cfg, W)
+    body = TJ.make_round_body(cfg, proto, store)
+    runner = TJ.ChunkRunner(body, donate=False)
+    carry, out = runner.run(TJ.TrajCarry(key, wp), 3)
+    assert out["metrics"]["loss"].shape == (3,)
+    assert np.isfinite(np.asarray(out["metrics"]["loss"])).all()

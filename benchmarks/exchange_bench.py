@@ -20,9 +20,10 @@ import jax.numpy as jnp
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 OUT = ROOT / "BENCH_exchange.json"
-# the CI --smoke gate writes its tiny-shape numbers HERE so it never
-# clobbers the versioned full-run trajectory artifact above
-OUT_SMOKE = ROOT / "BENCH_exchange_smoke.json"
+# the CI --smoke gate writes its tiny-shape numbers into the gitignored
+# bench_out/ scratch directory so they never land at the repo root next to
+# (or get committed alongside) the versioned full-run artifact above
+OUT_SMOKE = ROOT / "bench_out" / "BENCH_exchange_smoke.json"
 
 SIZES_FULL = ((256, 512), (512,), (512, 512), (512,), (512, 256), (256,),
               (256, 10), (10,))
@@ -77,6 +78,7 @@ def main(steps: int = 250, smoke: bool = False):
         "cases": cases,
     }
     out = OUT_SMOKE if smoke else OUT
+    out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(report, indent=2) + "\n")
     rows = [f"exchange/fused_r{c['replicates']}_d{c['d']},"
             f"{c['fused_us']:.1f},{c['speedup']:.2f}" for c in cases]

@@ -90,8 +90,9 @@ def _dp_mix_pair(N=8, sizes=((256, 512), (512,), (512, 512), (512,),
         return mix_ops.dp_mix_round_plan(flat, gflat, seed, plan,
                                          gamma=gamma, eta=eta)
 
-    flat = X.flatten_worker_tree(tree)
-    gflat = X.flatten_worker_tree(gtree)
+    fspec = X.make_flat_spec(tree)
+    flat = fspec.flatten(tree)
+    gflat = fspec.flatten(gtree)
     return (jax.jit(unfused), (tree, gtree, key),
             jax.jit(fused), (flat, gflat, mix_ops.seed_from_key(key)))
 

@@ -1,0 +1,168 @@
+"""Model-sharded flat-buffer round throughput (repro.shard), written to
+``BENCH_shard.json`` at the repo root so the perf trajectory is versioned
+alongside the code.
+
+    PYTHONPATH=src python -m benchmarks.shard_bench [--smoke]
+
+One case per shard count in {1, 2, 4}: S=1 is the production UNSHARDED
+fused flat step (the baseline), S>1 the shard_map round on an
+S-device model mesh (this module forces
+``--xla_force_host_platform_device_count=4`` when no device count was
+requested, so the mesh is real even on a laptop). Every sharded case is
+cross-checked bitwise against the unsharded round on the canonical
+columns before timing — a throughput number for a wrong round is
+worthless.
+
+Honest-numbers caveat recorded in the JSON: on host-platform (fake) CPU
+devices all shards share the same silicon, so sharding measures the
+partition + collective OVERHEAD, not a speedup — the win on a real pod is
+capacity (each device holds d/S columns), which is exactly what the
+per-shard peak-buffer-bytes column shows.
+"""
+from __future__ import annotations
+
+import os
+
+# must precede the first jax import; APPEND to any existing XLA_FLAGS so an
+# unrelated exported flag doesn't silently collapse the bench to 1 device —
+# only an operator-forced device count is respected
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=4").strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT = ROOT / "BENCH_shard.json"
+# CI --smoke numbers go to the gitignored scratch dir (never committed)
+OUT_SMOKE = ROOT / "bench_out" / "BENCH_shard_smoke.json"
+
+SHARDS = (1, 2, 4)
+N_WORKERS = 8
+INPUT_DIM = 256
+BATCH = 16
+
+
+def _task(hidden: int, seed: int = 0):
+    from repro.configs.registry import get_arch
+    from repro.core import exchange as X
+    from repro.core import protocol as P
+    import repro.models.mlp as mlp
+
+    cfg = get_arch("dwfl-paper").replace(d_model=hidden)
+    proto = P.ProtocolConfig(scheme="dwfl", n_workers=N_WORKERS, gamma=0.02,
+                             eta=0.4, clip=1.0, p_dbm=60.0, sigma=0.7,
+                             sigma_m=0.5, seed=seed)
+    params = mlp.init(jax.random.PRNGKey(seed), cfg, input_dim=INPUT_DIM)
+    wp = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (N_WORKERS,) + a.shape), params)
+    rng = np.random.default_rng(seed)
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(N_WORKERS, BATCH, INPUT_DIM))
+                         .astype(np.float32)),
+        "y": jnp.asarray(rng.integers(0, 10, (N_WORKERS, BATCH))
+                         .astype(np.int32)),
+    }
+    return cfg, proto, wp, batch
+
+
+def _time_rounds(step, flat, batch, n_iter: int):
+    key = jax.random.PRNGKey(7)
+    flat, _ = step(flat, batch, key)                       # compile
+    jax.block_until_ready(flat)
+    t0 = time.perf_counter()
+    for i in range(n_iter):
+        flat, _ = step(flat, batch, jax.random.fold_in(key, i))
+    jax.block_until_ready(flat)
+    return (time.perf_counter() - t0) / n_iter * 1e6        # us/round
+
+
+def main(smoke: bool = False):
+    from repro.core import exchange as X
+    from repro.core import protocol as P
+    from repro.launch import mesh as mesh_lib
+    from repro.launch import shardings as shardings_lib
+    from repro.shard import make_sharded_flat_train_step
+
+    hidden = 64 if smoke else 512
+    n_iter = 5 if smoke else 30
+    cfg, proto, wp, batch = _task(hidden)
+
+    spec0 = X.make_flat_spec(wp)
+    flat0 = spec0.flatten(wp)
+    base = jax.jit(P.make_flat_train_step(cfg, proto, spec0.unravel_row))
+
+    # reference round for the bitwise cross-check (fixed key)
+    ref, _ = base(flat0, batch, jax.random.PRNGKey(3))
+    ref = np.asarray(ref)
+
+    cases, rows = [], []
+    for S in SHARDS:
+        if S == 1:
+            step, flat, spec = base, flat0, spec0
+            kind = "unsharded"
+        else:
+            if jax.device_count() < S:
+                rows.append(f"shard/S{S},skipped,0")
+                continue
+            spec = X.make_flat_spec(wp, n_shards=S)
+            mesh = mesh_lib.make_shard_mesh(S)
+            step = jax.jit(make_sharded_flat_train_step(cfg, proto, spec,
+                                                        mesh=mesh))
+            flat = jax.device_put(
+                spec.flatten(wp),
+                shardings_lib.flat_buffer_sharding(spec, mesh))
+            kind = f"{S}-device shard_map"
+            got, _ = step(flat, batch, jax.random.PRNGKey(3))
+            got = np.asarray(spec.unpad(got))
+            if not np.array_equal(got, ref):
+                raise AssertionError(
+                    f"S={S} sharded round diverged from the unsharded one "
+                    f"(max |diff| {np.abs(got - ref).max()})")
+        us = _time_rounds(step, flat, batch, n_iter)
+        case = {
+            "shards": S,
+            "kind": kind,
+            "d": spec0.d,
+            "width": spec.width,
+            "buffer_bytes_per_device": 4 * N_WORKERS * spec.width // S,
+            "us_per_round": round(us, 1),
+            "rounds_per_s": round(1e6 / us, 2),
+        }
+        cases.append(case)
+        rows.append(f"shard/S{S},{us:.1f},{case['rounds_per_s']}")
+
+    report = {
+        "bench": "shard",
+        "workers": N_WORKERS,
+        "hidden": hidden,
+        "iters": n_iter,
+        "devices": jax.device_count(),
+        "smoke": smoke,
+        "note": ("host-platform CPU devices share one socket: sharded "
+                 "rows measure partition+collective overhead, the "
+                 "capacity win is buffer_bytes_per_device"),
+        "cases": cases,
+    }
+    out = OUT_SMOKE if smoke else OUT
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, few iters; writes bench_out/"
+                         "BENCH_shard_smoke.json")
+    args = ap.parse_args()
+    print("\n".join(main(smoke=args.smoke)))

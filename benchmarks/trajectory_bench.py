@@ -37,9 +37,10 @@ import jax.numpy as jnp
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 OUT = ROOT / "BENCH_trajectory.json"
-# the CI --smoke gate writes its tiny-shape numbers HERE so it never
-# clobbers the versioned full-run trajectory artifact above
-OUT_SMOKE = ROOT / "BENCH_trajectory_smoke.json"
+# the CI --smoke gate writes its tiny-shape numbers into the gitignored
+# bench_out/ scratch directory so they never land at the repo root next to
+# (or get committed alongside) the versioned full-run artifact above
+OUT_SMOKE = ROOT / "bench_out" / "BENCH_trajectory_smoke.json"
 
 # the paper MLP config at smoke width (dispatch-dominated regime: the
 # fused flat-buffer round is O(100us), so per-round host work is the
@@ -69,9 +70,8 @@ def _task(n_workers: int, batch: int, seed: int = 0):
     params = mlp.init(jax.random.PRNGKey(seed), cfg, input_dim=INPUT_DIM)
     wp = jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a[None], (n_workers,) + a.shape), params)
-    _unravel, unravel_row = X.worker_unravelers(wp)
-    flat = X.flatten_worker_tree(wp)
-    return cfg, bat, store, flat, unravel_row
+    spec = X.make_flat_spec(wp)
+    return cfg, bat, store, spec.flatten(wp), spec.unravel_row
 
 
 def _rate_pair(run_a, run_b, total_rounds: int, passes: int = 3,
@@ -235,6 +235,7 @@ def main(steps: int = 250, smoke: bool = False):
         "cases": cases,
     }
     out = OUT_SMOKE if smoke else OUT
+    out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(report, indent=2) + "\n")
     if not smoke:
         # the ISSUE-4 acceptance gate: >= 2x rounds/sec at K >= 32 on

@@ -44,16 +44,16 @@ worker_params = jax.tree_util.tree_map(
 #    pytree is recovered only at eval time. Swap make_flat_train_step for
 #    make_train_step (and drop the ravel) to get the classic pytree path.
 from repro.core import exchange as E
-flat = E.flatten_worker_tree(worker_params)            # [N, d] — once
-unravel, unravel_row = E.worker_unravelers(worker_params)
-step = jax.jit(P.make_flat_train_step(cfg, proto, unravel_row))
+spec = E.make_flat_spec(worker_params)                 # the buffer contract
+flat = spec.flatten(worker_params)                     # [N, d] — once
+step = jax.jit(P.make_flat_train_step(cfg, proto, spec.unravel_row))
 evaluate = jax.jit(P.make_eval_fn(cfg))
 key = jax.random.PRNGKey(1)
 for t in range(301):
     key, sk = jax.random.split(key)
     flat, metrics = step(flat, batcher.next(), sk)
     if t % 100 == 0:
-        ev_loss, ev_acc = evaluate(unravel(flat), batcher.full(128))
+        ev_loss, ev_acc = evaluate(spec.unravel(flat), batcher.full(128))
         print(f"round {t:4d}  train_loss={float(metrics['loss']):.3f}  "
               f"eval_acc={float(ev_acc):.3f}")
 print("done — per-round epsilon:",

@@ -3,14 +3,34 @@
 # dynamic-scenario smoke run (~2 minutes on one CPU core).
 #
 #   ./scripts/ci_check.sh            # full tier-1 + smoke
+#   ./scripts/ci_check.sh --fast     # fast test tier (-m "not claims",
+#                                    # pytest-xdist when available) + smoke
 #   ./scripts/ci_check.sh --smoke    # smoke only (fast sanity)
+#
+# The statistical claims tier (tests/test_claims.py, -m claims) runs in
+# its own CI job; the full (default) mode here includes it.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-if [[ "${1:-}" != "--smoke" ]]; then
+# pytest-xdist is a CI nicety, not a container guarantee
+XDIST=""
+if python -c "import xdist" >/dev/null 2>&1; then
+    XDIST="-n auto"
+fi
+
+# the per-ISSUE regression pytest re-runs below duplicate the --fast/full
+# tiers (both already collect those modules); only --smoke mode, which runs
+# no pytest tier, still needs them
+RUN_REGRESSION=0
+if [[ "${1:-}" == "--smoke" ]]; then RUN_REGRESSION=1; fi
+
+if [[ "${1:-}" == "--fast" ]]; then
+    echo "== fast tier: pytest -m 'not claims' ${XDIST} =="
+    python -m pytest -q -m "not claims" ${XDIST}
+elif [[ "${1:-}" != "--smoke" ]]; then
     echo "== tier-1: pytest =="
     python -m pytest -x -q
 fi
@@ -45,6 +65,7 @@ name, us, traces = row.split(",")
 assert float(traces) == 1.0, f"fleet exchange retraced: {traces}"
 EOF
 
+if [[ "$RUN_REGRESSION" == 1 ]]; then
 echo "== ISSUE 2 regression tests: sampling amplification + scheme composition =="
 python -m pytest -q \
     tests/test_dwfl.py::test_sampled_mask_no_fixed_subset \
@@ -52,6 +73,7 @@ python -m pytest -q \
     tests/test_dwfl.py::test_orthogonal_deep_fade_bounded \
     tests/test_privacy.py::test_epsilon_report_composes_scheme_budget \
     tests/test_fleet.py
+fi
 
 echo "== ISSUE 3 smoke: fused dp_mix round (>=1.5x + zero retraces) =="
 python - <<'EOF'
@@ -67,13 +89,13 @@ echo "== ISSUE 3 smoke: exchange perf artifact (smoke shapes) =="
 python -m benchmarks.exchange_bench --smoke
 python - <<'EOF'
 import json
-# smoke writes its own file so it never clobbers the versioned full-run
-# BENCH_exchange.json trajectory artifact
-rep = json.load(open("BENCH_exchange_smoke.json"))
+# smoke writes into gitignored bench_out/ so it never clobbers (or gets
+# committed next to) the versioned full-run BENCH_exchange.json artifact
+rep = json.load(open("bench_out/BENCH_exchange_smoke.json"))
 assert {c["replicates"] for c in rep["cases"]} == {1, 8}, rep
 for c in rep["cases"]:
     assert c["speedup"] > 1.0, c   # fused must not regress below unfused
-print("BENCH_exchange_smoke.json:",
+print("bench_out/BENCH_exchange_smoke.json:",
       ", ".join(f"R={c['replicates']}: {c['speedup']}x" for c in rep["cases"]))
 EOF
 
@@ -85,10 +107,12 @@ python -m repro.launch.train \
     --channel-model dynamic --scenario iot_dense --replicates 2 \
     --flat-buffer --eval-every 5
 
+if [[ "$RUN_REGRESSION" == 1 ]]; then
 echo "== ISSUE 3 regression tests: unified exchange engine =="
 python -m pytest -q tests/test_exchange.py \
     tests/test_dwfl.py::test_eval_fn_lm_next_token_accuracy
 python -m pytest -q tests/test_kernels.py -k "dp_mix or dp_perturb"
+fi
 
 echo "== ISSUE 4 smoke: scan-fused trajectory engine (>=2x vs per-round) =="
 python - <<'EOF'
@@ -100,15 +124,15 @@ echo "== ISSUE 4 smoke: trajectory perf artifact (smoke run) =="
 python -m benchmarks.trajectory_bench --smoke
 python - <<'EOF'
 import json
-# smoke writes its own file so it never clobbers the versioned full-run
-# BENCH_trajectory.json trajectory artifact
-rep = json.load(open("BENCH_trajectory_smoke.json"))
+# smoke writes into gitignored bench_out/ so it never clobbers (or gets
+# committed next to) the versioned full-run BENCH_trajectory.json artifact
+rep = json.load(open("bench_out/BENCH_trajectory_smoke.json"))
 assert {c["path"] for c in rep["cases"]} == {"static", "dynamic", "fleet"}, rep
 assert any(c["replicates"] == 8 for c in rep["cases"]), rep
 for c in rep["cases"]:
     # shorter smoke run => looser floor than the full-run 2x acceptance
     assert c["speedup"] > 1.3, c
-print("BENCH_trajectory_smoke.json:",
+print("bench_out/BENCH_trajectory_smoke.json:",
       ", ".join(f"{c['path']}: {c['speedup']}x" for c in rep["cases"]))
 EOF
 
@@ -121,7 +145,35 @@ python -m repro.launch.train \
     --channel-model dynamic --scenario iot_dense --replicates 2 \
     --flat-buffer --chunk-rounds 4 --eval-every 5
 
+if [[ "$RUN_REGRESSION" == 1 ]]; then
 echo "== ISSUE 4 regression tests: scan-vs-loop equivalence =="
-python -m pytest -q tests/test_trajectory.py
+python -m pytest -q -m "not slow" tests/test_trajectory.py
+fi
+
+echo "== ISSUE 5 smoke: model-sharded flat buffer (repro.shard) =="
+# logical sharding on one device, then a REAL model=2 host-device mesh
+python -m repro.launch.train \
+    --arch dwfl-paper --steps 10 --workers 6 --batch-size 8 \
+    --flat-buffer --model-shards 2 --chunk-rounds 4 --eval-every 5
+XLA_FLAGS=--xla_force_host_platform_device_count=2 python -m repro.launch.train \
+    --arch dwfl-paper --steps 10 --workers 6 --batch-size 8 \
+    --flat-buffer --model-shards 2 --chunk-rounds 4 --eval-every 5
+
+echo "== ISSUE 5 smoke: shard perf artifact (throughput for S in 1/2/4) =="
+python -m benchmarks.shard_bench --smoke
+python - <<'EOF'
+import json
+rep = json.load(open("bench_out/BENCH_shard_smoke.json"))
+shards = {c["shards"] for c in rep["cases"]}
+assert shards == {1, 2, 4}, rep
+print("bench_out/BENCH_shard_smoke.json:",
+      ", ".join(f"S={c['shards']}: {c['us_per_round']}us/round"
+                for c in rep["cases"]))
+EOF
+
+if [[ "$RUN_REGRESSION" == 1 ]]; then
+echo "== ISSUE 5 regression tests: shard parity + checkpoint roundtrip =="
+python -m pytest -q -m "not slow" tests/test_shard.py tests/test_checkpoint.py
+fi
 
 echo "ci_check: OK"

@@ -1,1 +1,3 @@
-from repro.checkpoint.checkpoint import save, restore  # noqa: F401
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    restore, restore_flat, save, save_flat,
+)

@@ -56,6 +56,71 @@ def save(path: str, tree, step: int = 0, metadata: Optional[Dict[str, Any]] = No
     os.replace(tmp, path + ".json")
 
 
+def save_flat(path: str, flat, spec, *, step: int = 0, state=None,
+              metadata: Optional[Dict[str, Any]] = None):
+    """Checkpoint the persistent flat DWFL buffer of an exchange.FlatSpec.
+
+    The buffer is stored in its CANONICAL form — the layout-independent
+    [lead..., d] view (spec.unpad): shard padding carries no information,
+    so a checkpoint written under any model-shard count restores under any
+    other (restore_flat re-pads for the target layout). The manifest
+    records the writing layout (``flat_layout``: d, lead axes, shard
+    count/width — repro.shard.ShardLayout.to_meta) so a mismatched-d
+    restore fails loudly instead of silently misaligning leaf offsets.
+
+    ``state``: optional extra pytree saved alongside (mid-trajectory
+    checkpoints store the PRNG carry key and the repro.net NetState here —
+    everything needed to resume bitwise; tests/test_checkpoint.py)."""
+    meta = dict(metadata or {})
+    meta["flat_layout"] = spec.layout_meta()
+    if spec.layout is not None:
+        meta["flat_layout"]["shard"] = spec.layout.to_meta()
+    tree = {"flat": spec.unpad(flat)}
+    if state is not None:
+        tree["state"] = state
+    save(path, tree, step=step, metadata=meta)
+
+
+def restore_flat(path: str, spec, state_like=None
+                 ) -> Tuple[Any, Any, Dict[str, Any]]:
+    """Restore a save_flat checkpoint INTO ``spec``'s layout.
+
+    Returns (flat, state, manifest): ``flat`` is the physical buffer for
+    ``spec`` (canonical d columns restored bitwise, shard padding zeros) —
+    the saved and requested shard counts are independent. ``state_like``
+    must mirror the saved extra-state pytree structure when one was
+    saved."""
+    import jax.numpy as jnp
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    rec = manifest.get("metadata", {}).get("flat_layout", {})
+    if rec:
+        if int(rec.get("d", spec.d)) != spec.d:
+            raise ValueError(
+                f"checkpoint buffer has d={rec.get('d')} but the restoring "
+                f"spec ravels to d={spec.d} — different model/leaf contract")
+        ls = rec.get("lead_shape")
+        if ls is not None and tuple(ls) != tuple(spec.lead_shape):
+            raise ValueError(
+                f"checkpoint buffer has lead shape {tuple(ls)} but the "
+                f"restoring spec expects {tuple(spec.lead_shape)} — "
+                f"different worker/replicate counts")
+        if "shard" in rec:
+            # fires the ShardLayout drift guard (e.g. a lane-tile change
+            # between the writing and restoring builds)
+            from repro.shard.layout import ShardLayout
+            ShardLayout.from_meta(rec["shard"])
+    like = {"flat": np.zeros(tuple(spec.lead_shape) + (spec.d,),
+                             np.float32)}
+    if state_like is not None:
+        like["state"] = state_like
+    tree, manifest = restore(path, like)
+    flat = jnp.asarray(tree["flat"])
+    if spec.layout is not None:
+        flat = spec.layout.pad(flat)
+    return flat, tree.get("state"), manifest
+
+
 def restore(path: str, like) -> Tuple[Any, Dict[str, Any]]:
     """Restore into the structure of ``like`` (a template pytree)."""
     with open(path + ".json") as f:

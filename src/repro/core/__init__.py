@@ -2,8 +2,8 @@
 the unified mixing-matrix exchange engine (repro.core.exchange)."""
 from repro.core.channel import ChannelConfig, ChannelState  # noqa: F401
 from repro.core.exchange import (  # noqa: F401
-    ExchangeSpec, MixPlan, flatten_worker_tree, mix_exchange, resolve_spec,
-    worker_unravelers,
+    ExchangeSpec, FlatSpec, MixPlan, flatten_worker_tree, make_flat_spec,
+    mix_exchange, resolve_spec, worker_unravelers,
 )
 from repro.core.protocol import (  # noqa: F401
     ProtocolConfig, make_train_step, make_dynamic_train_step,

@@ -465,49 +465,122 @@ def resolve_spec(proto, axis: Optional[str] = None,
 
 
 # ---------------------------------------------------------------------------
-# persistent flat [W, d] parameter buffer
+# persistent flat [W, d] parameter buffer — layout-aware spec
 # ---------------------------------------------------------------------------
 
 
+class FlatSpec:
+    """Layout-aware flatten/unravel specification for the persistent flat
+    parameter buffer.
+
+    Built once from a template pytree (a real or ``jax.eval_shape`` tree —
+    only shapes/dtypes are read), it owns the buffer CONTRACT every
+    flat-buffer consumer shares: the leaf order/shapes/dtypes of the
+    ravel, the number of leading batch axes (1: [W, d]; 2: the fleet's
+    [R, W, d]), and — when a ``repro.shard.ShardLayout`` is attached — the
+    model-axis shard geometry (physical width padded to
+    ``layout.padded_width``, shard s owning global columns
+    [s·shard_width, (s+1)·shard_width)). Padding columns are zeros and
+    live PAST every leaf offset, so ``unravel``/``unravel_row`` read the
+    same bytes whatever the layout — re-laying-out a buffer is a pure
+    pad/slice (see checkpoint.restore_flat).
+
+    ``flatten(X)``: ravel ONCE at init ([lead..., width] f32) — the
+    flat-buffer training path then never re-concatenates per round.
+    ``unravel(flat)``: full worker-stacked tree (original dtypes) — only
+    at eval/checkpoint time. ``unravel_row(v)``: ONE worker's (un-stacked)
+    tree — inside the per-worker grad vmap of the flat train step.
+    """
+
+    def __init__(self, template: Tree, lead_axes: int = 1, layout=None):
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        self._treedef = treedef
+        self._shapes = [tuple(l.shape) for l in leaves]
+        self._dtypes = [l.dtype for l in leaves]
+        self._sizes = [int(np.prod(s[lead_axes:])) for s in self._shapes]
+        self.lead_axes = int(lead_axes)
+        self.lead_shape = (tuple(self._shapes[0][:lead_axes])
+                           if self._shapes else ())
+        self.d = int(sum(self._sizes))
+        if layout is not None and layout.d != self.d:
+            raise ValueError(f"layout is for d={layout.d}, template ravels "
+                             f"to d={self.d}")
+        self.layout = layout
+
+    @property
+    def width(self) -> int:
+        """Physical last-axis width of the buffer (d, or the layout's
+        shard-padded width)."""
+        return self.d if self.layout is None else self.layout.padded_width
+
+    @property
+    def n_shards(self) -> int:
+        return 1 if self.layout is None else self.layout.n_shards
+
+    def flatten(self, X: Tree) -> jnp.ndarray:
+        leaves = jax.tree_util.tree_leaves(X)
+        flat = jnp.concatenate(
+            [l.reshape(l.shape[:self.lead_axes] + (-1,)).astype(jnp.float32)
+             for l in leaves], axis=-1)
+        if self.width > self.d:
+            pad = [(0, 0)] * self.lead_axes + [(0, self.width - self.d)]
+            flat = jnp.pad(flat, pad)
+        return flat
+
+    def unpad(self, flat):
+        """Physical buffer → the canonical (layout-independent) [..., d]
+        view."""
+        return flat[..., :self.d]
+
+    def unravel(self, flat) -> Tree:
+        out, off = [], 0
+        lead = flat.shape[:-1]
+        for s, dt, n in zip(self._shapes, self._dtypes, self._sizes):
+            out.append(flat[..., off:off + n]
+                       .reshape(lead + s[self.lead_axes:]).astype(dt))
+            off += n
+        return jax.tree_util.tree_unflatten(self._treedef, out)
+
+    def unravel_row(self, v) -> Tree:
+        out, off = [], 0
+        for s, dt, n in zip(self._shapes, self._dtypes, self._sizes):
+            out.append(v[off:off + n].reshape(s[self.lead_axes:]).astype(dt))
+            off += n
+        return jax.tree_util.tree_unflatten(self._treedef, out)
+
+    def layout_meta(self) -> dict:
+        """JSON-able layout record for checkpoint manifests."""
+        return {
+            "d": self.d,
+            "lead_axes": self.lead_axes,
+            "lead_shape": list(self.lead_shape),
+            "n_shards": self.n_shards,
+            "width": self.width,
+        }
+
+
+def make_flat_spec(template: Tree, lead_axes: int = 1, layout=None,
+                   n_shards: Optional[int] = None) -> FlatSpec:
+    """Build the FlatSpec for ``template``. Pass either a ready
+    ``repro.shard.ShardLayout`` (``layout``) or just ``n_shards`` (> 1) to
+    have the layout derived from the raveled width; the default is the
+    legacy unsharded exact-d buffer."""
+    if n_shards is not None and n_shards > 1:
+        if layout is not None:
+            raise ValueError("pass layout OR n_shards, not both")
+        from repro.shard.layout import ShardLayout
+        layout = ShardLayout(FlatSpec(template, lead_axes).d, n_shards)
+    return FlatSpec(template, lead_axes, layout)
+
+
 def flatten_worker_tree(X: Tree, lead_axes: int = 1) -> jnp.ndarray:
-    """Ravel a worker-stacked pytree into ONE [lead..., total] f32 buffer
-    (lead_axes=1: [W, d]; lead_axes=2: the fleet's [R, W, d]). Done ONCE at
-    init — the flat-buffer training path then never re-concatenates
-    per round (the former per-round ``_bucket`` cost)."""
-    leaves = jax.tree_util.tree_leaves(X)
-    return jnp.concatenate(
-        [l.reshape(l.shape[:lead_axes] + (-1,)).astype(jnp.float32)
-         for l in leaves], axis=-1)
+    """Legacy wrapper: FlatSpec(X).flatten(X) with the unsharded exact-d
+    layout (lead_axes=1: [W, d]; lead_axes=2: the fleet's [R, W, d])."""
+    return FlatSpec(X, lead_axes).flatten(X)
 
 
 def worker_unravelers(template: Tree, lead_axes: int = 1):
-    """(unravel, unravel_row) for the flat buffer of ``template`` (a real
-    or jax.eval_shape pytree — only shapes/dtypes are read).
-
-    ``unravel(flat)``: [lead..., total] → the full worker-stacked tree
-    (original dtypes restored) — used only at eval/checkpoint time.
-    ``unravel_row(v)``: [total] → ONE worker's (un-stacked) tree — used
-    inside the per-worker grad vmap of the flat train step.
-    """
-    leaves, treedef = jax.tree_util.tree_flatten(template)
-    shapes = [tuple(l.shape) for l in leaves]
-    dtypes = [l.dtype for l in leaves]
-    sizes = [int(np.prod(s[lead_axes:])) for s in shapes]
-
-    def unravel(flat):
-        out, off = [], 0
-        lead = flat.shape[:-1]
-        for s, dt, n in zip(shapes, dtypes, sizes):
-            out.append(flat[..., off:off + n].reshape(lead + s[lead_axes:])
-                       .astype(dt))
-            off += n
-        return jax.tree_util.tree_unflatten(treedef, out)
-
-    def unravel_row(v):
-        out, off = [], 0
-        for s, dt, n in zip(shapes, dtypes, sizes):
-            out.append(v[off:off + n].reshape(s[lead_axes:]).astype(dt))
-            off += n
-        return jax.tree_util.tree_unflatten(treedef, out)
-
-    return unravel, unravel_row
+    """Legacy wrapper: the (unravel, unravel_row) pair of
+    FlatSpec(template, lead_axes)."""
+    spec = FlatSpec(template, lead_axes)
+    return spec.unravel, spec.unravel_row

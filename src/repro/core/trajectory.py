@@ -59,7 +59,8 @@ class TrajCarry(NamedTuple):
 
 
 def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
-                    flat: bool = False, unravel_row=None) -> Callable:
+                    flat: bool = False, unravel_row=None, spec=None,
+                    shard_mesh=None) -> Callable:
     """Build ``body(carry) -> (carry', out)`` — one full DWFL round.
 
     ``store`` is a repro.data.device store (sample/sample_fleet). Exactly
@@ -67,6 +68,15 @@ def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
     [R, ...] round), ``sim`` (NetworkSimulator — single dynamic network),
     neither (static channel). ``flat``/``unravel_row`` select the fused
     flat-buffer round (protocol.make_*_flat_train_step).
+
+    ``spec`` (exchange.FlatSpec, implies ``flat``): the layout-aware
+    buffer contract. With a model-sharded spec (repro.shard) the carry's
+    flat buffer is the physical [.., width] padded buffer — sharded over
+    ``shard_mesh``'s "model" axis when given (the scan then runs
+    shard_map bodies with the carry donated in place on every device), or
+    logically sharded on one device otherwise. The key discipline is
+    unchanged, so sharded and unsharded trajectories realize the SAME
+    noise stream (bitwise on CPU; tests/test_shard.py).
 
     Key discipline (shared by every path, and by the per-round reference
     ``run_per_round``): the carry key splits once per round into the
@@ -79,8 +89,16 @@ def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
     dynamic/fleet paths — [K, ...] / [K, R, ...] leaves after a K-round
     scan, one array per chunk instead of one Python list entry per round.
     """
+    if spec is not None:
+        flat = True
+        if unravel_row is None:
+            unravel_row = spec.unravel_row
+    sharded = spec is not None and spec.layout is not None
+
     if fleet is not None:
-        step = fleet.make_fleet_step(cfg, flat=flat, unravel_row=unravel_row)
+        step = fleet.make_fleet_step(cfg, mesh=shard_mesh if sharded else None,
+                                     flat=flat, unravel_row=unravel_row,
+                                     spec=spec)
         R = fleet.replicates
 
         def body(carry: TrajCarry):
@@ -96,9 +114,15 @@ def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
         return body
 
     if sim is not None:
-        step = (protocol_lib.make_dynamic_flat_train_step(
-                    cfg, proto, unravel_row) if flat
-                else protocol_lib.make_dynamic_train_step(cfg, proto))
+        if sharded:
+            from repro.shard.round import \
+                make_sharded_dynamic_flat_train_step
+            step = make_sharded_dynamic_flat_train_step(
+                cfg, proto, spec, mesh=shard_mesh)
+        else:
+            step = (protocol_lib.make_dynamic_flat_train_step(
+                        cfg, proto, unravel_row) if flat
+                    else protocol_lib.make_dynamic_train_step(cfg, proto))
 
         def body(carry: TrajCarry):
             key, sk = jax.random.split(carry.key)
@@ -111,8 +135,13 @@ def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
 
         return body
 
-    step = (protocol_lib.make_flat_train_step(cfg, proto, unravel_row)
-            if flat else protocol_lib.make_train_step(cfg, proto))
+    if sharded:
+        from repro.shard.round import make_sharded_flat_train_step
+        step = make_sharded_flat_train_step(cfg, proto, spec,
+                                            mesh=shard_mesh)
+    else:
+        step = (protocol_lib.make_flat_train_step(cfg, proto, unravel_row)
+                if flat else protocol_lib.make_train_step(cfg, proto))
 
     def body(carry: TrajCarry):
         key, sk = jax.random.split(carry.key)

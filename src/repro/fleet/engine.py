@@ -140,19 +140,25 @@ class FleetEngine:
             lambda k: protocol_lib.init_worker_params(k, cfg, self.proto.n_workers)
         )(self.split_keys(key))
 
-    def init_flat_params(self, key, cfg):
-        """Flat-buffer fleet params: ([R, W, d] f32 buffer, unravel,
-        unravel_row). Raveled ONCE here (exchange.flatten_worker_tree,
-        lead_axes=2); ``unravel`` recovers the [R, W, ...] pytree at
-        eval/checkpoint, ``unravel_row`` one worker's tree inside the grad
-        vmap of the fused step."""
+    def init_flat_spec(self, key, cfg, n_shards: int = 1):
+        """Flat-buffer fleet params as ([R, W, width] f32 buffer,
+        exchange.FlatSpec). Raveled ONCE here; ``n_shards`` > 1 attaches a
+        model-axis ShardLayout (repro.shard) — the buffer is then padded
+        to the layout's physical width and usable with the sharded fleet
+        step (2-D replicas×model mesh, or logically on one device)."""
         wp = self.init_worker_params(key, cfg)
-        flat = exchange_lib.flatten_worker_tree(wp, lead_axes=2)
-        unravel, unravel_row = exchange_lib.worker_unravelers(wp, lead_axes=2)
-        return flat, unravel, unravel_row
+        spec = exchange_lib.make_flat_spec(wp, lead_axes=2,
+                                           n_shards=n_shards)
+        return spec.flatten(wp), spec
+
+    def init_flat_params(self, key, cfg):
+        """Legacy tuple API: ([R, W, d] f32 buffer, unravel, unravel_row)
+        — init_flat_spec without the layout handle."""
+        flat, spec = self.init_flat_spec(key, cfg)
+        return flat, spec.unravel, spec.unravel_row
 
     def make_fleet_step(self, cfg, mesh=None, axis: str = "replicas",
-                        flat: bool = False, unravel_row=None):
+                        flat: bool = False, unravel_row=None, spec=None):
         """The batched round:
 
             step(worker_params, batch, keys, chans, Ws)
@@ -168,13 +174,37 @@ class FleetEngine:
         R over the mesh devices (R % |mesh| must be 0); replicates never
         communicate, so in/out specs are plain leading-axis shards and the
         body stays the vmapped step on the local R/|mesh| slab.
+
+        Pass a model-sharded ``spec`` (FleetEngine.init_flat_spec with
+        n_shards > 1) to shard each replicate's buffer columns as well
+        (repro.shard): with a 2-D ("replicas", "model") mesh the step is
+        the 2-D shard_map (replicates × buffer columns); with mesh=None or
+        a replicas-only mesh the model axis is sharded LOGICALLY inside
+        each device's program. The sharded fleet round is ULP-close (not
+        bitwise) to the unsharded one: the R-vmapped dp_mix matmul lands
+        in different XLA fusion clusters (same caveat as the scan engine,
+        DESIGN.md §10).
         """
         if flat:
-            if unravel_row is None:
-                raise ValueError("flat=True requires the unravel_row from "
-                                 "init_flat_params")
-            base = protocol_lib.make_dynamic_flat_train_step(
-                cfg, self.proto, unravel_row)
+            if spec is not None and spec.layout is not None:
+                from repro.shard.round import (
+                    make_fleet_sharded_step,
+                    make_sharded_dynamic_flat_train_step)
+                if mesh is not None and "model" in mesh.axis_names:
+                    return make_fleet_sharded_step(cfg, self.proto, spec,
+                                                   mesh,
+                                                   replicate_axis=axis)
+                base = make_sharded_dynamic_flat_train_step(
+                    cfg, self.proto, spec, mesh=None)
+            else:
+                if unravel_row is None and spec is not None:
+                    unravel_row = spec.unravel_row
+                if unravel_row is None:
+                    raise ValueError("flat=True requires the unravel_row "
+                                     "from init_flat_params (or a spec "
+                                     "from init_flat_spec)")
+                base = protocol_lib.make_dynamic_flat_train_step(
+                    cfg, self.proto, unravel_row)
         else:
             base = protocol_lib.make_dynamic_train_step(cfg, self.proto)
         batched = jax.vmap(base)
@@ -195,7 +225,7 @@ class FleetEngine:
                          out_specs=(spec, spec), check_rep=False)
 
     def make_fleet_round(self, cfg, mesh=None, flat: bool = False,
-                         unravel_row=None):
+                         unravel_row=None, spec=None):
         """Network advance + train step as ONE jittable call (what the
         sweep driver and launch/train.py --replicates actually run):
 
@@ -205,10 +235,12 @@ class FleetEngine:
         A single dispatch per round for the whole fleet — the unit the
         ≥3×-vs-Python-loop acceptance benchmark times. ``flat=True``:
         worker_params is the persistent [R, W, d] buffer
-        (init_flat_params) and the round runs the fused dp_mix kernel.
+        (init_flat_params) and the round runs the fused dp_mix kernel;
+        with a model-sharded ``spec`` (init_flat_spec) the buffer columns
+        shard too (see make_fleet_step).
         """
         step = self.make_fleet_step(cfg, mesh=mesh, flat=flat,
-                                    unravel_row=unravel_row)
+                                    unravel_row=unravel_row, spec=spec)
 
         def fleet_round(key, states, worker_params, batch):
             k_net, k_step = jax.random.split(key)

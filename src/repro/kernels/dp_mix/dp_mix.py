@@ -61,10 +61,16 @@ def _normal_from_bits(bits):
 def _normal_pair_hash(shape, d_padded, col0, seed):
     """Two INDEPENDENT standard-normal fields from the counter-hash
     generator (CPU path / interpret mode): element (i, j) of block column
-    offset ``col0`` draws from global counters 2·idx and 2·idx+1."""
+    offset ``col0`` draws from global counters 2·idx and 2·idx+1.
+
+    ``d_padded`` is the COUNTER stride between consecutive worker rows.
+    When the flat buffer is sharded over a model axis (repro.shard), every
+    shard passes the same canonical stride (ShardLayout.counter_width) and
+    its own global ``col0``, so the per-shard streams tile the exact
+    single-device stream — CPU shardings stay bitwise-comparable."""
     rows = jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
     cols = jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
-    idx = (rows * jnp.uint32(d_padded)
+    idx = (rows * jnp.asarray(d_padded).astype(jnp.uint32)
            + jnp.asarray(col0).astype(jnp.uint32) + cols)
     g1 = _normal_from_bits(_hash_bits(idx * jnp.uint32(2), seed))
     g2 = _normal_from_bits(_hash_bits(idx * jnp.uint32(2) + jnp.uint32(1),
@@ -91,8 +97,8 @@ def _round_math(p, g, normal_pair, c, sigma_m, amp, selfs, mscale, listen, w,
     return x + eta * listen * upd
 
 
-def _dp_mix_kernel(seed_ref, scal_ref, amp_ref, selfs_ref, mscale_ref,
-                   listen_ref, w_ref, p_ref, g_ref, out_ref, *,
+def _dp_mix_kernel(seed_ref, off_ref, scal_ref, amp_ref, selfs_ref,
+                   mscale_ref, listen_ref, w_ref, p_ref, g_ref, out_ref, *,
                    gamma, eta, noisy, d_padded, interpret):
     pid = pl.program_id(0)
     p = p_ref[...].astype(jnp.float32)       # [Np, BD]
@@ -101,14 +107,22 @@ def _dp_mix_kernel(seed_ref, scal_ref, amp_ref, selfs_ref, mscale_ref,
 
     def normal_pair():
         if interpret:
-            return _normal_pair_hash(p.shape, d_padded, pid * p.shape[1],
+            # off_ref[0]: global column offset of this CALL's window
+            # (repro.shard — 0 for the whole-buffer round); counters use
+            # the canonical stride d_padded so shard streams tile the
+            # single-device stream exactly.
+            return _normal_pair_hash(p.shape, d_padded,
+                                     off_ref[0] + pid * p.shape[1],
                                      seed_ref[0])
         from jax.experimental.pallas import tpu as pltpu
-        # hash-mix pid into the seed (NOT seed + pid: with a ~1000-program
-        # grid, additive seeding lets nearby round seeds reproduce
-        # bitwise-identical DP-noise blocks across rounds/replicates,
-        # breaking the independent-Gaussian assumption of the accounting)
-        pltpu.prng_seed(_hash_bits(pid, seed_ref[0]).astype(jnp.int32))
+        # hash-mix the GLOBAL block index into the seed (NOT seed + pid:
+        # with a ~1000-program grid, additive seeding lets nearby round
+        # seeds reproduce bitwise-identical DP-noise blocks across
+        # rounds/replicates, breaking the independent-Gaussian assumption
+        # of the accounting). The block index counts from the window's
+        # global column offset so sharded calls draw disjoint streams.
+        blk = off_ref[0] // p.shape[1] + pid
+        pltpu.prng_seed(_hash_bits(blk, seed_ref[0]).astype(jnp.int32))
         b1 = pltpu.prng_random_bits(p.shape).astype(jnp.uint32)
         b2 = pltpu.prng_random_bits(p.shape).astype(jnp.uint32)
         return _normal_from_bits(b1), _normal_from_bits(b2)
@@ -120,15 +134,20 @@ def _dp_mix_kernel(seed_ref, scal_ref, amp_ref, selfs_ref, mscale_ref,
     out_ref[...] = out.astype(out_ref.dtype)
 
 
-def dp_mix_2d(p2, g2, seed, scal, amp, selfs, mscale, listen, W, *,
-              gamma, eta, noisy, block_d, interpret=True):
+def dp_mix_2d(p2, g2, seed, off, scal, amp, selfs, mscale, listen, W, *,
+              gamma, eta, noisy, block_d, counter_width=None,
+              interpret=True):
     """Pallas entry point. p2, g2: [Np, Dp] padded views (Np multiple of
     SUBLANES, Dp multiple of block_d). Vector operands are [Np]; ``scal``
-    = [c, σ_m]. Returns the updated [Np, Dp] buffer (same dtype as p2)."""
+    = [c, σ_m]; ``off`` the [1] int32 global column offset of this window
+    (0 for the whole buffer) and ``counter_width`` the canonical noise-
+    counter stride (defaults to Dp — the whole-buffer layout). Returns the
+    updated [Np, Dp] buffer (same dtype as p2)."""
     Np, Dp = p2.shape
     grid = (Dp // block_d,)
     kernel = functools.partial(
-        _dp_mix_kernel, gamma=gamma, eta=eta, noisy=noisy, d_padded=Dp,
+        _dp_mix_kernel, gamma=gamma, eta=eta, noisy=noisy,
+        d_padded=Dp if counter_width is None else counter_width,
         interpret=interpret)
     vec = pl.BlockSpec((Np,), lambda i: (0,))
     tile = pl.BlockSpec((Np, block_d), lambda i: (0, i))
@@ -137,6 +156,7 @@ def dp_mix_2d(p2, g2, seed, scal, amp, selfs, mscale, listen, W, *,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1,), lambda i: (0,)),    # seed
+            pl.BlockSpec((1,), lambda i: (0,)),    # column offset
             pl.BlockSpec((2,), lambda i: (0,)),    # (c, sigma_m)
             vec, vec, vec, vec,                    # amp, self, m_scale, listen
             pl.BlockSpec((Np, Np), lambda i: (0, 0)),  # W
@@ -145,21 +165,23 @@ def dp_mix_2d(p2, g2, seed, scal, amp, selfs, mscale, listen, W, *,
         out_specs=tile,
         out_shape=jax.ShapeDtypeStruct(p2.shape, p2.dtype),
         interpret=interpret,
-    )(seed, scal, amp, selfs, mscale, listen, W, p2, g2)
+    )(seed, off, scal, amp, selfs, mscale, listen, W, p2, g2)
 
 
-def dp_mix_fused_jnp(p2, g2, seed, scal, amp, selfs, mscale, listen, W, *,
-                     gamma, eta, noisy):
+def dp_mix_fused_jnp(p2, g2, seed, off, scal, amp, selfs, mscale, listen, W,
+                     *, gamma, eta, noisy, counter_width=None):
     """The CPU lowering: identical arithmetic and identical counter-hash
     noise to the interpret-mode kernel run as ONE program (grid=1), minus
     the Pallas interpreter overhead — bitwise the same draws, so the two
-    paths cross-validate (tests/test_kernels.py)."""
+    paths cross-validate (tests/test_kernels.py). ``off``/``counter_width``
+    as in :func:`dp_mix_2d` (the repro.shard column-window hooks)."""
     Np, Dp = p2.shape
     p = p2.astype(jnp.float32)
     g = g2.astype(jnp.float32)
     col = lambda v: v.reshape(Np, 1)
-    normal_pair = lambda: _normal_pair_hash((Np, Dp), Dp, 0,
-                                            seed.reshape(-1)[0])
+    normal_pair = lambda: _normal_pair_hash(
+        (Np, Dp), Dp if counter_width is None else counter_width,
+        off.reshape(-1)[0], seed.reshape(-1)[0])
     out = _round_math(p, g, normal_pair, scal[0], scal[1], col(amp),
                       col(selfs), col(mscale), col(listen),
                       jnp.asarray(W, jnp.float32),

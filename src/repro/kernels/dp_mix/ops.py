@@ -48,10 +48,12 @@ def _pad_vec(v, N, Np, fill=0.0):
 
 
 @functools.partial(jax.jit, static_argnames=("gamma", "eta", "noisy",
-                                             "block_d", "impl"))
+                                             "block_d", "impl",
+                                             "counter_width"))
 def dp_mix_round(p, g, seed, W, amp, c, sigma_m, *, gamma: float, eta: float,
                  self_scale=None, m_scale=None, listen=None,
-                 noisy: bool = True, block_d=None, impl=None):
+                 noisy: bool = True, block_d=None, impl=None,
+                 col0=0, counter_width=None):
     """One fused DWFL round over the flat buffer.
 
     p, g: [N, d] (params / clipped grads, any float dtype — preserved).
@@ -63,6 +65,14 @@ def dp_mix_round(p, g, seed, W, amp, c, sigma_m, *, gamma: float, eta: float,
     1/(c·(N−1)), everyone listening). noisy=False skips the on-chip PRNG
     entirely (gossip).
 
+    col0 / counter_width: the repro.shard column-window hooks. When the
+    flat buffer is sharded over a model axis, each shard calls this on its
+    own [N, d_shard] slice with its global column offset ``col0`` (traced
+    — may be lax.axis_index-derived) and the layout's canonical
+    ``counter_width`` (static); the per-shard CPU noise streams then tile
+    the exact single-device stream. Defaults (0, None) are the
+    whole-buffer round.
+
     impl: None (auto: "pallas" on TPU, "jnp" elsewhere) | "pallas" |
     "pallas_interpret" (the Pallas body executed by the interpreter —
     slow; kernel-validation only) | "jnp" (the fused-jnp CPU lowering,
@@ -73,9 +83,20 @@ def dp_mix_round(p, g, seed, W, amp, c, sigma_m, *, gamma: float, eta: float,
         impl = "pallas" if _on_tpu() else "jnp"
     Np = _roundup(N, K.SUBLANES)
     if block_d is None:
-        # one program off-TPU (no grid to amortize); a fixed VMEM-sized
-        # tile on TPU
-        block_d = 4 * K.LANES if impl == "pallas" else _roundup(d, K.LANES)
+        if impl == "pallas":
+            # a fixed VMEM-sized tile on TPU; for a sharded window
+            # (counter_width set) the tile must DIVIDE the window width so
+            # the global block index (col0 // block_d + pid) tiles without
+            # collisions across shards — take the largest lane multiple of
+            # {4, 2, 1} that does
+            block_d = 4 * K.LANES
+            if counter_width is not None and d % K.LANES == 0:
+                lanes = d // K.LANES
+                block_d = next(c * K.LANES for c in (4, 2, 1)
+                               if lanes % c == 0)
+        else:
+            # one program off-TPU (no grid to amortize)
+            block_d = _roundup(d, K.LANES)
     Dp = _roundup(d, block_d)
 
     p2 = jnp.pad(p, ((0, Np - N), (0, Dp - d)))
@@ -91,23 +112,25 @@ def dp_mix_round(p, g, seed, W, amp, c, sigma_m, *, gamma: float, eta: float,
     # padded rows must stay exactly x (= 0): they don't listen
     lst = _pad_vec(1.0 if listen is None else listen, N, Np)
     seed = jnp.asarray(seed, jnp.int32).reshape(1)
+    off = jnp.asarray(col0, jnp.int32).reshape(1)
 
     if impl == "jnp":
-        out2 = K.dp_mix_fused_jnp(p2, g2, seed, scal, amp2, selfs, mscale,
-                                  lst, W2, gamma=gamma, eta=eta, noisy=noisy)
+        out2 = K.dp_mix_fused_jnp(p2, g2, seed, off, scal, amp2, selfs,
+                                  mscale, lst, W2, gamma=gamma, eta=eta,
+                                  noisy=noisy, counter_width=counter_width)
     else:
-        out2 = K.dp_mix_2d(p2, g2, seed, scal, amp2, selfs, mscale, lst, W2,
-                           gamma=gamma, eta=eta, noisy=noisy,
-                           block_d=block_d,
+        out2 = K.dp_mix_2d(p2, g2, seed, off, scal, amp2, selfs, mscale,
+                           lst, W2, gamma=gamma, eta=eta, noisy=noisy,
+                           block_d=block_d, counter_width=counter_width,
                            interpret=(impl == "pallas_interpret"))
     return out2[:N, :d].astype(p.dtype)
 
 
 def dp_mix_round_plan(p, g, seed, plan, *, gamma: float, eta: float,
-                      impl=None):
+                      impl=None, col0=0, counter_width=None):
     """MixPlan front end (exchange.plan_* → one fused round)."""
     return dp_mix_round(
         p, g, seed, plan.W, plan.amp, plan.c, plan.sigma_m,
         gamma=gamma, eta=eta, self_scale=plan.self_scale,
         m_scale=plan.m_scale, listen=plan.listen, noisy=plan.noisy,
-        impl=impl)
+        impl=impl, col0=col0, counter_width=counter_width)

@@ -9,7 +9,7 @@ Functions only — importing this module never touches jax device state.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 
@@ -49,3 +49,16 @@ def model_size(mesh) -> int:
 def make_host_mesh(n_data: int = 1, n_model: int = 1):
     """Tiny mesh over however many (CPU) devices exist — for tests."""
     return _make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_shard_mesh(n_model: int, n_replicas: Optional[int] = None):
+    """Mesh for the model-sharded flat-buffer round (repro.shard):
+    1-axis ("model",) for a single network (n_replicas=None), 2-D
+    ("replicas", "model") when the fleet's replicate axis composes with it
+    — pass n_replicas=1 for a fleet whose replicates all live in one model
+    group (the fleet step requires the axis to EXIST, whatever its size).
+    Requires max(n_replicas, 1) · n_model devices (CPU: XLA_FLAGS=
+    --xla_force_host_platform_device_count)."""
+    if n_replicas is not None:
+        return _make_mesh((n_replicas, n_model), ("replicas", "model"))
+    return _make_mesh((n_model,), ("model",))

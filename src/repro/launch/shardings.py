@@ -140,6 +140,18 @@ def cache_specs(cache_shape, *, mesh, data_axes: Tuple[str, ...] = ("data",),
     return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
 
 
+def flat_buffer_sharding(spec, mesh=None, replicate_axis: Optional[str] = None):
+    """Placement rule for the persistent flat DWFL buffer of an
+    exchange.FlatSpec: last (column) axis over 'model' when the spec
+    carries a ShardLayout, leading replicate axis (fleet [R, W, width])
+    over ``replicate_axis``. Returns the PartitionSpec, or the
+    NamedSharding when ``mesh`` is given (device_put the buffer with it
+    before entering the sharded round)."""
+    from repro.shard.round import partition_spec
+    p = partition_spec(spec, replicate_axis=replicate_axis)
+    return p if mesh is None else NamedSharding(mesh, p)
+
+
 def _axis_size(mesh, axis: str) -> int:
     return dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
 

@@ -82,6 +82,14 @@ def main(argv=None):
                          "buffer with the fused Pallas dp_mix round "
                          "(ravel once at init, train flat, unravel only "
                          "at eval/checkpoint); dwfl/gossip schemes only")
+    ap.add_argument("--model-shards", type=int, default=1,
+                    help="shard the flat buffer's columns over a 'model' "
+                         "mesh axis (repro.shard): each shard runs the "
+                         "fused dp_mix round on its own [N, d/S] slice. "
+                         "Uses a real device mesh when >= S devices exist "
+                         "(CPU: XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=S), else shards logically on one "
+                         "device. Requires --flat-buffer.")
     ap.add_argument("--chunk-rounds", type=int, default=0,
                     help="scan-fused trajectory engine: rounds compiled "
                          "into one lax.scan dispatch (0 = auto: one "
@@ -115,6 +123,10 @@ def main(argv=None):
     if proto.flat_buffer and args.scheme not in ("dwfl", "gossip"):
         raise SystemExit("--flat-buffer supports the mixing-family schemes "
                          "only (dwfl/gossip)")
+    n_shards = max(1, args.model_shards)
+    if n_shards > 1 and not proto.flat_buffer:
+        raise SystemExit("--model-shards requires --flat-buffer (only the "
+                         "persistent flat buffer has a model axis to shard)")
     sim, fleet = None, None
     if args.replicates > 1:
         from repro.fleet import FleetEngine
@@ -147,23 +159,50 @@ def main(argv=None):
         batcher = LMBatcher(toks, W, args.batch_size, args.seq_len,
                             seed=args.seed)
 
-    # unravel: flat-buffer mode only — maps the persistent [.., W, d] buffer
-    # back to the worker-stacked pytree at eval/checkpoint time
+    # spec: flat-buffer mode only — the layout-aware buffer contract
+    # (exchange.FlatSpec); unravel maps the persistent [.., W, width]
+    # buffer back to the worker-stacked pytree at eval/checkpoint time
+    spec = shard_mesh = None
     unravel = unravel_row = None
     if fleet is not None:
         if proto.flat_buffer:
-            wp, unravel, unravel_row = fleet.init_flat_params(key, cfg)
+            wp, spec = fleet.init_flat_spec(key, cfg, n_shards=n_shards)
+            unravel, unravel_row = spec.unravel, spec.unravel_row
+            n_params = spec.d      # lead_axes=2: d is PER-WORKER already
         else:
             wp = fleet.init_worker_params(key, cfg)
-        n_params = (sum(int(x.size) for x in jax.tree_util.tree_leaves(wp))
-                    // (W * fleet.replicates))
+            n_params = (sum(int(x.size)
+                            for x in jax.tree_util.tree_leaves(wp))
+                        // (W * fleet.replicates))
     else:
         wp = P.init_worker_params(key, cfg, W)
         n_params = sum(int(x.size) for x in jax.tree_util.tree_leaves(wp)) // W
         if proto.flat_buffer:
             from repro.core import exchange as X
-            unravel, unravel_row = X.worker_unravelers(wp)
-            wp = X.flatten_worker_tree(wp)
+            spec = X.make_flat_spec(wp, n_shards=n_shards)
+            unravel, unravel_row = spec.unravel, spec.unravel_row
+            wp = spec.flatten(wp)
+    if spec is not None and spec.n_shards > 1:
+        # place the padded buffer on a real model mesh when the devices
+        # exist; otherwise shard logically inside one device's program
+        from repro.launch import mesh as mesh_lib
+        from repro.launch import shardings as shardings_lib
+        if jax.device_count() >= spec.n_shards:
+            # fleet: 2-D (replicas=1, model=S) mesh — replicates stay
+            # vmapped within each model group
+            shard_mesh = mesh_lib.make_shard_mesh(
+                spec.n_shards, n_replicas=1 if fleet is not None else None)
+            wp = jax.device_put(wp, shardings_lib.flat_buffer_sharding(
+                spec, shard_mesh,
+                replicate_axis="replicas" if fleet is not None else None))
+            where = f"{spec.n_shards}-device model mesh"
+        else:
+            where = (f"1 device (logical — set XLA_FLAGS=--xla_force_host_"
+                     f"platform_device_count={spec.n_shards} or run on a "
+                     f"pod for a real mesh)")
+        print(f"[train] model shards: {spec.n_shards} x "
+              f"{spec.layout.shard_width} cols ({spec.width} padded, "
+              f"d={spec.d}) on {where}")
     print(f"[train] params/worker: {n_params/1e6:.2f}M"
           + (" (flat dp_mix buffer)" if proto.flat_buffer else ""))
 
@@ -236,7 +275,8 @@ def main(argv=None):
         store = store_from_batcher(batcher)
         body = TJ.make_round_body(
             cfg, proto, store, sim=None if fleet is not None else sim,
-            fleet=fleet, flat=proto.flat_buffer, unravel_row=unravel_row)
+            fleet=fleet, flat=proto.flat_buffer, unravel_row=unravel_row,
+            spec=spec, shard_mesh=shard_mesh)
         coher = (sim.scenario.fading.coherence_rounds
                  if sim is not None else None)
         chunk = (args.chunk_rounds if args.chunk_rounds > 0
@@ -256,7 +296,7 @@ def main(argv=None):
                 metrics = jax.tree_util.tree_map(lambda a: a[-1],
                                                  out["metrics"])
                 log_eval(t - 1, metrics, carry.params)
-        key, wp = carry.key, carry.params
+        key, wp, net_state = carry.key, carry.params, carry.net
     else:
         if fleet is not None:
             # ONE jitted call advances all R networks: net evolution +
@@ -264,20 +304,33 @@ def main(argv=None):
             # donate the threaded state/params like the single-network
             # paths do
             fleet_round = jax.jit(
-                fleet.make_fleet_round(cfg, flat=proto.flat_buffer,
-                                       unravel_row=unravel_row),
+                fleet.make_fleet_round(cfg, mesh=shard_mesh,
+                                       flat=proto.flat_buffer,
+                                       unravel_row=unravel_row, spec=spec),
                 donate_argnums=(1, 2))
         elif sim is not None:
-            mk = (lambda: P.make_dynamic_flat_train_step(cfg, proto,
-                                                         unravel_row)
-                  ) if proto.flat_buffer else (
-                  lambda: P.make_dynamic_train_step(cfg, proto))
+            sharded = spec is not None and spec.n_shards > 1
+            if sharded:
+                from repro.shard import make_sharded_dynamic_flat_train_step
+                mk = lambda: make_sharded_dynamic_flat_train_step(
+                    cfg, proto, spec, mesh=shard_mesh)
+            else:
+                mk = (lambda: P.make_dynamic_flat_train_step(cfg, proto,
+                                                             unravel_row)
+                      ) if proto.flat_buffer else (
+                      lambda: P.make_dynamic_train_step(cfg, proto))
             step = jax.jit(mk(), donate_argnums=0)
             net_round = jax.jit(sim.round)
         else:
-            mk = (lambda: P.make_flat_train_step(cfg, proto, unravel_row)
-                  ) if proto.flat_buffer else (
-                  lambda: P.make_train_step(cfg, proto))
+            sharded = spec is not None and spec.n_shards > 1
+            if sharded:
+                from repro.shard import make_sharded_flat_train_step
+                mk = lambda: make_sharded_flat_train_step(
+                    cfg, proto, spec, mesh=shard_mesh)
+            else:
+                mk = (lambda: P.make_flat_train_step(cfg, proto, unravel_row)
+                      ) if proto.flat_buffer else (
+                      lambda: P.make_train_step(cfg, proto))
             step = jax.jit(mk(), donate_argnums=0)
 
         for t in range(args.steps + 1):
@@ -335,11 +388,22 @@ def main(argv=None):
               f"composed(eps,delta)=({rep['epsilon_trajectory_composed']:.3g}, "
               f"{rep['delta_trajectory_composed']:.2g})")
     if args.checkpoint:
-        ckpt_save(args.checkpoint,
-                  unravel(wp) if unravel is not None else wp,
-                  step=args.steps,
-                  metadata={"arch": args.arch, "scheme": args.scheme,
-                            "epsilon": rep["epsilon_worst"]})
+        meta = {"arch": args.arch, "scheme": args.scheme,
+                "epsilon": rep["epsilon_worst"]}
+        if spec is not None:
+            # flat-buffer runs checkpoint the buffer itself, with the
+            # shard-layout metadata — restorable under ANY shard count
+            # (checkpoint.restore_flat). The state pytree carries the PRNG
+            # carry key AND the net/fleet NetState (dynamic runs): exactly
+            # the TrajCarry a bitwise resume needs.
+            from repro.checkpoint import save_flat
+            state = {"key": key}
+            if net_state is not None:
+                state["net"] = net_state
+            save_flat(args.checkpoint, wp, spec, step=args.steps,
+                      state=state, metadata=meta)
+        else:
+            ckpt_save(args.checkpoint, wp, step=args.steps, metadata=meta)
         print(f"[train] checkpoint -> {args.checkpoint}")
     if logf:
         logf.close()

@@ -1,0 +1,26 @@
+"""repro.shard — model-axis sharding of the persistent flat DWFL buffer.
+
+``ShardLayout`` (repro.shard.layout) is the pure geometry; the sharded
+round/step builders live in repro.shard.round and are re-exported lazily
+here (round pulls in protocol + the kernel stack, and exchange.FlatSpec
+imports this package's layout — eager re-export would cycle).
+"""
+from repro.shard.layout import LANES, ShardLayout
+
+_ROUND_EXPORTS = (
+    "dp_mix_round_sharded",
+    "make_fleet_sharded_step",
+    "make_sharded_dynamic_flat_train_step",
+    "make_sharded_flat_train_step",
+    "partition_spec",
+    "shard_window_round",
+)
+
+__all__ = ["LANES", "ShardLayout", *_ROUND_EXPORTS]
+
+
+def __getattr__(name):
+    if name in _ROUND_EXPORTS:
+        from repro.shard import round as _round
+        return getattr(_round, name)
+    raise AttributeError(f"module 'repro.shard' has no attribute {name!r}")

@@ -1,0 +1,114 @@
+"""Model-axis shard geometry for the persistent flat [W, d] DWFL buffer.
+
+The fused dp_mix round (repro.kernels.dp_mix) is embarrassingly parallel
+over the flat buffer's COLUMN axis: the local SGD step, the on-chip noise,
+the [N, N]×[N, d] mixing matmul (contraction over workers, not columns),
+the self-correction and the AWGN all act column-by-column. ``ShardLayout``
+fixes the geometry that makes a column-sharded execution of that round
+EXACTLY reproduce the single-device one:
+
+* the buffer is padded to ``padded_width = n_shards · shard_width`` with
+  ``shard_width`` a multiple of the kernel lane tile (128), shard s owning
+  global columns [s·shard_width, (s+1)·shard_width);
+* the noise-counter stride ``counter_width`` = roundup(d, 128) is a
+  function of ``d`` ONLY — never of the shard count. Element (row, col)
+  of the buffer draws from global counters 2·(row·counter_width + col)
+  and +1 whatever device holds it, so the per-shard CPU streams tile the
+  exact single-device stream and shardings stay bitwise-comparable
+  (DESIGN.md §11);
+* padding columns (global col ≥ d) are pinned to zero by the sharded
+  round — no leaf offset ever reaches them, so re-laying-out a buffer is
+  a pure pad/slice of the canonical [..., :d] view.
+
+Pure geometry + pad/slice helpers only: importing this module never
+touches device state and never imports repro.core (it is the leaf both
+exchange.FlatSpec and repro.shard.round build on).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+# Last-dim tile multiple of the dp_mix kernel family (f32 lanes). Kept in
+# sync with repro.kernels.dp_mix.dp_mix.LANES — asserted by
+# tests/test_shard.py rather than imported, so this module stays free of
+# the Pallas import.
+LANES = 128
+
+
+def _roundup(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+@dataclass(frozen=True)
+class ShardLayout:
+    """Geometry of a model-axis sharding of the flat [.., d] buffer."""
+    d: int              # canonical (unpadded) flat width
+    n_shards: int = 1   # model-axis size S
+
+    def __post_init__(self):
+        if self.d < 1:
+            raise ValueError(f"d must be >= 1, got {self.d}")
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+
+    @property
+    def counter_width(self) -> int:
+        """Canonical noise-counter stride between worker rows — a function
+        of d only (== the unsharded CPU kernel's padded width), so every
+        shard count realizes the SAME stream."""
+        return _roundup(self.d, LANES)
+
+    @property
+    def shard_width(self) -> int:
+        """Columns per shard (lane-aligned)."""
+        return _roundup(-(-self.d // self.n_shards), LANES)
+
+    @property
+    def padded_width(self) -> int:
+        """Physical last-axis width of the sharded buffer."""
+        return self.n_shards * self.shard_width
+
+    def col_offsets(self) -> np.ndarray:
+        """[S] global column offset of each shard's window."""
+        return np.arange(self.n_shards, dtype=np.int32) * self.shard_width
+
+    def pad(self, flat):
+        """Canonical [..., d] buffer → physical [..., padded_width]."""
+        if flat.shape[-1] != self.d:
+            raise ValueError(f"expected canonical width {self.d}, got "
+                             f"{flat.shape[-1]}")
+        pad = [(0, 0)] * (flat.ndim - 1) + [(0, self.padded_width - self.d)]
+        return jnp.pad(flat, pad)
+
+    def unpad(self, flat):
+        """Physical [..., padded_width] buffer → canonical [..., d]."""
+        if flat.shape[-1] != self.padded_width:
+            raise ValueError(f"expected physical width {self.padded_width}, "
+                             f"got {flat.shape[-1]}")
+        return flat[..., :self.d]
+
+    def relayout(self, flat, other: "ShardLayout"):
+        """Re-lay a physical buffer out for ``other`` (same d) — a pure
+        slice + pad, since padding carries no information."""
+        if other.d != self.d:
+            raise ValueError(f"cannot relayout d={self.d} to d={other.d}")
+        return other.pad(self.unpad(flat))
+
+    def to_meta(self) -> dict:
+        return {"d": self.d, "n_shards": self.n_shards,
+                "shard_width": self.shard_width,
+                "counter_width": self.counter_width}
+
+    @classmethod
+    def from_meta(cls, meta: dict) -> "ShardLayout":
+        lay = cls(int(meta["d"]), int(meta["n_shards"]))
+        for k in ("shard_width", "counter_width"):
+            if k in meta and int(meta[k]) != getattr(lay, k):
+                raise ValueError(
+                    f"layout metadata mismatch: recorded {k}={meta[k]}, "
+                    f"this build derives {getattr(lay, k)} (lane tile "
+                    f"changed?)")
+        return lay

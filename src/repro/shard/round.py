@@ -1,0 +1,275 @@
+"""Model-axis sharded execution of the fused flat-buffer DWFL round.
+
+The persistent [W, d] buffer (exchange.FlatSpec) is split column-wise over
+a ``model`` mesh axis (ShardLayout); each shard runs the WHOLE fused
+dp_mix pipeline — local SGD, on-chip DP noise, the [N, N]×[N, d_shard]
+mixing matmul, self-correction, AWGN — on its own column window, with the
+noise counters offset to the window's global columns so the union of the
+per-shard CPU streams IS the single-device stream (bitwise; DESIGN.md
+§11). Only the per-worker gradient pass needs full rows: the sharded step
+all-gathers the buffer over ``model`` for the loss, computes the clipped
+gradients on the canonical [:, :d] view (the exact unsharded subprogram),
+and slices its own gradient window back out — the FSDP-style
+gather-compute-slice pattern, with the O(d) post-gradient round staying
+fully local.
+
+Memory contract (be honest about it): only the PERSISTENT state — the
+between-rounds buffer, optimizer-free by construction — is d/S per
+device. The grad pass transiently materializes the gathered [W, d] rows
+and their gradient on every shard, so peak activation memory is still
+O(W·d); a config whose single ROUND working set exceeds one device needs
+the gather replaced by a per-leaf / layer-chunked model-parallel loss
+(ROADMAP open item), which this layer's layout contract is designed to
+slot under.
+
+Two execution modes share one window primitive (``shard_window_round``):
+
+* ``mesh=None`` — LOGICAL sharding: the padded buffer lives on one device
+  and the S windows run as a vmap. No collectives, no multi-device
+  runtime; used for tests, for checkpoint re-layout verification, and as
+  the fallback when fewer devices than shards exist.
+* ``mesh`` with a ``model`` axis — shard_map: each device holds
+  [W, shard_width] of the buffer, col0 = axis_index("model")·shard_width.
+  Composable with the fleet's replicate axis into a 2-D
+  ("replicas", "model") mesh (``make_fleet_sharded_step``).
+
+Both modes reproduce the unsharded round bitwise on the real columns
+(CPU), because every column's arithmetic is independent and the noise
+stream is counter-addressed (tests/test_shard.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import protocol as protocol_lib
+from repro.core.exchange import FlatSpec
+from repro.kernels.dp_mix import ops as mix_ops
+from repro.shard.layout import ShardLayout
+
+
+def partition_spec(spec: FlatSpec, replicate_axis: Optional[str] = None):
+    """jax PartitionSpec for the physical flat buffer of ``spec``: last
+    axis over 'model' when sharded, leading replicate axis (fleet) over
+    ``replicate_axis``."""
+    from jax.sharding import PartitionSpec as P
+    parts = [None] * (spec.lead_axes + 1)
+    if replicate_axis is not None:
+        parts[0] = replicate_axis
+    if spec.n_shards > 1:
+        parts[-1] = "model"
+    return P(*parts)
+
+
+def shard_window_round(p_loc, g_loc, seed, plan, col0, layout: ShardLayout,
+                       *, gamma: float, eta: float, impl=None):
+    """One shard's column window of the fused round: dp_mix on the local
+    [W, shard_width] slice with globally-addressed noise counters, padding
+    columns (global col ≥ layout.d) pinned back to exactly zero — the
+    sharded-buffer invariant that keeps re-layouts a pure pad/slice."""
+    out = mix_ops.dp_mix_round_plan(
+        p_loc, g_loc, seed, plan, gamma=gamma, eta=eta, impl=impl,
+        col0=col0, counter_width=layout.counter_width)
+    gcol = jnp.asarray(col0, jnp.int32) + jnp.arange(p_loc.shape[-1],
+                                                     dtype=jnp.int32)
+    return jnp.where(gcol[None, :] < layout.d, out, 0.0).astype(out.dtype)
+
+
+def dp_mix_round_sharded(flat, g, seed, plan, layout: ShardLayout, *,
+                         gamma: float, eta: float, impl=None):
+    """Logical (single-device) sharded round: the S column windows of the
+    padded [W, padded_width] buffer run as one vmap. Bitwise-equal on the
+    real columns to ops.dp_mix_round on the unpadded [W, d] buffer."""
+    S, ds = layout.n_shards, layout.shard_width
+    Wn = flat.shape[0]
+    ps = flat.reshape(Wn, S, ds)
+    gs = g.reshape(Wn, S, ds)
+    col0s = jnp.asarray(layout.col_offsets())
+    out = jax.vmap(
+        lambda p, gg, c0: shard_window_round(
+            p, gg, seed, plan, c0, layout, gamma=gamma, eta=eta, impl=impl),
+        in_axes=(1, 1, 0), out_axes=1)(ps, gs, col0s)
+    return out.reshape(Wn, S * ds)
+
+
+def _padded_local_grads(cfg, proto, spec: FlatSpec):
+    """The flat-buffer gradient pass on a PADDED buffer: run the exact
+    unsharded subprogram on the canonical [:, :d] view, re-pad the
+    gradients with exact zeros (padding columns carry no parameters, so
+    their gradient IS zero)."""
+    base = protocol_lib._make_flat_local_pass(cfg, proto, spec.unravel_row)
+    d, width = spec.d, spec.width
+
+    def local_grads(flat_full, batch):
+        losses, g, gnorms = base(flat_full[:, :d], batch)
+        if width > d:
+            g = jnp.pad(g, ((0, 0), (0, width - d)))
+        return losses, g, gnorms
+
+    return local_grads
+
+
+def _check_mesh(spec: FlatSpec, mesh, axis: str):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axis not in sizes:
+        raise ValueError(f"mesh has no {axis!r} axis: {mesh.axis_names}")
+    if sizes[axis] != spec.layout.n_shards:
+        raise ValueError(f"layout has {spec.layout.n_shards} shards but "
+                         f"mesh {axis!r} axis has {sizes[axis]} devices")
+
+
+def _local_round_factory(cfg, proto, spec: FlatSpec, *, dynamic: bool,
+                         axis: Optional[str], impl=None):
+    """Build the per-network round over the LOCAL shard slab.
+
+    axis=None: the logical mode — the function takes the whole padded
+    buffer and runs dp_mix_round_sharded. axis="model": the shard_map
+    body — the function takes [W, shard_width], all-gathers for the grad
+    pass, and runs its own window."""
+    if spec.layout is None:
+        raise ValueError("sharded round requires a FlatSpec with a "
+                         "ShardLayout (exchange.make_flat_spec(..., "
+                         "n_shards=S))")
+    layout = spec.layout
+    chan = None if dynamic else proto.channel()
+    xspec = protocol_lib._flat_spec(proto, dynamic=dynamic)
+    local_grads = _padded_local_grads(cfg, proto, spec)
+    gamma, eta = proto.gamma, proto.eta
+
+    def run(flat, batch, key, chan_t=None, W_t=None):
+        if dynamic:
+            k_n, k_x = jax.random.split(key)
+            ch = chan_t
+        else:
+            k_n, k_m, k_x = jax.random.split(key, 3)
+            ch = chan
+        if axis is None:
+            full = flat
+        else:
+            col0 = (jax.lax.axis_index(axis).astype(jnp.int32)
+                    * layout.shard_width)
+            full = jax.lax.all_gather(flat, axis, axis=1, tiled=True)
+        losses, g_full, gnorms = local_grads(full, batch)
+        if proto.n_workers < 2:
+            # degenerate federation: plain local SGD on the local slab
+            if axis is None:
+                flat = flat - gamma * g_full
+            else:
+                flat = flat - gamma * jax.lax.dynamic_slice_in_dim(
+                    g_full, col0, layout.shard_width, axis=1)
+            return flat, _metrics(losses, gnorms, flat)
+        plan = xspec.plan(proto, ch, k_x, W_arg=W_t)
+        seed = mix_ops.seed_from_key(k_n)
+        if axis is None:
+            flat = dp_mix_round_sharded(flat, g_full, seed, plan, layout,
+                                        gamma=gamma, eta=eta, impl=impl)
+        else:
+            g_loc = jax.lax.dynamic_slice_in_dim(
+                g_full, col0, layout.shard_width, axis=1)
+            flat = shard_window_round(flat, g_loc, seed, plan, col0, layout,
+                                      gamma=gamma, eta=eta, impl=impl)
+        return flat, _metrics(losses, gnorms, flat)
+
+    def _metrics(losses, gnorms, flat):
+        # padding columns are exact zeros; in logical mode reduce over the
+        # canonical [:, :d] view so param_norm matches the unsharded step
+        # BITWISE (same reduction shape). The shard_map psum of per-device
+        # partial sums associates differently — ULP-level only.
+        if axis is None:
+            sq = jnp.sum(flat[:, :layout.d].astype(jnp.float32) ** 2)
+        else:
+            sq = jax.lax.psum(jnp.sum(flat.astype(jnp.float32) ** 2), axis)
+        return {"loss": jnp.mean(losses), "grad_norm": jnp.mean(gnorms),
+                "param_norm": jnp.sqrt(sq)}
+
+    return run
+
+
+def make_sharded_flat_train_step(cfg, proto, spec: FlatSpec, mesh=None,
+                                 axis: str = "model", impl=None):
+    """Sharded twin of protocol.make_flat_train_step (STATIC channel):
+
+        step(flat, batch, key) -> (flat', metrics)
+
+    ``flat`` is the physical [W, spec.width] buffer — model-axis sharded
+    over ``mesh`` when given (device_put it with
+    launch.shardings.flat_buffer_sharding first), logically sharded on one
+    device otherwise. Bitwise-equal to the unsharded step on the canonical
+    [:, :d] view (CPU)."""
+    if mesh is None:
+        run = _local_round_factory(cfg, proto, spec, dynamic=False,
+                                   axis=None, impl=impl)
+        return lambda flat, batch, key: run(flat, batch, key)
+    _check_mesh(spec, mesh, axis)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    run = _local_round_factory(cfg, proto, spec, dynamic=False, axis=axis,
+                               impl=impl)
+    return shard_map(lambda flat, batch, key: run(flat, batch, key),
+                     mesh=mesh, in_specs=(P(None, axis), P(), P()),
+                     out_specs=(P(None, axis), P()), check_rep=False)
+
+
+def make_sharded_dynamic_flat_train_step(cfg, proto, spec: FlatSpec,
+                                         mesh=None, axis: str = "model",
+                                         impl=None):
+    """Sharded twin of protocol.make_dynamic_flat_train_step (repro.net):
+
+        step(flat, batch, key, chan, W) -> (flat', metrics)
+
+    ``chan``/``W`` are the per-round traced channel and mixing matrix
+    (NetworkSimulator.round), replicated across the model shards — every
+    shard builds the identical MixPlan and mixes its own columns."""
+    if mesh is None:
+        run = _local_round_factory(cfg, proto, spec, dynamic=True,
+                                   axis=None, impl=impl)
+        return lambda flat, batch, key, chan, W: run(flat, batch, key,
+                                                     chan, W)
+    _check_mesh(spec, mesh, axis)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    run = _local_round_factory(cfg, proto, spec, dynamic=True, axis=axis,
+                               impl=impl)
+    return shard_map(
+        lambda flat, batch, key, chan, W: run(flat, batch, key, chan, W),
+        mesh=mesh, in_specs=(P(None, axis), P(), P(), P(), P()),
+        out_specs=(P(None, axis), P()), check_rep=False)
+
+
+def make_fleet_sharded_step(cfg, proto, spec: FlatSpec, mesh,
+                            replicate_axis: str = "replicas",
+                            axis: str = "model", impl=None):
+    """The 2-D mesh fleet round: replicates sharded over
+    ``replicate_axis``, the flat buffer's columns over ``axis``.
+
+        step(flat, batch, keys, chans, Ws) -> (flat', metrics)
+
+    ``flat`` is [R, W, spec.width] with sharding
+    P(replicate_axis, None, axis); batch/keys/chans/Ws carry their leading
+    replicate axis over ``replicate_axis`` exactly like the 1-D fleet
+    path. Replicates never communicate; the only collective is the
+    model-axis all-gather of each replicate's buffer for the grad pass."""
+    if spec.lead_axes != 2:
+        raise ValueError("fleet sharding requires a lead_axes=2 FlatSpec "
+                         "([R, W, d] buffer)")
+    _check_mesh(spec, mesh, axis)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if replicate_axis not in sizes:
+        raise ValueError(f"mesh has no {replicate_axis!r} axis: "
+                         f"{mesh.axis_names}")
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    run = _local_round_factory(cfg, proto, spec, dynamic=True, axis=axis,
+                               impl=impl)
+
+    def body(flat, batch, keys, chans, Ws):   # local [R_loc, ...] slabs
+        return jax.vmap(run)(flat, batch, keys, chans, Ws)
+
+    rspec = P(replicate_axis)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(replicate_axis, None, axis), rspec, rspec, rspec,
+                  rspec),
+        out_specs=(P(replicate_axis, None, axis), rspec), check_rep=False)

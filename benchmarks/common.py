@@ -28,6 +28,22 @@ BATCH = 32
 DATA_N = 6000
 
 
+def provenance(smoke: bool = False) -> Dict:
+    """Provenance block every BENCH_*.json carries (repro.obs.runlog is
+    the source of truth for git/backend identity): enough to answer
+    "which commit, which machine class, full or smoke?" from the JSON
+    alone when comparing bench files across branches."""
+    from repro.obs import runlog
+    return {
+        "git_sha": runlog.git_sha(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "jax": jax.__version__,
+        "smoke": bool(smoke),
+    }
+
+
 def _setup_task(proto: P.ProtocolConfig, seed: int):
     """Shared harness: the reduced benchmark task (config, batcher,
     replicated init params, eval fn) — identical between the static and

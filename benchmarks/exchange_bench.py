@@ -71,10 +71,12 @@ def main(steps: int = 250, smoke: bool = False):
     sizes = SIZES_SMOKE if smoke else SIZES_FULL
     n_iter = 3 if smoke else max(3, min(steps // 50, 10))
     cases = [_case(1, sizes, n_iter), _case(8, sizes, n_iter)]
+    from benchmarks.common import provenance
     report = {
         "benchmark": "exchange_fused_vs_unfused",
         "backend": jax.default_backend(),
         "smoke": smoke,
+        "provenance": provenance(smoke),
         "cases": cases,
     }
     out = OUT_SMOKE if smoke else OUT

@@ -1,6 +1,11 @@
 """Kernel micro-benchmarks (interpret-mode on CPU: correctness-scale, not
 perf-scale — TPU timing happens on real hardware). derived = max abs error
-vs the pure-jnp oracle, proving the kernels' numerics at bench shapes."""
+vs the pure-jnp oracle, proving the kernels' numerics at bench shapes.
+
+The retrace cases guard with ``repro.obs.retrace_guard`` (the promoted
+form of the closure trace-counters that used to live here): the guarded
+block RAISES on any compilation after the warmup, and the printed derived
+value is the lifetime trace count (must print 1.00e+00)."""
 import time
 
 import jax
@@ -11,6 +16,7 @@ from repro.kernels.dp_perturb import ops as dp_ops, ref as dp_ref
 from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
 from repro.kernels.ssd_scan import ops as ssd_ops
 from repro.models.ssm import ssd_chunked
+from repro.obs import retrace_guard
 
 
 def _time(fn, *a, n=3):
@@ -125,14 +131,9 @@ def _bench_dp_mix_retrace():
     key = jax.random.PRNGKey(0)
     state = sim.init(key)
     net_round = jax.jit(sim.round)
-    traces = {"n": 0}
 
-    def _fused(p, g, seed, plan):
-        traces["n"] += 1
-        return mix_ops.dp_mix_round_plan(p, g, seed, plan, gamma=0.05,
-                                         eta=0.4)
-
-    fused = jax.jit(_fused)
+    fused = jax.jit(lambda p, g, seed, plan: mix_ops.dp_mix_round_plan(
+        p, g, seed, plan, gamma=0.05, eta=0.4))
     p = jax.random.normal(key, (N, d))
     draws = []
     for t in range(4):
@@ -142,11 +143,12 @@ def _bench_dp_mix_retrace():
                       X.plan_dynamic(None, chan, W_arg=W)))
     fused(p, 0.01 * p, *draws[0])  # compile
     t0 = time.perf_counter()
-    for d_ in draws:
-        out = fused(p, 0.01 * p, *d_)
-    out.block_until_ready()
+    with retrace_guard(fused, label="fused dp_mix round") as g:
+        for d_ in draws:
+            out = fused(p, 0.01 * p, *d_)
+        out.block_until_ready()
     us = (time.perf_counter() - t0) / len(draws) * 1e6
-    return f"dp_mix/retrace_{N}x{d},{us:.1f},{traces['n']:.2e}"
+    return f"dp_mix/retrace_{N}x{d},{us:.1f},{g.total_traces:.2e}"
 
 
 def _bench_trajectory_scan():
@@ -176,13 +178,8 @@ def _bench_net_retrace():
     state = sim.init(key)
     net_round = jax.jit(sim.round)
 
-    traces = {"n": 0}
-
-    def _exchange(X, n, m, chan, W):
-        traces["n"] += 1
-        return dwfl.exchange_dwfl_dynamic(X, n, m, chan, 0.4, W)
-
-    exchange = jax.jit(_exchange)
+    exchange = jax.jit(lambda X, n, m, chan, W: dwfl.exchange_dwfl_dynamic(
+        X, n, m, chan, 0.4, W))
     X = {"w": jax.random.normal(key, (16, 4096))}
     draws = []
     for t in range(8):
@@ -193,11 +190,12 @@ def _bench_net_retrace():
         draws.append((n, m, chan, W))
     exchange(X, *draws[0])  # compile
     t0 = time.perf_counter()
-    for d in draws:
-        out = exchange(X, *d)
-    out["w"].block_until_ready()
+    with retrace_guard(exchange, label="dynamic exchange") as g:
+        for d in draws:
+            out = exchange(X, *d)
+        out["w"].block_until_ready()
     us = (time.perf_counter() - t0) / len(draws) * 1e6
-    return f"net/retrace_16x4096,{us:.1f},{traces['n']:.2e}"
+    return f"net/retrace_16x4096,{us:.1f},{g.total_traces:.2e}"
 
 
 def _bench_fleet_retrace():
@@ -217,15 +215,9 @@ def _bench_fleet_retrace():
     states = fleet.init(key)
     fleet_round = jax.jit(fleet.round)
 
-    traces = {"n": 0}
-
-    def _exchange(X, n, m, chans, Ws):
-        traces["n"] += 1
-        return jax.vmap(
-            lambda x, nn, mm, ch, w: dwfl.exchange_dwfl_dynamic(
-                x, nn, mm, ch, 0.4, w))(X, n, m, chans, Ws)
-
-    exchange = jax.jit(_exchange)
+    exchange = jax.jit(lambda X, n, m, chans, Ws: jax.vmap(
+        lambda x, nn, mm, ch, w: dwfl.exchange_dwfl_dynamic(
+            x, nn, mm, ch, 0.4, w))(X, n, m, chans, Ws))
     X1 = {"w": jax.random.normal(key, (N, d))}
     Xb = jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a[None], (R,) + a.shape), X1)
@@ -240,11 +232,12 @@ def _bench_fleet_retrace():
         batches.append((n, m, chans, Ws))
     exchange(Xb, *batches[0])  # compile
     t0 = time.perf_counter()
-    for b in batches:
-        out = exchange(Xb, *b)
-    out["w"].block_until_ready()
+    with retrace_guard(exchange, label="fleet exchange") as g:
+        for b in batches:
+            out = exchange(Xb, *b)
+        out["w"].block_until_ready()
     us = (time.perf_counter() - t0) / len(batches) * 1e6
-    return f"fleet/retrace_{R}x{N}x{d},{us:.1f},{traces['n']:.2e}"
+    return f"fleet/retrace_{R}x{N}x{d},{us:.1f},{g.total_traces:.2e}"
 
 
 if __name__ == "__main__":

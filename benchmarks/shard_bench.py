@@ -141,6 +141,7 @@ def main(smoke: bool = False):
         cases.append(case)
         rows.append(f"shard/S{S},{us:.1f},{case['rounds_per_s']}")
 
+    from benchmarks.common import provenance
     report = {
         "bench": "shard",
         "workers": N_WORKERS,
@@ -148,6 +149,7 @@ def main(smoke: bool = False):
         "iters": n_iter,
         "devices": jax.device_count(),
         "smoke": smoke,
+        "provenance": provenance(smoke),
         "note": ("host-platform CPU devices share one socket: sharded "
                  "rows measure partition+collective overhead, the "
                  "capacity win is buffer_bytes_per_device"),

@@ -225,10 +225,12 @@ def main(steps: int = 250, smoke: bool = False):
         _case("fleet", CHUNK, chunks, N_WORKERS, BATCH,
               replicates=R_FLEET),
     ]
+    from benchmarks.common import provenance
     report = {
         "benchmark": "trajectory_scan_vs_per_round",
         "backend": jax.default_backend(),
         "smoke": smoke,
+        "provenance": provenance(smoke),
         "chunk_rounds": CHUNK,
         "flat_buffer": True,
         "speedup_floor": SPEEDUP_FLOOR,

@@ -176,4 +176,55 @@ echo "== ISSUE 5 regression tests: shard parity + checkpoint roundtrip =="
 python -m pytest -q -m "not slow" tests/test_shard.py tests/test_checkpoint.py
 fi
 
+echo "== ISSUE 6 lint: no stray print() outside launch/ and obs/ =="
+# structured output goes through repro.obs (runlog/console); ad-hoc prints
+# in library code are invisible inside compiled chunks and pollute CI logs
+if grep -rn "print(" src/repro --include="*.py" \
+    | grep -v "^src/repro/launch/" \
+    | grep -v "^src/repro/obs/" \
+    | grep -v "#.*print("; then
+    echo "stray print( in library code — route it through repro.obs" >&2
+    exit 1
+fi
+
+echo "== ISSUE 6 smoke: runlog-enabled train + report =="
+# a fixed gitignored location so CI can upload the run log as an artifact
+OBS_RUNDIR="bench_out/runlogs"
+rm -rf "$OBS_RUNDIR" && mkdir -p "$OBS_RUNDIR"
+python -m repro.launch.train \
+    --arch dwfl-paper --steps 10 --workers 6 --batch-size 8 \
+    --channel-model dynamic --scenario iot_dense --flat-buffer \
+    --chunk-rounds 4 --eval-every 5 --runlog-dir "$OBS_RUNDIR"
+python -m repro.obs.report "$OBS_RUNDIR"/*
+python - "$OBS_RUNDIR" <<'EOF'
+import json, pathlib, sys
+run = next(pathlib.Path(sys.argv[1]).iterdir())
+man = json.loads((run / "manifest.json").read_text())
+assert man["status"] == "ok", man
+rounds = [json.loads(l) for l in (run / "events.jsonl").open()
+          if json.loads(l)["type"] == "round"]
+assert len(rounds) == 11 and all("epsilon" in r for r in rounds), \
+    (len(rounds), rounds[:1])
+print(f"{run.name}: {len(rounds)} round events, status=ok")
+EOF
+
+echo "== ISSUE 6 smoke: telemetry overhead artifact (smoke shapes) =="
+python -m benchmarks.obs_bench --smoke
+python - <<'EOF'
+import json
+rep = json.load(open("bench_out/BENCH_obs_smoke.json"))
+assert {c["path"] for c in rep["cases"]} == {"static", "dynamic", "fleet"}
+for c in rep["cases"]:
+    assert c["guard_traces"] == 2, c   # one compile per runner, ever
+print("bench_out/BENCH_obs_smoke.json:",
+      ", ".join(f"{c['path']}: {c['overhead_frac']:+.1%}"
+                for c in rep["cases"]))
+EOF
+
+if [[ "$RUN_REGRESSION" == 1 ]]; then
+echo "== ISSUE 6 regression tests: telemetry + runlog/watchdogs =="
+python -m pytest -q -m "not slow" tests/test_obs.py
+python -m pytest -q tests/test_trajectory.py -k "telemetry or consensus"
+fi
+
 echo "ci_check: OK"

@@ -273,6 +273,32 @@ def compose_heterogeneous_batched(eps_rounds, delta_round: float,
     return eps, delta
 
 
+def compose_from_moments(moments, delta_round: float,
+                         delta_prime: float = 1e-6):
+    """Heterogeneous composition from the scan-carry moment accumulator.
+
+    ``moments`` is [..., 4] = [Σε, Σε², Σε(e^ε−1), T] (obs.telemetry's
+    TrajCarry.eps accumulator — the sufficient statistics of
+    compose_heterogeneous, folded round by round INSIDE the compiled
+    chunk). Returns (ε_total [...], δ_total [...]):
+
+        ε_total = sqrt(2 ln(1/δ') Σε²) + Σε(e^ε−1),
+        δ_total = T δ + δ'.
+
+    Matches compose_heterogeneous(_batched) on the stacked per-round
+    trajectory to float accumulation order (tests/test_obs.py)."""
+    m = np.asarray(moments, np.float64)
+    if m.shape[-1] != 4:
+        raise ValueError(f"moments last axis must be 4 "
+                         f"[Σε, Σε², Σε(e^ε−1), T], got shape {m.shape}")
+    eps = (np.sqrt(2.0 * math.log(1.0 / delta_prime) * m[..., 1])
+           + m[..., 2])
+    delta = m[..., 3] * delta_round + delta_prime
+    if eps.ndim == 0:
+        return float(eps), float(delta)
+    return eps, delta
+
+
 def epsilon_sampled(eps_round: float, delta_round: float, q: float):
     """Beyond-paper: privacy amplification by worker subsampling (a worker's
     data only enters rounds it transmits, rate q). Standard subsampling

@@ -52,15 +52,21 @@ class TrajCarry(NamedTuple):
     ``params`` is the worker-stacked pytree ([W, ...] leaves; [R, W, ...]
     for the fleet) or the persistent flat buffer ([W, d] / [R, W, d]) in
     flat mode. ``net`` is the repro.net NetState (stacked for the fleet),
-    or None on the static-channel path."""
+    or None on the static-channel path. ``eps`` is the running ε
+    composition-moment accumulator ([Σε, Σε², Σε(e^ε−1), T] — [4] f32,
+    [R, 4] for the fleet; obs.telemetry.init_eps_moments) when telemetry
+    with ε accounting is enabled, else None — the composed trajectory
+    budget then comes out of the compiled chunk for free
+    (privacy.compose_from_moments)."""
     key: jnp.ndarray
     params: Any
     net: Any = None
+    eps: Any = None
 
 
 def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
                     flat: bool = False, unravel_row=None, spec=None,
-                    shard_mesh=None) -> Callable:
+                    shard_mesh=None, telemetry=None) -> Callable:
     """Build ``body(carry) -> (carry', out)`` — one full DWFL round.
 
     ``store`` is a repro.data.device store (sample/sample_fleet). Exactly
@@ -88,6 +94,15 @@ def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
     ``chan`` (TracedChannelState) and ``W`` (mixing matrix) on the
     dynamic/fleet paths — [K, ...] / [K, R, ...] leaves after a K-round
     scan, one array per chunk instead of one Python list entry per round.
+
+    ``telemetry`` (obs.telemetry.TelemetrySpec) wraps the built body in
+    pure read-only instrumentation: the enabled per-round scalars are
+    packed into ``out["telemetry"]`` ([M] per round, [R, M] for the
+    fleet — [K, M] / [K, R, M] per chunk) and, when ε is enabled and the
+    carry holds an ``eps`` accumulator, the ε composition moments are
+    folded into the carry. The wrapper consumes NO PRNG keys and never
+    touches params, so chunked-vs-per-round trajectories stay BITWISE
+    identical with telemetry on (tests/test_trajectory.py).
     """
     if spec is not None:
         flat = True
@@ -108,10 +123,10 @@ def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
             batch = store.sample_fleet(k_data, R)
             params, metrics = step(carry.params, batch,
                                    fleet.split_keys(k_step), chans, Ws)
-            return (TrajCarry(key, params, states),
+            return (TrajCarry(key, params, states, carry.eps),
                     {"metrics": metrics, "chan": chans, "W": Ws})
 
-        return body
+        return _maybe_instrument(body, telemetry, proto, fleet=fleet)
 
     if sim is not None:
         if sharded:
@@ -130,10 +145,10 @@ def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
             net, chan, _mask, W = sim.round(k_net, carry.net)
             batch = store.sample(k_data)
             params, metrics = step(carry.params, batch, k_step, chan, W)
-            return (TrajCarry(key, params, net),
+            return (TrajCarry(key, params, net, carry.eps),
                     {"metrics": metrics, "chan": chan, "W": W})
 
-        return body
+        return _maybe_instrument(body, telemetry, proto)
 
     if sharded:
         from repro.shard.round import make_sharded_flat_train_step
@@ -148,9 +163,132 @@ def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
         k_data, k_step = jax.random.split(sk)
         batch = store.sample(k_data)
         params, metrics = step(carry.params, batch, k_step)
-        return TrajCarry(key, params, carry.net), {"metrics": metrics}
+        return (TrajCarry(key, params, carry.net, carry.eps),
+                {"metrics": metrics})
 
-    return body
+    return _maybe_instrument(body, telemetry, proto)
+
+
+def _maybe_instrument(body: Callable, tele, proto, *, fleet=None) -> Callable:
+    """Wrap a round body with read-only telemetry (obs.telemetry).
+
+    The instrumentation splits along what each scalar can see, which is
+    also exactly the cheap placement for each:
+
+    * PER ROUND, inside the scan: the scalars that read transient round
+      state — loss/grad_norm (the step's metrics) and the consensus
+      distance (the live params). These are packed into a per-round
+      ``out["telemetry"]`` prefix the scan stacks like any other output.
+    * PER CHUNK, in a ``chunk_epilogue`` the ChunkRunner fuses into the
+      SAME compiled program after the scan: the channel-derived columns
+      (SNR, deep-fade, participation, per-round ε). The chunk already
+      stacks the realized channel/mixing log (``ys["chan"]``/``ys["W"]``),
+      so these evaluate ONCE, vectorized over all K rounds, instead of as
+      K sequential tiny-op clusters inside the scan — measurably cheaper
+      on CPU and bit-for-bit the same per-round values. On the static
+      channel they collapse further, to compile-time constants broadcast
+      over K. The epilogue also folds the chunk's per-round ε into the
+      carry's composition-moment accumulator (one reduce per chunk).
+
+    The wrapper splits no keys and writes no params — the realized
+    trajectory is bitwise the un-instrumented one.
+
+    Consensus is measured on the params ENTERING the round (row t is the
+    state the round-t gossip step acts on). Besides being the natural
+    pre-mixing quantity, this placement is what keeps telemetry cheap:
+    the pre-round buffer is already live as the grad-step input, whereas
+    reading the post-mix params adds a second consumer to the freshly
+    written buffer and measurably (~2x) inflates the reduce inside the
+    compiled scan. The post-trajectory consensus, when wanted, is one
+    host-side ``consensus_distance(carry.params)`` on the final carry."""
+    if tele is None:
+        return body
+    from repro.obs import telemetry as tele_lib
+
+    if tele.n_fields == 0 and not tele.epsilon:
+        return body
+    needs_chan = (tele.snr_db or tele.deep_fade or tele.participation
+                  or tele.epsilon)
+    R = None if fleet is None else fleet.replicates
+    worker_axis = 0 if R is None else 1
+    # catalogue order puts the in-scan fields first, so the per-round
+    # prefix and the epilogue's channel columns concatenate in field order
+    in_fields = tuple(f for f in ("loss", "grad_norm", "consensus")
+                      if getattr(tele, f))
+    chan_fields = tuple(f for f in tele.fields if f not in in_fields)
+
+    # static channel: every chan-derived scalar is the SAME every round —
+    # evaluate them HERE, eagerly, so the compiled epilogue only embeds
+    # the resulting constants (zero per-round work for those fields)
+    static_vals: dict = {}
+    static_eps = None
+    if needs_chan and proto.channel_model != "dynamic":
+        from repro.net.state import TracedChannelState
+        static_chan = TracedChannelState.from_static(proto.channel())
+        static_W = jnp.asarray(proto.mixing_matrix(), jnp.float32)
+        static_vals = {k: jnp.asarray(v, jnp.float32) for k, v in
+                       tele_lib.channel_scalars(tele, static_chan,
+                                                static_W).items()}
+        if tele.epsilon:
+            static_eps = jnp.asarray(
+                tele_lib.epsilon_round(proto, static_chan, static_W),
+                jnp.float32)
+
+    def instrumented(carry: TrajCarry):
+        new_carry, out = body(carry)
+        if not in_fields:
+            return new_carry, out
+        vals = {}
+        if tele.loss:
+            vals["loss"] = out["metrics"]["loss"]
+        if tele.grad_norm:
+            vals["grad_norm"] = out["metrics"]["grad_norm"]
+        if tele.consensus:
+            vals["consensus"] = tele_lib.consensus_distance(
+                carry.params, worker_axis=worker_axis)
+        cols = [jnp.asarray(vals[f], jnp.float32) for f in in_fields]
+        return new_carry, dict(out, telemetry=jnp.stack(cols, axis=-1))
+
+    def chunk_epilogue(carry: TrajCarry, ys):
+        k = jax.tree_util.tree_leaves(ys)[0].shape[0]
+        lead = (k,) if R is None else (k, R)
+        parts = [ys["telemetry"]] if in_fields else []
+        eps = None
+        if needs_chan:
+            chans, Ws = ys.get("chan"), ys.get("W")
+            if chans is None:                     # static: constants
+                vals = {f: jnp.broadcast_to(v, lead)
+                        for f, v in static_vals.items()}
+                if static_eps is not None:
+                    eps = jnp.broadcast_to(static_eps, lead)
+            else:
+                def one(ch, w):
+                    v = tele_lib.channel_scalars(tele, ch, w)
+                    if tele.epsilon:
+                        v["epsilon"] = tele_lib.epsilon_round(proto, ch, w)
+                    return v
+                fn = jax.vmap(one) if R is None else jax.vmap(jax.vmap(one))
+                vals = fn(chans, Ws)
+                eps = vals.get("epsilon")
+            if eps is not None:
+                vals["epsilon"] = eps
+            parts.extend(jnp.asarray(vals[f], jnp.float32)[..., None]
+                         for f in chan_fields)
+        if parts:
+            tele_cols = (parts[0] if len(parts) == 1
+                         else jnp.concatenate(parts, axis=-1))
+            ys = dict(ys, telemetry=tele_cols)
+        acc = carry.eps
+        if acc is not None and eps is not None:
+            e = jnp.asarray(eps, jnp.float32)
+            upd = jnp.stack([e, e ** 2, e * jnp.expm1(e),
+                             jnp.ones_like(e)], axis=-1)
+            carry = TrajCarry(carry.key, carry.params, carry.net,
+                              acc + jnp.sum(upd, axis=0))
+        return carry, ys
+
+    instrumented.chunk_epilogue = chunk_epilogue
+    return instrumented
 
 
 class ChunkRunner:
@@ -167,6 +305,12 @@ class ChunkRunner:
         self._donate = donate
         self._cache = {}
 
+    def trace_counts(self):
+        """{chunk_length: lifetime compilation count} over the cached scan
+        programs — each distinct length legitimately compiles exactly once;
+        any count above 1 is a retrace (obs.retrace_guard sums these)."""
+        return {k: fn._cache_size() for k, fn in self._cache.items()}
+
     def run(self, carry: TrajCarry, k: int) -> Tuple[TrajCarry, Any]:
         k = int(k)
         if k < 1:
@@ -174,9 +318,17 @@ class ChunkRunner:
         fn = self._cache.get(k)
         if fn is None:
             body = self._body
+            # telemetry (or any body wrapper) may attach a chunk_epilogue:
+            # a (carry, stacked_ys) -> (carry, stacked_ys) transform fused
+            # into the SAME compiled program after the scan — one
+            # vectorized pass over the chunk's stacked outputs instead of
+            # k per-round op clusters (see _maybe_instrument)
+            post = getattr(body, "chunk_epilogue", None)
 
             def scan_k(c):
-                return jax.lax.scan(lambda cc, _: body(cc), c, None, length=k)
+                c, ys = jax.lax.scan(lambda cc, _: body(cc), c, None,
+                                     length=k)
+                return (c, ys) if post is None else post(c, ys)
 
             fn = jax.jit(scan_k,
                          donate_argnums=(0,) if self._donate else ())
@@ -196,6 +348,9 @@ def run_per_round(body: Callable, carry: TrajCarry, k: int
         carry, out = step(carry)
         outs.append(out)
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+    post = getattr(body, "chunk_epilogue", None)
+    if post is not None:
+        carry, stacked = jax.jit(post)(carry, stacked)
     return carry, stacked
 
 

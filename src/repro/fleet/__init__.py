@@ -11,12 +11,13 @@ fleet_epsilon_report wraps both into the per-replicate composed report.
 Entry points: ``ProtocolConfig(channel_model="dynamic", replicates=R)`` +
 ``launch/train.py --replicates R``; see examples/fleet_quickstart.py.
 """
-from repro.fleet.engine import (FleetEngine, fleet_epsilon_report, mean_ci,
-                                stack_rounds)
+from repro.fleet.engine import (FleetEngine, fleet_epsilon_report,
+                                fleet_round_telemetry, mean_ci, stack_rounds)
 
 __all__ = [
-    "FleetEngine", "ScenarioGrid", "fleet_epsilon_report", "mean_ci",
-    "run_grid", "run_point", "stack_rounds",
+    "FleetEngine", "ScenarioGrid", "fleet_epsilon_report",
+    "fleet_round_telemetry", "mean_ci", "run_grid", "run_point",
+    "stack_rounds",
 ]
 
 _SWEEP_NAMES = {"ScenarioGrid", "run_grid", "run_point"}

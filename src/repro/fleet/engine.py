@@ -252,6 +252,29 @@ class FleetEngine:
         return fleet_round
 
 
+def fleet_round_telemetry(proto, chans, Ws=None, spec=None) -> dict:
+    """Host-side recompute of the channel telemetry columns over a stacked
+    fleet log: ``chans``/``Ws`` leaves are [R, T, ...] (stack_rounds or a
+    trajectory's out) and the result is {name: [R, T]} for every enabled
+    channel scalar (+ per-round ε when the spec keeps it). This is the
+    REFERENCE the in-scan fleet telemetry is tested against
+    (tests/test_trajectory.py) — same formulas, recomputed from the logged
+    channel states instead of inside the compiled chunk."""
+    from repro.obs import telemetry as tele_lib
+    spec = spec if spec is not None else tele_lib.TelemetrySpec()
+
+    def one(ch, w):
+        vals = tele_lib.channel_scalars(spec, ch, w)
+        if spec.epsilon:
+            vals["epsilon"] = tele_lib.epsilon_round(proto, ch, w)
+        return vals
+
+    if Ws is None:
+        fn = jax.vmap(jax.vmap(lambda ch: one(ch, None)))
+        return fn(chans)
+    return jax.vmap(jax.vmap(one))(chans, Ws)
+
+
 def fleet_epsilon_report(proto, chans, Ws=None) -> dict:
     """Replicated privacy report: Theorem 4.1 on every round of every
     replicate ([R, T, N] via the batched accounting — no Python loop),

@@ -20,6 +20,7 @@ The driver keeps cells separate so every cell gets its own CI.
 from __future__ import annotations
 
 import argparse
+import hashlib
 import itertools
 import json
 import time
@@ -30,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import protocol as P
 from repro.fleet.engine import FleetEngine, fleet_epsilon_report, mean_ci, stack_rounds
 
@@ -67,6 +69,19 @@ class ScenarioGrid:
     def size(self) -> int:
         return (len(self.scenarios) * len(self.n_workers) * len(self.p_dbm)
                 * len(self.target_epsilon))
+
+
+def cell_seed(base_seed: int, point: Dict) -> int:
+    """Deterministic per-cell seed: a stable hash of (base seed, cell
+    settings). Every cell gets an INDEPENDENT PRNG stream — reusing the
+    grid seed verbatim made all cells share their data shuffles and
+    channel draws (correlated sampling error across the sweep) — yet the
+    seed is reproducible from the row alone and independent of cell
+    ORDER, so re-running a single cell reproduces its sweep result."""
+    blob = json.dumps({"seed": base_seed, **point}, sort_keys=True,
+                      default=str)
+    return int.from_bytes(hashlib.sha256(blob.encode()).digest()[:4],
+                          "big") % (2 ** 31)
 
 
 def _setup_fleet_task(fleet: FleetEngine, seed: int):
@@ -112,7 +127,9 @@ def _setup_fleet_task(fleet: FleetEngine, seed: int):
 
 def run_point(grid: ScenarioGrid, point: Dict, seed: int = 0) -> Dict:
     """One grid cell: R replicates batched through one compiled fleet round.
-    Returns the cell's row — settings + across-replicate aggregates."""
+    Returns the cell's row — settings, the cell's own seed, the RESOLVED
+    protocol + scenario configuration (so a row is re-runnable without the
+    grid object), and across-replicate aggregates."""
     proto = P.ProtocolConfig(
         scheme="dwfl", n_workers=point["n_workers"], gamma=grid.gamma,
         eta=grid.eta, clip=grid.clip, p_dbm=point["p_dbm"], seed=seed,
@@ -155,8 +172,11 @@ def run_point(grid: ScenarioGrid, point: Dict, seed: int = 0) -> Dict:
     acc_mean, acc_ci = mean_ci(np.asarray(ev_acc))
     return {
         **point,
+        "seed": seed,
         "replicates": grid.replicates,
         "steps": grid.steps,
+        "config": {"protocol": asdict(proto),
+                   "scenario": asdict(fleet.sim.scenario)},
         "us_per_round": us_per_round,
         "loss_mean": loss_mean, "loss_ci95": loss_ci,
         "acc_mean": acc_mean, "acc_ci95": acc_ci,
@@ -168,27 +188,35 @@ def run_point(grid: ScenarioGrid, point: Dict, seed: int = 0) -> Dict:
 
 
 def run_grid(grid: ScenarioGrid, seed: Optional[int] = None,
-             json_path: Optional[str] = None, verbose: bool = False) -> Dict:
+             json_path: Optional[str] = None, verbose: bool = False,
+             runlog: Optional[obs.RunLog] = None) -> Dict:
     """Sweep every cell; returns {"grid": settings, "rows": [cell rows]}
-    and optionally writes it as JSON."""
-    seed = grid.seed if seed is None else seed
+    and optionally writes it as JSON. Each cell runs under its OWN
+    derived seed (``cell_seed(base, point)``); ``runlog`` (repro.obs)
+    records one "cell" event per completed row."""
+    base = grid.seed if seed is None else seed
     rows: List[Dict] = []
     for point in grid.points():
-        row = run_point(grid, point, seed=seed)
+        row = run_point(grid, point, seed=cell_seed(base, point))
         rows.append(row)
+        if runlog is not None:
+            runlog.event("cell", **{k: v for k, v in row.items()
+                                    if k != "config"})
         if verbose:
-            print(f"[sweep] {row['scenario']} N={row['n_workers']} "
-                  f"P={row['p_dbm']}dBm eps={row['target_epsilon']}: "
-                  f"acc={row['acc_mean']:.3f}±{row['acc_ci95']:.3f} "
-                  f"eps_T={row['epsilon_composed_mean']:.3g}"
-                  f"±{row['epsilon_composed_ci95']:.2g} "
-                  f"({row['us_per_round']:.0f}us/round x R={row['replicates']})")
+            obs.console(
+                f"[sweep] {row['scenario']} N={row['n_workers']} "
+                f"P={row['p_dbm']}dBm eps={row['target_epsilon']} "
+                f"seed={row['seed']}: "
+                f"acc={row['acc_mean']:.3f}±{row['acc_ci95']:.3f} "
+                f"eps_T={row['epsilon_composed_mean']:.3g}"
+                f"±{row['epsilon_composed_ci95']:.2g} "
+                f"({row['us_per_round']:.0f}us/round x R={row['replicates']})")
     out = {"grid": asdict(grid), "rows": rows}
     if json_path:
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2)
         if verbose:
-            print(f"[sweep] wrote {len(rows)} cells -> {json_path}")
+            obs.console(f"[sweep] wrote {len(rows)} cells -> {json_path}")
     return out
 
 
@@ -202,6 +230,9 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=40)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None)
+    ap.add_argument("--runlog-dir", default=None,
+                    help="open a structured run log under this directory "
+                         "(repro.obs: one 'cell' event per grid cell)")
     args = ap.parse_args(argv)
     grid = ScenarioGrid(
         scenarios=tuple(args.scenarios.split(",")),
@@ -209,7 +240,15 @@ def main(argv=None):
         p_dbm=tuple(float(v) for v in args.p_dbm.split(",")),
         target_epsilon=tuple(float(v) for v in args.epsilon.split(",")),
         replicates=args.replicates, steps=args.steps, seed=args.seed)
-    run_grid(grid, json_path=args.json, verbose=True)
+    runlog = None
+    if args.runlog_dir is not None:
+        runlog = obs.RunLog.open_under(args.runlog_dir, kind="sweep",
+                                       config=asdict(grid), seed=args.seed,
+                                       argv=argv)
+        obs.console(f"[sweep] run log -> {runlog.dir}")
+    run_grid(grid, json_path=args.json, verbose=True, runlog=runlog)
+    if runlog is not None:
+        runlog.close("ok", cells=grid.size())
 
 
 if __name__ == "__main__":

@@ -26,6 +26,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -33,9 +34,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import save as ckpt_save
 from repro.configs.registry import ARCHS, get_arch
 from repro.configs import dwfl_paper
+from repro.core import privacy
 from repro.core import protocol as P
 from repro.core import trajectory as TJ
 from repro.data import (FederatedBatcher, LMBatcher, classification_dataset,
@@ -101,6 +104,20 @@ def main(argv=None):
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--log", default=None, help="write metrics JSONL here")
+    ap.add_argument("--runlog-dir", default=None,
+                    help="open a structured run log under this directory "
+                         "(repro.obs: manifest.json + events.jsonl; "
+                         "summarize with `python -m repro.obs.report`)")
+    ap.add_argument("--telemetry", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="in-scan per-round telemetry (loss/grad-norm/"
+                         "consensus/SNR/deep-fade/participation/eps), "
+                         "emitted as one stacked array per chunk. auto: "
+                         "on when --runlog-dir is set (scan path only)")
+    ap.add_argument("--eps-budget", type=float, default=0.0,
+                    help="warn when the composed trajectory epsilon "
+                         "approaches (80%%) / exceeds this budget "
+                         "(0 = no watchdog; needs telemetry)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -123,6 +140,31 @@ def main(argv=None):
     if proto.flat_buffer and args.scheme not in ("dwfl", "gossip"):
         raise SystemExit("--flat-buffer supports the mixing-family schemes "
                          "only (dwfl/gossip)")
+
+    # observability: in-scan telemetry spec + structured run log. Telemetry
+    # rides the scan path (the spec is compiled into the chunk program);
+    # "auto" switches it on exactly when a run log wants the rows.
+    if args.telemetry == "on" and args.no_scan:
+        raise SystemExit("--telemetry on requires the scan engine "
+                         "(telemetry is computed inside the compiled "
+                         "chunks; drop --no-scan)")
+    tele = None
+    if not args.no_scan and (args.telemetry == "on" or (
+            args.telemetry == "auto" and args.runlog_dir is not None)):
+        tele = obs.TelemetrySpec()
+    if args.eps_budget > 0 and tele is None:
+        raise SystemExit("--eps-budget needs telemetry (the composed eps "
+                         "comes out of the scan carry); use --runlog-dir "
+                         "or --telemetry on")
+    runlog = None
+    if args.runlog_dir is not None:
+        runlog = obs.RunLog.open_under(
+            args.runlog_dir, kind="train",
+            config={"args": vars(args),
+                    "protocol": dataclasses.asdict(proto)},
+            seed=args.seed, argv=argv,
+            extra={"telemetry": list(tele.fields) if tele else None})
+        print(f"[train] run log -> {runlog.dir}")
     n_shards = max(1, args.model_shards)
     if n_shards > 1 and not proto.flat_buffer:
         raise SystemExit("--model-shards requires --flat-buffer (only the "
@@ -265,6 +307,8 @@ def main(argv=None):
         if logf:
             logf.write(json.dumps(rec) + "\n")
             logf.flush()
+        if runlog is not None:
+            runlog.eval_metrics(**rec)
 
     chan_chunks, w_chunks = [], []    # scan path: ONE [K, ...] array/chunk
     chan_log, w_log = [], []          # legacy path: one array per round
@@ -276,14 +320,25 @@ def main(argv=None):
         body = TJ.make_round_body(
             cfg, proto, store, sim=None if fleet is not None else sim,
             fleet=fleet, flat=proto.flat_buffer, unravel_row=unravel_row,
-            spec=spec, shard_mesh=shard_mesh)
+            spec=spec, shard_mesh=shard_mesh, telemetry=tele)
         coher = (sim.scenario.fading.coherence_rounds
                  if sim is not None else None)
         chunk = (args.chunk_rounds if args.chunk_rounds > 0
                  else TJ.auto_chunk(args.eval_every, coher))
-        print(f"[train] scan-fused trajectory: chunk={chunk} rounds/dispatch")
+        print(f"[train] scan-fused trajectory: chunk={chunk} rounds/dispatch"
+              + (f", telemetry: {','.join(tele.fields)}" if tele else ""))
         runner = TJ.ChunkRunner(body)
-        carry = TJ.TrajCarry(key, wp, net_state)
+        eps0 = (obs.init_eps_moments(
+                    fleet.replicates if fleet is not None else None)
+                if tele is not None and tele.epsilon else None)
+        carry = TJ.TrajCarry(key, wp, net_state, eps0)
+        eps_dog = (obs.EpsilonBudgetWatchdog(
+                       args.eps_budget,
+                       on_warn=runlog.warn if runlog is not None else
+                       (lambda msg, **kw: print(f"[train] WARNING: {msg}")))
+                   if args.eps_budget > 0 else None)
+        retrace_dog = obs.RetraceWatchdog(runner, runlog=runlog,
+                                          label="chunk")
         t = 0
         for n, do_eval in TJ.plan_chunks(args.steps + 1, chunk,
                                          args.eval_every):
@@ -292,6 +347,33 @@ def main(argv=None):
             if "chan" in out:
                 chan_chunks.append(out["chan"])
                 w_chunks.append(out["W"])
+            if tele is not None and runlog is not None:
+                # ONE device->host transfer per chunk: the stacked
+                # [K, M] ([K, R, M] fleet: across-replicate mean) rows
+                rows = np.asarray(out["telemetry"])
+                if rows.ndim == 3:
+                    rows = rows.mean(axis=1)
+                for i, row in enumerate(rows):
+                    runlog.round_metrics(
+                        t - n + i, **{f: float(v)
+                                      for f, v in zip(tele.fields, row)})
+            retrace_dog.check(step=t - 1)
+            if carry.eps is not None and (do_eval or eps_dog is not None):
+                m = np.asarray(carry.eps)
+                e_c, d_c = privacy.compose_from_moments(m, proto.delta)
+                # fleet: worst replicate is the binding budget
+                e_worst = float(np.max(e_c))
+                if eps_dog is not None:
+                    eps_dog.check(e_worst, step=t - 1)
+                if do_eval and runlog is not None:
+                    runlog.epsilon(
+                        step=t - 1, eps_composed=e_worst,
+                        delta_composed=float(np.max(d_c)),
+                        rounds=int(np.max(m[..., 3])),
+                        eps_round=float(np.asarray(
+                            out["telemetry"])[-1, ...,
+                                              tele.fields.index("epsilon")]
+                            .max()))
             if do_eval:
                 metrics = jax.tree_util.tree_map(lambda a: a[-1],
                                                  out["metrics"])
@@ -370,6 +452,15 @@ def main(argv=None):
               f"{rep['epsilon_composed_mean']:.3g}"
               f"±{rep['epsilon_composed_ci95']:.2g} "
               f"(delta={rep['delta_composed']:.2g})")
+        if runlog is not None:
+            runlog.event("epsilon_report", rounds=rep["rounds"],
+                         replicates=rep["replicates"],
+                         eps_worst_round=float(rep["epsilon_worst"]),
+                         eps_composed_mean=float(
+                             rep["epsilon_composed_mean"]),
+                         eps_composed_ci95=float(
+                             rep["epsilon_composed_ci95"]),
+                         delta_composed=float(rep["delta_composed"]))
     elif sim is not None:
         # per-round privacy over the REALIZED fading trajectory (not a
         # scalar): Thm 4.1 on each round's channel + worst-case
@@ -387,6 +478,14 @@ def main(argv=None):
               f"max={rep['epsilon_worst']:.3g}  "
               f"composed(eps,delta)=({rep['epsilon_trajectory_composed']:.3g}, "
               f"{rep['delta_trajectory_composed']:.2g})")
+        if runlog is not None:
+            runlog.event("epsilon_report", rounds=rep["rounds"],
+                         eps_worst_round=float(rep["epsilon_worst"]),
+                         eps_mean_round=float(rep["epsilon_mean"]),
+                         eps_composed=float(
+                             rep["epsilon_trajectory_composed"]),
+                         delta_composed=float(
+                             rep["delta_trajectory_composed"]))
     if args.checkpoint:
         meta = {"arch": args.arch, "scheme": args.scheme,
                 "epsilon": rep["epsilon_worst"]}
@@ -405,9 +504,18 @@ def main(argv=None):
         else:
             ckpt_save(args.checkpoint, wp, step=args.steps, metadata=meta)
         print(f"[train] checkpoint -> {args.checkpoint}")
+        if runlog is not None:
+            runlog.checkpoint(args.checkpoint, step=args.steps)
     if logf:
         logf.close()
+    if runlog is not None:
+        # a run whose manifest still says "open" crashed before this line
+        runlog.close("ok", steps=args.steps)
+        print(f"[train] run log closed: {runlog.dir} "
+              f"({runlog.n_events} events, {runlog.n_warnings} warnings) — "
+              f"summarize with `python -m repro.obs.report {runlog.dir}`")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

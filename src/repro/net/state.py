@@ -79,6 +79,15 @@ class TracedChannelState:
     def with_sigma(self, sigma) -> "TracedChannelState":
         return dataclasses.replace(self, sigma=jnp.asarray(sigma, jnp.float32))
 
+    def telemetry(self, spec=None, W=None):
+        """Channel-derived telemetry scalars of this round's realized
+        channel ({name: scalar} — obs.telemetry's channel catalogue, spec
+        defaults to everything). Host-side convenience: the same function
+        of the same state the instrumented scan evaluates in-device."""
+        from repro.obs import telemetry as tele_lib
+        return tele_lib.channel_scalars(
+            spec if spec is not None else tele_lib.TelemetrySpec(), self, W)
+
     # -- conversions -------------------------------------------------------
 
     @classmethod

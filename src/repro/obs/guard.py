@@ -1,0 +1,92 @@
+"""retrace_guard — reusable zero-retrace checking for jitted call sites.
+
+The repo's perf story rests on "compile once, serve every realization":
+the dynamic channel, the fleet batch and the scan chunks are all
+ARGUMENTS of one compiled program, and a silent retrace (a weak-typed
+scalar, a changed static arg, a fresh closure) erases the win without
+failing any test. benchmarks/kernel_bench.py grew ad-hoc trace counters
+for this (a closure ``traces["n"] += 1`` per case); this module promotes
+that pattern into one context manager usable around ANY jitted call:
+
+    step = jax.jit(make_step(...))
+    step(args0)                               # warmup compile
+    with retrace_guard(step, max_new_traces=0, label="dwfl step") as g:
+        for d in draws:
+            step(*d)
+    g.new_traces   # compilations during the block (0 here, or it raised)
+    g.total_traces # lifetime compilations of the guarded callables
+
+Trace counts come from the jitted callable's compilation-cache size
+(``_cache_size()``), so the guard needs no wrapping of the traced
+function and composes with donation/sharding. It also accepts a
+``trajectory.ChunkRunner`` (each distinct chunk length legitimately
+compiles once — the guard sums over the runner's per-length programs).
+
+``strict=False`` turns the assertion into a recorded violation (and an
+optional ``on_retrace`` callback — e.g. RunLog.warn), which is how the
+host runlog's recompile-after-warmup watchdog consumes it.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+
+class RetraceError(AssertionError):
+    """A guarded call site compiled more often than allowed."""
+
+
+def _trace_count(obj) -> int:
+    """Lifetime compilation count of a jitted callable (pjit cache size)
+    or a ChunkRunner (sum over its per-length compiled programs)."""
+    counts = getattr(obj, "trace_counts", None)      # trajectory.ChunkRunner
+    if counts is not None:
+        return sum(counts().values())
+    size = getattr(obj, "_cache_size", None)         # jax.jit / pjit
+    if size is not None:
+        return int(size())
+    raise TypeError(
+        f"retrace_guard needs a jitted callable (with _cache_size()) or a "
+        f"ChunkRunner (with trace_counts()); got {type(obj).__name__}")
+
+
+class retrace_guard:
+    """Context manager asserting at most ``max_new_traces`` compilations
+    of the guarded callables inside the block (see module docstring)."""
+
+    def __init__(self, *jitted, max_new_traces: int = 0, label: str = "",
+                 strict: bool = True,
+                 on_retrace: Optional[Callable[[str], None]] = None):
+        if not jitted:
+            raise ValueError("retrace_guard needs at least one jitted "
+                             "callable to watch")
+        self._jitted = jitted
+        self.max_new_traces = int(max_new_traces)
+        self.label = label
+        self.strict = strict
+        self._on_retrace = on_retrace
+        self.new_traces = 0
+        self.total_traces = 0
+        self.violated = False
+
+    def __enter__(self) -> "retrace_guard":
+        # touch every callable up front so a non-jitted object fails at
+        # entry, not after the workload ran
+        self._before = sum(_trace_count(f) for f in self._jitted)
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.total_traces = sum(_trace_count(f) for f in self._jitted)
+        self.new_traces = self.total_traces - self._before
+        if exc_type is not None:
+            return False                     # never mask the block's error
+        if self.new_traces > self.max_new_traces:
+            self.violated = True
+            msg = (f"retrace_guard{f' [{self.label}]' if self.label else ''}:"
+                   f" {self.new_traces} compilation(s) inside the guarded "
+                   f"block (allowed {self.max_new_traces}) — a traced "
+                   f"argument is being treated as a compile-time constant")
+            if self._on_retrace is not None:
+                self._on_retrace(msg)
+            if self.strict:
+                raise RetraceError(msg)
+        return False

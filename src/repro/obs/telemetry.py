@@ -1,0 +1,210 @@
+"""In-scan telemetry — the on-device half of ``repro.obs``.
+
+The scan engine (core.trajectory) compiles whole K-round blocks into one
+program, which makes the old observe-by-print style blind exactly where
+the interesting things happen: inside compiled chunks, across fleet
+replicates, and along the per-round ε trajectory. ``TelemetrySpec``
+selects a set of per-round scalars that the round body computes ON DEVICE
+and emits as one stacked ``[K, M]`` (fleet: ``[K, R, M]``) array per
+chunk — zero extra dispatches, zero retraces (the spec is a static
+compile-time selection; every scalar is a function of values the round
+already has in registers/VMEM):
+
+    loss, grad_norm    the round metrics the step already computes
+    consensus          ‖x_n − x̄‖ RMS over workers — the gossip-mixing
+                       contraction the paper's Thm 4.2 bounds (measured
+                       on the params ENTERING the round; see
+                       trajectory._maybe_instrument for why)
+    snr_db             realized receiver SNR of the aligned aggregate
+                       (mean over listening receivers, dB)
+    deep_fade          fraction of workers in a deep fade this round
+                       (|h|² below ``deep_fade_rel_db`` of the round's
+                       median |h|²)
+    participation      fraction of workers actively exchanging (from the
+                       round's realized mixing matrix W)
+    epsilon            worst-receiver per-round ε (Thm 4.1 on the round's
+                       realized channel + masking neighborhood — the same
+                       formula ``epsilon_report`` applies host-side)
+
+With ``epsilon`` enabled the scan carry also accumulates the running
+composition moments ``[Σε, Σε², Σε(e^ε−1), T]`` (TrajCarry.eps), so the
+composed trajectory budget comes out of the compiled chunk for free
+(privacy.compose_from_moments) instead of being recomputed host-side from
+the stacked channel log.
+
+Telemetry NEVER consumes PRNG keys and never touches the carry params —
+the realized training trajectory with telemetry on is bitwise the
+trajectory with it off (tests/test_trajectory.py asserts this).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ordered catalogue: (name, needs_channel) — the vector layout is the
+# subsequence of enabled names in THIS order (host and device agree on it
+# through TelemetrySpec.fields alone)
+_CATALOGUE: Tuple[Tuple[str, bool], ...] = (
+    ("loss", False),
+    ("grad_norm", False),
+    ("consensus", False),
+    ("snr_db", True),
+    ("deep_fade", True),
+    ("participation", True),
+    ("epsilon", True),
+)
+
+
+@dataclass(frozen=True)
+class TelemetrySpec:
+    """Static (compile-time) selection of per-round telemetry scalars.
+
+    Frozen + hashable: safe to close over in jitted round bodies; two
+    bodies built from equal specs compile to the same program.
+
+    ``deep_fade_rel_db``: a worker is in a deep fade when its power gain
+    |h|² is below this many dB of the round's median |h|² (relative, so
+    the flag is scenario/path-loss scale free).
+    """
+    loss: bool = True
+    grad_norm: bool = True
+    consensus: bool = True
+    snr_db: bool = True
+    deep_fade: bool = True
+    participation: bool = True
+    epsilon: bool = True
+    deep_fade_rel_db: float = -20.0
+
+    @property
+    def fields(self) -> Tuple[str, ...]:
+        """Ordered names of the enabled scalars == columns of the emitted
+        [K, M] telemetry array."""
+        return tuple(n for n, _ in _CATALOGUE if getattr(self, n))
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.fields)
+
+    def unpack(self, arr) -> Dict[str, jnp.ndarray]:
+        """[..., M] telemetry array -> {name: [...] column} (host side)."""
+        names = self.fields
+        if arr.shape[-1] != len(names):
+            raise ValueError(f"telemetry array has {arr.shape[-1]} columns "
+                             f"for {len(names)} enabled fields {names}")
+        return {n: arr[..., i] for i, n in enumerate(names)}
+
+    def pack(self, values: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """{name: scalar-or-[R]} -> [M] (or [R, M]) vector, field order."""
+        cols = [jnp.asarray(values[n], jnp.float32) for n in self.fields]
+        return jnp.stack(cols, axis=-1)
+
+
+def consensus_distance(params, worker_axis: int = 0) -> jnp.ndarray:
+    """RMS consensus distance sqrt(mean_n ‖x_n − x̄‖²) over the worker
+    axis of every leaf (worker_axis=0: [W, ...] leaves; worker_axis=1:
+    fleet [R, W, ...] leaves — returns [R]). Works on the worker-stacked
+    pytree and on the flat [.., W, d] buffer alike (a buffer is just one
+    leaf; exact-zero padding columns contribute nothing).
+
+    Computed by the shifted-data identity with worker 0's row as the
+    shift r:
+
+        mean_n ‖x_n − x̄‖²  =  mean_n ‖x_n − r‖²  −  ‖x̄ − r‖²
+
+    which needs ONE subtract pass over the data instead of the two the
+    textbook subtract-the-mean form takes — inside the compiled round
+    programs that halves the telemetry overhead (obs_bench: fleet 4.4%
+    -> 1.8% of the round). Unlike the r = 0 sum-of-squares identity —
+    which collapses to 0 near consensus, exactly where this scalar
+    matters — the shift here is a point INSIDE the worker cloud, so
+    ‖x̄ − r‖² = ‖x̄ − x_0‖² ≤ Σ_n ‖x_n − x̄‖² and the cancellation
+    amplification is bounded by 1 + N (~3 bits at N=8; tests/test_obs.py
+    pins both the near-consensus accuracy and the r = 0 failure)."""
+    leaves = jax.tree_util.tree_leaves(params)
+    sq = None
+    n_workers = None
+    for x in leaves:
+        x = x.astype(jnp.float32)
+        n_workers = x.shape[worker_axis]
+        sl = (slice(None),) * worker_axis + (slice(0, 1),)
+        y = x - x[sl]
+        red = tuple(range(worker_axis, x.ndim))
+        s1 = jnp.sum(y * y, axis=red) * (1.0 / n_workers)
+        v = jnp.mean(y, axis=worker_axis)
+        d2 = (s1 - jnp.sum(v * v, axis=red[:-1])) * n_workers
+        # d2: scalar (worker_axis=0) or [R] (worker_axis=1)
+        sq = d2 if sq is None else sq + d2
+    return jnp.sqrt(jnp.maximum(sq, 0.0) * (1.0 / n_workers))
+
+
+def _active_adjacency(W, n: int):
+    """Off-diagonal active-link adjacency of a realized mixing matrix
+    (W=None: the complete graph — every worker hears every other)."""
+    eye = jnp.eye(n, dtype=bool)
+    if W is None:
+        return jnp.ones((n, n), bool) & ~eye
+    return (jnp.asarray(W) > 0) & ~eye
+
+
+def channel_scalars(spec: TelemetrySpec, chan, W=None) -> Dict[str, jnp.ndarray]:
+    """The channel-derived telemetry scalars of one round (all traced).
+
+    ``chan`` is a TracedChannelState (or anything with its duck-typed
+    surface); ``W`` the round's realized [N, N] mixing matrix (None: the
+    paper's complete graph). Returns only the scalars ``spec`` enables,
+    ``epsilon`` excluded (that one needs the protocol's γ/g_max/δ —
+    see trajectory's instrumentation / privacy.epsilon_dwfl_traced)."""
+    out: Dict[str, jnp.ndarray] = {}
+    n = chan.n_workers
+    adj = None
+    if spec.snr_db or spec.participation:
+        adj = _active_adjacency(W, n).astype(jnp.float32)
+        listening = jnp.sum(adj, axis=1) > 0
+    if spec.deep_fade:
+        h2 = jnp.asarray(chan.h, jnp.float32) ** 2
+        floor = 10.0 ** (spec.deep_fade_rel_db / 10.0) * jnp.median(h2)
+        out["deep_fade"] = jnp.mean((h2 < floor).astype(jnp.float32))
+    if spec.participation:
+        out["participation"] = jnp.mean(listening.astype(jnp.float32))
+    if spec.snr_db:
+        # aligned aggregate at receiver i: n_i neighbors, each contributing
+        # signal amplitude c — power (n_i c)²; masked by the neighbors' DP
+        # noise + receiver AWGN (the same aggregate Thm 4.1 accounts)
+        n_i = jnp.sum(adj, axis=1)
+        sig = (n_i * chan.c) ** 2
+        s2 = jnp.asarray(chan.noise_scale, jnp.float32) ** 2
+        noise = adj @ (s2 * chan.sigma ** 2) + chan.sigma_m ** 2
+        snr = jnp.where(listening, sig / noise, jnp.nan)
+        out["snr_db"] = 10.0 * jnp.log10(
+            jnp.nanmean(jnp.where(listening, snr, jnp.nan)) + 1e-30)
+    return out
+
+
+def epsilon_round(proto, chan, W=None) -> jnp.ndarray:
+    """Worst-receiver per-round ε on the round's realized channel —
+    Theorem 4.1 with the actual masking neighborhood, exactly what the
+    host-side ``epsilon_report`` computes per trajectory row (the runlog/
+    report acceptance test asserts the two match)."""
+    from repro.core import privacy
+    eps = privacy.epsilon_dwfl_traced(proto.gamma, proto.clip, chan,
+                                      proto.delta, W)
+    return jnp.max(eps)
+
+
+def init_eps_moments(replicates: Optional[int] = None) -> jnp.ndarray:
+    """Zeroed composition-moment accumulator for TrajCarry.eps:
+    [Σε, Σε², Σε(e^ε−1), T] — [4] f32, or [R, 4] for the fleet."""
+    z = jnp.zeros((4,), jnp.float32)
+    if replicates is not None:
+        z = jnp.broadcast_to(z[None], (replicates, 4)) + 0.0
+    return z
+
+
+def accumulate_eps(acc: jnp.ndarray, eps: jnp.ndarray) -> jnp.ndarray:
+    """One round's moment update (eps scalar or [R]; acc [4] or [R, 4])."""
+    e = jnp.asarray(eps, jnp.float32)
+    upd = jnp.stack([e, e ** 2, e * jnp.expm1(e), jnp.ones_like(e)], axis=-1)
+    return acc + upd

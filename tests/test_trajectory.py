@@ -333,6 +333,209 @@ def test_store_from_batcher_roundtrip():
         store_from_batcher(object())
 
 
+# ---------------------------------------------------------------------------
+# in-scan telemetry (ISSUE 6): read-only, bitwise-invisible instrumentation
+# ---------------------------------------------------------------------------
+
+
+def _flat_setup(proto_kw, fleet_engine=None):
+    """Shared flat-buffer trajectory setup for the telemetry tests."""
+    cfg = _cfg()
+    proto = _proto(flat_buffer=True, **proto_kw)
+    wp = _wp(cfg)
+    lead = 1
+    if fleet_engine is not None:
+        wp = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (R,) + a.shape), wp)
+        lead = 2
+    _unravel, unravel_row = X.worker_unravelers(wp, lead_axes=lead)
+    flat = X.flatten_worker_tree(wp, lead_axes=lead)
+    return cfg, proto, flat, unravel_row
+
+
+def test_static_telemetry_bitwise_invisible_and_consistent():
+    """Telemetry ON changes NOTHING about the realized trajectory (params,
+    key, metrics bitwise), adds the [K, M] rows, and on the static channel
+    the chan-derived columns are the compile-time constants of the
+    protocol's channel."""
+    from repro import obs
+    from repro.obs import telemetry as tl
+    cfg, proto, flat, unravel_row = _flat_setup({})
+    tele = obs.TelemetrySpec()
+    store = _store()
+    mk = lambda t: TJ.make_round_body(cfg, proto, store, flat=True,
+                                      unravel_row=unravel_row, telemetry=t)
+    key = jax.random.PRNGKey(11)
+    T = 6
+    c_off, out_off = _run_chunked(mk(None), TJ.TrajCarry(key, flat), (4, 2))
+    c_on, out_on = _run_chunked(
+        mk(tele), TJ.TrajCarry(key, flat, eps=obs.init_eps_moments()), (4, 2))
+    _assert_tree_equal(c_off.params, c_on.params, "params, telemetry on/off")
+    _assert_tree_equal(c_off.key, c_on.key, "key, telemetry on/off")
+    _assert_tree_equal(out_off["metrics"], out_on["metrics"], "metrics")
+
+    rows = np.asarray(out_on["telemetry"])
+    assert rows.shape == (T, tele.n_fields)
+    cols = {f: rows[:, i] for i, f in enumerate(tele.fields)}
+    np.testing.assert_array_equal(
+        cols["loss"], np.asarray(out_on["metrics"]["loss"], np.float32))
+    np.testing.assert_array_equal(
+        cols["grad_norm"],
+        np.asarray(out_on["metrics"]["grad_norm"], np.float32))
+    # static channel: the chan-derived columns are round-constant and equal
+    # the host-side evaluation on the protocol's channel
+    from repro.net.state import TracedChannelState
+    chan = TracedChannelState.from_static(proto.channel())
+    W_mat = jnp.asarray(proto.mixing_matrix(), jnp.float32)
+    ref = {k: float(v) for k, v in chan.telemetry(tele, W_mat).items()}
+    ref["epsilon"] = float(tl.epsilon_round(proto, chan, W_mat))
+    for name in ("snr_db", "deep_fade", "participation", "epsilon"):
+        np.testing.assert_allclose(cols[name], ref[name], rtol=1e-6,
+                                   err_msg=name)
+    # eps moments: T identical rounds of the constant per-round eps
+    e = ref["epsilon"]
+    np.testing.assert_allclose(
+        np.asarray(c_on.eps),
+        np.asarray(tl.accumulate_eps(tl.init_eps_moments(),
+                                     jnp.float32(e)) * T),
+        rtol=1e-5)
+
+
+def test_telemetry_consensus_is_preround_params():
+    """Row t of the consensus column is the distance of the params that
+    ENTERED round t (row 0 == 0 for a common-start init), as documented in
+    trajectory._maybe_instrument."""
+    from repro import obs
+    from repro.obs import telemetry as tl
+    cfg, proto, flat, unravel_row = _flat_setup({})
+    tele = obs.TelemetrySpec()
+    body = TJ.make_round_body(cfg, proto, _store(), flat=True,
+                              unravel_row=unravel_row, telemetry=tele)
+    carry = TJ.TrajCarry(jax.random.PRNGKey(12), flat,
+                         eps=obs.init_eps_moments())
+    T = 5
+    ref = []
+    c = carry
+    for _ in range(T):
+        ref.append(float(tl.consensus_distance(c.params)))
+        c, _ = body(c)
+    _, out = _run_chunked(body, carry, (T,))
+    got = np.asarray(out["telemetry"])[:, tele.fields.index("consensus")]
+    assert got[0] < 1e-5                      # broadcast common start
+    assert (got[1:] > 1e-3).all()
+    np.testing.assert_allclose(got, np.float32(ref), rtol=1e-5, atol=1e-6)
+
+
+def test_dynamic_telemetry_matches_host_recompute():
+    """Dynamic path: telemetry on/off trajectories bitwise identical, and
+    every chan-derived column equals the host-side recompute from the
+    logged channel states (the epsilon column IS Thm 4.1 per round)."""
+    from repro import obs
+    from repro.obs import telemetry as tl
+    cfg, proto, flat, unravel_row = _flat_setup(
+        {"channel_model": "dynamic", "scenario": "iot_dense"})
+    sim = proto.simulator()
+    tele = obs.TelemetrySpec()
+    store = _store()
+    mk = lambda t: TJ.make_round_body(cfg, proto, store, sim=sim, flat=True,
+                                      unravel_row=unravel_row, telemetry=t)
+    net0 = sim.init(jax.random.PRNGKey(13))
+    key = jax.random.PRNGKey(14)
+    T = 6
+    c_off, out_off = _run_chunked(mk(None),
+                                  TJ.TrajCarry(key, flat, net0), (3, 3))
+    c_on, out_on = _run_chunked(
+        mk(tele),
+        TJ.TrajCarry(key, flat, net0, obs.init_eps_moments()), (3, 3))
+    _assert_tree_equal(c_off.params, c_on.params, "params, telemetry on/off")
+    _assert_tree_equal(out_off["chan"], out_on["chan"], "chan stream")
+    _assert_tree_equal(out_off["W"], out_on["W"], "W log")
+
+    rows = np.asarray(out_on["telemetry"])
+    cols = {f: rows[:, i] for i, f in enumerate(tele.fields)}
+    ref = jax.vmap(lambda ch, w: ch.telemetry(tele, w))(out_on["chan"],
+                                                        out_on["W"])
+    for name, col in ref.items():
+        np.testing.assert_allclose(cols[name], np.asarray(col), rtol=1e-5,
+                                   err_msg=name)
+    eps_ref = jax.vmap(lambda ch, w: tl.epsilon_round(proto, ch, w))(
+        out_on["chan"], out_on["W"])
+    np.testing.assert_allclose(cols["epsilon"], np.asarray(eps_ref),
+                               rtol=1e-5)
+    # carry moments == sum of the per-round moment updates, and their
+    # composition agrees with the host-side heterogeneous composition
+    from repro.core import privacy
+    acc = tl.init_eps_moments()
+    for e in np.asarray(eps_ref):
+        acc = tl.accumulate_eps(acc, jnp.float32(e))
+    np.testing.assert_allclose(np.asarray(c_on.eps), np.asarray(acc),
+                               rtol=1e-5)
+    e_m, d_m = privacy.compose_from_moments(np.asarray(c_on.eps),
+                                            proto.delta)
+    e_ref, d_ref = privacy.compose_heterogeneous(
+        np.asarray(eps_ref, np.float64), proto.delta)
+    np.testing.assert_allclose(e_m, e_ref, rtol=1e-4)
+    np.testing.assert_allclose(d_m, d_ref, rtol=1e-6)
+
+
+def test_fleet_telemetry_shape_and_host_recompute():
+    """Fleet path: [K, R, M] rows, per-replicate eps moments, and the
+    chan columns match fleet_round_telemetry on the replicate-major log."""
+    from repro import obs
+    from repro.fleet import FleetEngine, fleet_round_telemetry
+    cfg, proto, flat, unravel_row = _flat_setup(
+        {"channel_model": "dynamic", "scenario": "iot_dense",
+         "replicates": R}, fleet_engine=True)
+    fleet = FleetEngine(proto)
+    tele = obs.TelemetrySpec()
+    mk = lambda t: TJ.make_round_body(cfg, proto, _store(), fleet=fleet,
+                                      flat=True, unravel_row=unravel_row,
+                                      telemetry=t)
+    net0 = fleet.init(jax.random.PRNGKey(15))
+    key = jax.random.PRNGKey(16)
+    T = 4
+    c_off, out_off = _run_chunked(mk(None),
+                                  TJ.TrajCarry(key, flat, net0), (2, 2))
+    c_on, out_on = _run_chunked(
+        mk(tele), TJ.TrajCarry(key, flat, net0, obs.init_eps_moments(R)),
+        (2, 2))
+    # channel/W streams bitwise; params ULP-close (fleet-flat FMA
+    # contraction across different fusion clusters — see the scan-vs-loop
+    # fleet test)
+    _assert_tree_equal(out_off["chan"], out_on["chan"], "chan stream")
+    _assert_tree_ulp_close(c_off.params, c_on.params, "params on/off")
+
+    rows = np.asarray(out_on["telemetry"])
+    assert rows.shape == (T, R, tele.n_fields)
+    assert np.asarray(c_on.eps).shape == (R, 4)
+    ref = fleet_round_telemetry(proto, TJ.replicate_major(out_on["chan"]),
+                                TJ.replicate_major(out_on["W"]),
+                                spec=tele)                       # [R, T]
+    for name, refcol in ref.items():
+        got = rows[:, :, tele.fields.index(name)].T              # [R, T]
+        np.testing.assert_allclose(got, np.asarray(refcol), rtol=1e-5,
+                                   err_msg=name)
+    np.testing.assert_allclose(
+        np.asarray(c_on.eps)[:, 0],
+        np.asarray(ref["epsilon"]).sum(axis=1), rtol=1e-5)
+
+
+def test_telemetry_field_subset_layout():
+    """A partial spec emits exactly its enabled columns, in catalogue
+    order, and no eps accumulator is required when epsilon is off."""
+    from repro import obs
+    cfg, proto, flat, unravel_row = _flat_setup({})
+    tele = obs.TelemetrySpec(grad_norm=False, snr_db=False, epsilon=False)
+    assert tele.fields == ("loss", "consensus", "deep_fade",
+                           "participation")
+    body = TJ.make_round_body(cfg, proto, _store(), flat=True,
+                              unravel_row=unravel_row, telemetry=tele)
+    carry, out = TJ.ChunkRunner(body, donate=False).run(
+        TJ.TrajCarry(jax.random.PRNGKey(17), flat), 3)
+    assert np.asarray(out["telemetry"]).shape == (3, 4)
+    assert carry.eps is None
+
+
 def test_lm_round_body_runs():
     """The LM-family scan body (tokens batches) compiles and steps."""
     from repro.configs.registry import get_arch

@@ -1,0 +1,50 @@
+"""repro.analysis — static checkers for the compiled DWFL programs.
+
+Five invariant families (DESIGN.md §14), each a pure function
+``program -> list[Finding]`` over a traced/compiled view of the SHIPPED
+driver programs (registry.py), no execution required:
+
+* key-discipline  (keys.py)      — no PRNG key consumed twice / split
+                                   and consumed: the DP-critical check
+* donation        (donation.py)  — declared donated carries actually
+                                   alias in the compiled executable
+* weak-closure    (constants.py) — channel/mixing realizations baked in
+                                   as jaxpr consts on dynamic paths
+* dtype-discipline (dtypes.py)   — no f64/complex128 in kernel paths
+* host-sync       (hostsync.py)  — no callbacks/host round-trips inside
+                                   compiled programs (scan bodies!)
+
+plus the AST source lint (sourcelint.py). ``python -m repro.analysis``
+runs everything over the registry and fails on ERROR findings —
+ci_check.sh --lint / the CI lint job.
+"""
+from repro.analysis.constants import check_weak_closure
+from repro.analysis.donation import aval_signature, check_donation
+from repro.analysis.dtypes import check_dtype_discipline
+from repro.analysis.findings import (Finding, Severity, report_json,
+                                     summarize)
+from repro.analysis.hostsync import check_host_sync
+from repro.analysis.keys import check_key_discipline
+from repro.analysis.registry import PROGRAMS, BuiltProgram, build_programs
+from repro.analysis.sourcelint import lint_source
+
+
+def analyze_program(prog: BuiltProgram):
+    """All five jaxpr/HLO checker families over one registry program."""
+    findings = []
+    findings += check_key_discipline(prog.closed_jaxpr, prog.name)
+    findings += check_donation(prog.hlo_text, prog.donated, prog.name)
+    findings += check_weak_closure(prog.closed_jaxpr, prog.n_workers,
+                                   prog.dynamic, prog.name)
+    findings += check_dtype_discipline(prog.closed_jaxpr, prog.name)
+    findings += check_host_sync(prog.closed_jaxpr, prog.name)
+    return findings
+
+
+__all__ = [
+    "Finding", "Severity", "summarize", "report_json",
+    "check_key_discipline", "check_donation", "check_weak_closure",
+    "check_dtype_discipline", "check_host_sync", "lint_source",
+    "aval_signature", "PROGRAMS", "BuiltProgram", "build_programs",
+    "analyze_program",
+]

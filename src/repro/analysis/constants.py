@@ -1,0 +1,81 @@
+"""Weak-closure detector — retrace risk found statically.
+
+The MixPlan contract (DESIGN.md §9) says channel/mixing quantities on
+the dynamic paths are TRACED OPERANDS of the compiled round: the program
+is compiled once and fed fresh realizations. A refactor that closes over
+a concrete realization instead (a `chan.h` snapshot, a materialized
+mixing matrix) bakes it into the jaxpr as a constant — the program still
+runs, produces plausible numbers, and either replays one realization
+forever or retraces per round. retrace_guard (PR 6) catches the retrace
+variant at runtime; this checker catches BOTH variants before anything
+executes, by inspecting the top-level jaxpr consts.
+
+Heuristic (tuned on the shipped programs, pinned by fixtures): a float
+const whose dims all lie in {1, n_workers} and which holds more than a
+handful of distinct values looks like a realized channel/mixing quantity
+— structural constants (identity / complete-graph mixing, uniform noise
+scales) have ≤ 3 distinct values, and device-store data pools have
+non-worker dims. Realization-shaped consts are ERROR on programs
+declared dynamic, INFO on static ones (the static channel bakes its
+one-shot realization in BY DESIGN — flagging it keeps the fact visible
+in reports without failing CI).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.analysis.findings import Finding, Severity
+
+CHECKER = "weak-closure"
+
+# structural mixing/scale constants (eye, complete graph, uniform 1/c)
+# have at most this many distinct values; realizations have many more
+_STRUCTURAL_DISTINCT = 3
+
+
+def _looks_like_realization(x: np.ndarray, n_workers: int) -> bool:
+    if not np.issubdtype(x.dtype, np.floating) or x.ndim == 0:
+        return False
+    if not all(d in (1, n_workers) for d in x.shape):
+        return False
+    return np.unique(x).size > _STRUCTURAL_DISTINCT
+
+
+def check_weak_closure(closed_jaxpr, n_workers: int, dynamic: bool,
+                       program: str = "") -> List[Finding]:
+    """Scan the consts closed over by ``closed_jaxpr`` for baked-in
+    channel/mixing realizations. ``dynamic`` is the program's declared
+    channel model — it decides ERROR vs expected-INFO."""
+    findings: List[Finding] = []
+    consts = getattr(closed_jaxpr, "consts", [])
+    constvars = getattr(getattr(closed_jaxpr, "jaxpr", closed_jaxpr),
+                        "constvars", [])
+    for var, c in zip(constvars, consts):
+        try:
+            x = np.asarray(c)
+        except Exception:  # pragma: no cover - opaque const (e.g. key)
+            continue
+        if not _looks_like_realization(x, n_workers):
+            continue
+        shape = tuple(int(d) for d in x.shape)
+        detail = {"shape": list(shape), "dtype": str(x.dtype),
+                  "distinct_values": int(np.unique(x).size),
+                  "min": float(x.min()), "max": float(x.max())}
+        if dynamic:
+            findings.append(Finding(
+                CHECKER, Severity.ERROR, program,
+                f"float const {x.dtype}{shape} closed over by a DYNAMIC "
+                f"program looks like a realized channel/mixing quantity — "
+                f"it should be a traced operand (MixPlan contract, DESIGN "
+                f"§9); baked in, every round replays one realization (or "
+                f"the driver retraces per round)",
+                where=str(var), detail=detail))
+        else:
+            findings.append(Finding(
+                CHECKER, Severity.INFO, program,
+                f"float const {x.dtype}{shape} is a baked-in one-shot "
+                f"channel realization — expected on the static path",
+                where=str(var), detail=detail))
+    return findings

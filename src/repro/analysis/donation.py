@@ -1,0 +1,137 @@
+"""Donation audit — declared donated carries must actually alias.
+
+The scan engine's perf contract (DESIGN.md §10) donates the TrajCarry so
+the persistent [W, d] buffer is updated in place: ``jax.jit(...,
+donate_argnums=0)``. Donation is a REQUEST — when XLA cannot alias a
+donated input to an output (dtype/shape mismatch after a refactor, a
+layout change, an extra consumer of the buffer), it silently copies and
+the program carries 2× the buffer memory plus a per-chunk memcpy. JAX
+prints a warning the first time, which nobody reads in CI logs; this
+checker turns the aliasing table of the COMPILED executable into
+Findings.
+
+Mechanics: the optimized-HLO header carries the alias map and the entry
+layout::
+
+    input_output_alias={ {0}: (0, {}, may-alias), {1}: (2, {}, ...) },
+    entry_computation_layout={(u32[2]{0}, f32[5,1234]{1,0}, ...)->(...)}
+
+We parse both, then require every donated carry leaf's (dtype, shape)
+signature to be covered by at least as many ALIASED parameters as there
+are donated leaves with that signature. A donated leaf with no aliased
+parameter of its signature is a dead donation → ERROR.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis.findings import Finding, Severity
+
+CHECKER = "donation"
+
+# numpy dtype name -> HLO shorthand
+_HLO_DTYPE = {
+    "float32": "f32", "float64": "f64", "float16": "f16",
+    "bfloat16": "bf16", "int32": "s32", "int64": "s64", "int16": "s16",
+    "int8": "s8", "uint32": "u32", "uint64": "u64", "uint16": "u16",
+    "uint8": "u8", "bool": "pred", "complex64": "c64", "complex128": "c128",
+}
+
+
+def _balanced(text: str, start: int) -> str:
+    """The {...} block starting at ``start`` (index of '{'), brace-matched."""
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+            if depth == 0:
+                return text[start:i + 1]
+    return text[start:]
+
+
+def parse_alias_params(hlo_text: str) -> List[int]:
+    """Parameter numbers that appear on the right side of any
+    input_output_alias entry of the entry module."""
+    m = re.search(r"input_output_alias=\{", hlo_text)
+    if m is None:
+        return []
+    block = _balanced(hlo_text, m.end() - 1)
+    return [int(p) for p in re.findall(r"\{[\d,\s]*\}:\s*\((\d+)", block)]
+
+
+def parse_entry_params(hlo_text: str) -> List[str]:
+    """Entry parameter signatures ("f32[5,1234]", "u32[2]", ...) in
+    parameter order, from entry_computation_layout."""
+    m = re.search(r"entry_computation_layout=\{\(", hlo_text)
+    if m is None:
+        return []
+    inner = _balanced(hlo_text, m.end() - 2)  # the (...) input tuple
+    # cut at the top-level ')->' that ends the input side
+    depth, end = 0, len(inner)
+    for i, ch in enumerate(inner):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return [f"{d}[{s}]" for d, s in
+            re.findall(r"(\w+)\[([\d,]*)\]", inner[:end])]
+
+
+def aval_signature(dtype, shape: Sequence[int]) -> str:
+    """(numpy dtype, shape) -> the HLO signature string used for matching.
+    Typed PRNG keys must be converted to their physical aval by the caller
+    (the registry compiles the shipped raw-uint32-key programs, so keys
+    arrive here as u32[..., 2] already)."""
+    name = _HLO_DTYPE.get(np.dtype(dtype).name, np.dtype(dtype).name)
+    return f"{name}[{','.join(str(int(d)) for d in shape)}]"
+
+
+def check_donation(hlo_text: str, donated: Sequence[Tuple[str, str]],
+                   program: str = "") -> List[Finding]:
+    """``donated``: [(leaf_path, signature)] for every donated carry leaf
+    (signatures from ``aval_signature``). Emits one ERROR per leaf whose
+    signature is not covered by the aliasing table, and one INFO with the
+    overall aliased/donated parameter counts."""
+    findings: List[Finding] = []
+    params = parse_entry_params(hlo_text)
+    aliased = parse_alias_params(hlo_text)
+    if not params:
+        return [Finding(CHECKER, Severity.WARNING, program,
+                        "could not parse entry_computation_layout from the "
+                        "compiled HLO — donation audit skipped")]
+    aliased_sigs: Dict[str, int] = {}
+    for p in aliased:
+        if 0 <= p < len(params):
+            aliased_sigs[params[p]] = aliased_sigs.get(params[p], 0) + 1
+
+    need: Dict[str, List[str]] = {}
+    for path, sig in donated:
+        need.setdefault(sig, []).append(path)
+    for sig, paths in sorted(need.items()):
+        have = aliased_sigs.get(sig, 0)
+        if have < len(paths):
+            for path in paths[have:]:
+                findings.append(Finding(
+                    CHECKER, Severity.ERROR, program,
+                    f"donated carry leaf {path} ({sig}) has no aliased "
+                    f"output in the compiled executable — the donation is "
+                    f"dead and XLA keeps a silent copy of the buffer",
+                    where=path,
+                    detail={"signature": sig,
+                            "aliased_params_with_signature": have,
+                            "donated_leaves_with_signature": len(paths)}))
+    findings.append(Finding(
+        CHECKER, Severity.INFO, program,
+        f"{len(aliased)}/{len(params)} entry parameters aliased to outputs "
+        f"({len(donated)} donated carry leaves checked)",
+        detail={"aliased_params": sorted(set(aliased)),
+                "n_params": len(params)}))
+    return findings

@@ -1,0 +1,68 @@
+"""Dtype discipline — no f64 (or complex128) anywhere in a kernel-path
+program.
+
+The repo's numeric contract is f32 end to end (FlatSpec pins the flat
+buffer to f32; dp_mix generates f32 noise; CPU/GPU bitwise-equivalence
+tests assume it). An accidental x64 promotion — a NumPy float leaking
+into a jnp op under ``jax.config.update("jax_enable_x64", True)``, a
+``np.float64`` scale constant — doubles buffer traffic, silently changes
+realized noise bits, and breaks the cross-path bitwise tests in ways
+that bisect slowly. One pass over every eqn's output avals (plus the
+program's own inputs/consts) catches it at lint time.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.walk import aval_str, iter_eqns
+
+CHECKER = "dtype-discipline"
+
+_WIDE = (np.float64, np.complex128)
+
+
+def _is_wide(aval) -> bool:
+    dt = getattr(aval, "dtype", None)
+    if dt is None:
+        return False
+    try:
+        return any(np.issubdtype(dt, w) for w in _WIDE)
+    except TypeError:  # key dtypes etc.
+        return False
+
+
+def check_dtype_discipline(closed_jaxpr, program: str = "") -> List[Finding]:
+    findings: List[Finding] = []
+    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    for v in list(jaxpr.invars) + list(jaxpr.constvars):
+        if _is_wide(getattr(v, "aval", None)):
+            findings.append(Finding(
+                CHECKER, Severity.ERROR, program,
+                f"64-bit input/const {aval_str(v)} enters the program — "
+                f"the kernel path is f32 end to end",
+                where="<top>", detail={"aval": aval_str(v)}))
+    hits = 0
+    for path, eqn in iter_eqns(jaxpr):
+        wide = [w for w in eqn.outvars if _is_wide(getattr(w, "aval", None))]
+        if not wide:
+            continue
+        hits += 1
+        if hits > 16:  # one root cause fans out; don't flood the report
+            continue
+        findings.append(Finding(
+            CHECKER, Severity.ERROR, program,
+            f"{eqn.primitive.name} produces {aval_str(wide[0])} — f64 "
+            f"upcast inside a kernel-path program (doubles buffer traffic "
+            f"and changes realized noise bits)",
+            where=path or "<top>",
+            detail={"primitive": eqn.primitive.name,
+                    "avals": [aval_str(w) for w in wide]}))
+    if hits > 16:
+        findings.append(Finding(
+            CHECKER, Severity.ERROR, program,
+            f"... and {hits - 16} more f64-producing equations (truncated)",
+            detail={"total_f64_eqns": hits}))
+    return findings

@@ -1,0 +1,236 @@
+"""Key-discipline checker — the DP-critical invariant (DESIGN.md §14).
+
+Theorem 4.1's (ε,δ) guarantee prices ONE Gaussian draw per worker per
+round; a PRNG key that is consumed twice (or both split and consumed)
+reuses the same underlying counter stream, which correlates draws that
+the accountant assumes independent — the privacy claim is silently void
+and no statistical test at repo scale will catch it. This checker proves
+the absence of that defect statically, on the jaxpr of the SHIPPED
+compiled programs (registry: static/dynamic/fleet × tree/flat, sharded).
+
+The registry traces every program with TYPED PRNG keys
+(``jax.random.key``), so key identity is a first-class dtype in the
+jaxpr and the random API surfaces as dedicated primitives:
+
+* producers/derivers — ``random_seed``, ``random_split``,
+  ``random_fold_in``, ``random_wrap``
+* consumers — ``random_bits`` (every ``random.*`` sampler bottoms out
+  here), ``random_unwrap`` (``key_data``: feeds the dp_mix kernel's
+  counter-based on-chip PRNG via ``seed_from_key``)
+
+Rules, per jaxpr scope (the top program and every nested scan body /
+pjit / cond branch — a scan body is its own scope because its carry key
+is a FRESH key each iteration):
+
+1. a SCALAR key with ≥ 2 effective uses (direct, or through aliasing
+   views — slice/squeeze/broadcast of it) → ERROR "key reused". This
+   covers both double consumption and the split-AND-consume mix.
+2. a key ARRAY (e.g. a ``random_split`` bundle) directly consumed or
+   derived ≥ 2 times → ERROR. Disjoint slices of a bundle are the
+   NORMAL pattern and are exempt (each slice is its own scalar key,
+   tracked by rule 1).
+3. a key appearing as a jaxpr CONSTANT → ERROR: a closed-over key means
+   every invocation of the compiled program replays the same randomness.
+4. a scalar key derived but never consumed anywhere → INFO (stream
+   waste, not a privacy defect; surfaced because unused keys usually
+   mark refactor debt).
+
+Known unsoundness (documented, deliberate): two ``slice`` eqns reading
+the SAME bundle range would evade rule 2; nothing in the repo traces
+that shape, and the adversarial fixtures pin the shapes that matter.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.walk import aval_str, is_key_var, iter_eqns, sub_jaxprs
+
+CHECKER = "key-discipline"
+
+# view-creating primitives: the output is (part of) the same key material,
+# not a new use — uses of the view are charged to the parent via the alias
+# edge (rule 1) for scalar parents only (rule 2 exemption for bundles)
+_PASSTHROUGH = frozenset({
+    "slice", "squeeze", "reshape", "broadcast_in_dim", "transpose",
+    "dynamic_slice", "gather", "concatenate", "rev", "copy", "device_put",
+    "expand_dims",
+})
+
+_DERIVE = frozenset({"random_split", "random_fold_in"})
+_CONSUME = frozenset({"random_bits", "random_unwrap"})
+_PRODUCE = frozenset({"random_seed", "random_wrap"})
+
+
+class _VarUse:
+    __slots__ = ("direct", "categories", "sites", "children", "scalar",
+                 "is_output")
+
+    def __init__(self, scalar: bool):
+        self.direct = 0
+        self.categories: List[str] = []
+        self.sites: List[str] = []
+        self.children: List["_VarUse"] = []
+        self.scalar = scalar
+        self.is_output = False
+
+    def add(self, category: str, site: str):
+        self.direct += 1
+        self.categories.append(category)
+        self.sites.append(site)
+
+    def effective(self) -> int:
+        return self.direct + sum(c.effective() for c in self.children)
+
+
+def _eqn_site(path: str, eqn) -> str:
+    name = eqn.params.get("name")
+    label = f"{eqn.primitive.name}:{name}" if name else eqn.primitive.name
+    return f"{path}/{label}" if path else label
+
+
+def _invar_usage(jaxpr, cache: Dict[int, List[bool]]) -> List[bool]:
+    """Whether each invar of ``jaxpr`` is (transitively) used as key
+    material inside it — the attribution oracle for call-like eqns."""
+    cached = cache.get(id(jaxpr))
+    if cached is not None:
+        return cached
+    uses = _scope_uses(jaxpr, cache)
+    out = [v in uses and uses[v].effective() > 0 for v in jaxpr.invars]
+    cache[id(jaxpr)] = out
+    return out
+
+
+def _call_used(eqn, cache: Dict[int, List[bool]]) -> Optional[List[bool]]:
+    """For an eqn with nested jaxprs: which of ITS key operands are used
+    inside. Returns None when the eqn has no nested jaxpr."""
+    subs = [j for _, j in sub_jaxprs(eqn)]
+    if not subs:
+        return None
+    n = len(eqn.invars)
+    used = [False] * n
+    prim = eqn.primitive.name
+    for j in subs:
+        inner = _invar_usage(j, cache)
+        if prim == "cond":
+            # operands: [index, *args]; every branch sees args
+            for i, u in enumerate(inner):
+                if u and 1 + i < n:
+                    used[1 + i] = True
+        elif prim == "while":
+            cn = eqn.params.get("cond_nconsts", 0)
+            bn = eqn.params.get("body_nconsts", 0)
+            # two jaxprs over one operand list [cond_consts, body_consts,
+            # carry]; map by matching invar counts
+            if len(inner) == cn + (n - cn - bn):          # cond_jaxpr
+                idx = list(range(cn)) + list(range(cn + bn, n))
+            else:                                          # body_jaxpr
+                idx = list(range(cn, n))
+            for i, u in zip(idx, inner):
+                if u:
+                    used[i] = True
+        else:
+            # pjit / closed_call / scan / shard_map / custom_*: invars of
+            # the (primal) jaxpr align with the eqn operands
+            for i, u in enumerate(inner):
+                if u and i < n:
+                    used[i] = True
+    return used
+
+
+def _scope_uses(jaxpr, cache: Dict[int, List[bool]]) -> Dict[object, _VarUse]:
+    """Direct-use/alias bookkeeping for every key-typed var of ONE scope
+    (this jaxpr's eqns only — nested jaxprs are separate scopes, consulted
+    just to classify call operands as used/unused)."""
+    uses: Dict[object, _VarUse] = {}
+
+    def node(v) -> _VarUse:
+        u = uses.get(v)
+        if u is None:
+            u = uses[v] = _VarUse(scalar=(getattr(v.aval, "ndim", 0) == 0))
+        return u
+
+    for v in list(jaxpr.invars) + list(jaxpr.constvars):
+        if is_key_var(v):
+            node(v)
+
+    for eqn in jaxpr.eqns:
+        key_ins = [v for v in eqn.invars if is_key_var(v)]
+        if not key_ins:
+            continue
+        prim = eqn.primitive.name
+        site = _eqn_site("", eqn)
+        if prim in _PASSTHROUGH:
+            for v in key_ins:
+                for w in eqn.outvars:
+                    if is_key_var(w):
+                        node(v).children.append(node(w))
+            continue
+        called = _call_used(eqn, cache)
+        for i, v in enumerate(eqn.invars):
+            if not is_key_var(v):
+                continue
+            if prim in _DERIVE:
+                node(v).add("derive", site)
+            elif prim in _CONSUME:
+                node(v).add("consume", site)
+            elif called is not None:
+                if called[i]:
+                    node(v).add("call", site)
+            else:
+                # an unrecognized primitive touching key material: count
+                # it as consumption so reuse through it still trips rule 1
+                node(v).add("opaque", site)
+    # a key returned from the scope (scan carry out, threaded key) is
+    # alive — not dead — but its downstream fate belongs to the CALLER's
+    # scope, so being an output never counts toward the reuse rules
+    for v in jaxpr.outvars:
+        if is_key_var(v):
+            node(v).is_output = True
+    return uses
+
+
+def check_key_discipline(closed_jaxpr, program: str = "") -> List[Finding]:
+    """``jaxpr -> [Finding]`` over every scope of the traced program."""
+    findings: List[Finding] = []
+    cache: Dict[int, List[bool]] = {}
+    seen_scopes = set()
+
+    def scope(jaxpr, path: str):
+        if id(jaxpr) in seen_scopes:
+            return
+        seen_scopes.add(id(jaxpr))
+        for v in jaxpr.constvars:
+            if is_key_var(v):
+                findings.append(Finding(
+                    CHECKER, Severity.ERROR, program,
+                    f"PRNG key captured as a jaxpr constant "
+                    f"({aval_str(v)}): every call replays the same "
+                    f"randomness", where=path or "<top>"))
+        uses = _scope_uses(jaxpr, cache)
+        for v, u in uses.items():
+            eff = u.effective()
+            if (u.scalar and eff >= 2) or u.direct >= 2:
+                cats = sorted(set(u.categories)) or ["aliased"]
+                findings.append(Finding(
+                    CHECKER, Severity.ERROR, program,
+                    f"key {aval_str(v)} used {max(eff, u.direct)}x "
+                    f"({'+'.join(cats)}): reused key material voids the "
+                    f"independent-noise assumption of Thm 4.1",
+                    where=path or "<top>",
+                    detail={"sites": u.sites[:8],
+                            "direct_uses": u.direct,
+                            "effective_uses": eff}))
+            elif (u.scalar and eff == 0 and not u.is_output
+                  and v not in jaxpr.constvars):
+                findings.append(Finding(
+                    CHECKER, Severity.INFO, program,
+                    f"key {aval_str(v)} derived but never consumed "
+                    f"(dead key — harmless, likely refactor debt)",
+                    where=path or "<top>"))
+        for eqn in jaxpr.eqns:
+            for label, sub in sub_jaxprs(eqn):
+                scope(sub, f"{path}/{label}" if path else label)
+
+    scope(getattr(closed_jaxpr, "jaxpr", closed_jaxpr), "")
+    return findings

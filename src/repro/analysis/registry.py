@@ -1,0 +1,167 @@
+"""Registry of the REAL driver programs repro.analysis checks.
+
+Each entry builds the same chunk program ``launch/train.py`` ships —
+``make_round_body`` under ``ChunkRunner.program(k)`` (the un-jitted scan
+the driver jits with a donated carry) — at smoke scale (W=6 workers,
+batch 4, K=3 rounds/chunk, R=2 fleet replicates; dwfl-paper arch), and
+produces BOTH static views the checkers need:
+
+* ``closed_jaxpr`` — traced with TYPED PRNG keys (``jax.random.key``) so
+  key lineage is first-class in the jaxpr (keys.py);
+* ``hlo_text`` — the optimized HLO of the donated compile with RAW
+  uint32 keys, exactly as the driver runs it (donation.py).
+
+The catalogue covers every shipped path: static/dynamic/fleet ×
+tree/flat, telemetry+ε in-carry, and the model-sharded flat round
+(S=2, logical sharding — device-count independent, so CI on one CPU
+checks the same program structure a real mesh runs).
+
+Programs build lazily and independently: ``build_programs(["static-tree"])``
+traces/compiles one program, the CLI default builds all of them (<60 s
+CPU total — acceptance bound, pinned by tests/test_analysis.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+
+from repro.analysis import donation as donation_lib
+
+N_WORKERS = 6
+BATCH = 4
+CHUNK = 3
+REPLICATES = 2
+_SEED = 0
+
+
+@dataclasses.dataclass
+class BuiltProgram:
+    """One registry program, ready for the checkers."""
+    name: str
+    dynamic: bool          # declared channel model (weak-closure severity)
+    n_workers: int
+    closed_jaxpr: object   # typed-key trace of the shipped chunk program
+    hlo_text: str          # optimized HLO of the donated raw-key compile
+    donated: List          # [(carry leaf path, HLO signature)]
+
+
+@functools.lru_cache(maxsize=1)
+def _base():
+    from repro.configs.registry import get_arch
+    from repro.data import (FederatedBatcher, classification_dataset,
+                            dirichlet_partition, store_from_batcher)
+    cfg = get_arch("dwfl-paper")
+    x, y = classification_dataset(512, seed=_SEED)
+    parts = dirichlet_partition(y, N_WORKERS, alpha=0.5, seed=_SEED)
+    batcher = FederatedBatcher(x, y, parts, BATCH, seed=_SEED)
+    return cfg, store_from_batcher(batcher)
+
+
+def _proto(**kw):
+    from repro.core import protocol as P
+    base = dict(scheme="dwfl", n_workers=N_WORKERS, seed=_SEED)
+    base.update(kw)
+    return P.ProtocolConfig(**base)
+
+
+def _finish(name: str, body: Callable, wp, net=None, eps=None,
+            dynamic: bool = False) -> BuiltProgram:
+    from repro.core import trajectory as TJ
+    program = TJ.ChunkRunner(body).program(CHUNK)
+    typed = TJ.TrajCarry(jax.random.key(_SEED), wp, net, eps)
+    closed = jax.make_jaxpr(program)(typed)
+    raw = TJ.TrajCarry(jax.random.PRNGKey(_SEED), wp, net, eps)
+    hlo = (jax.jit(program, donate_argnums=(0,))
+           .lower(raw).compile().as_text())
+    leaves = jax.tree_util.tree_flatten_with_path(raw)[0]
+    donated = [(f"carry{jax.tree_util.keystr(path)}",
+                donation_lib.aval_signature(leaf.dtype, leaf.shape))
+               for path, leaf in leaves]
+    return BuiltProgram(name, dynamic, N_WORKERS, closed, hlo, donated)
+
+
+def _static(name: str, flat: bool, n_shards: int = 1) -> BuiltProgram:
+    from repro.core import exchange as X
+    from repro.core import protocol as P
+    from repro.core import trajectory as TJ
+    cfg, store = _base()
+    proto = _proto(flat_buffer=flat)
+    wp = P.init_worker_params(jax.random.PRNGKey(_SEED), cfg, N_WORKERS)
+    spec = None
+    if flat:
+        spec = X.make_flat_spec(wp, n_shards=n_shards)
+        wp = spec.flatten(wp)
+    body = TJ.make_round_body(cfg, proto, store, spec=spec)
+    return _finish(name, body, wp)
+
+
+def _dynamic(name: str, flat: bool, telemetry: bool = False) -> BuiltProgram:
+    from repro.core import exchange as X
+    from repro.core import protocol as P
+    from repro.core import trajectory as TJ
+    cfg, store = _base()
+    proto = _proto(channel_model="dynamic", scenario="iot_dense",
+                   coherence_rounds=4, flat_buffer=flat)
+    sim = proto.simulator()
+    net = sim.init(jax.random.PRNGKey(1))
+    wp = P.init_worker_params(jax.random.PRNGKey(_SEED), cfg, N_WORKERS)
+    spec = None
+    if flat:
+        spec = X.make_flat_spec(wp)
+        wp = spec.flatten(wp)
+    tele = eps0 = None
+    if telemetry:
+        from repro import obs
+        tele = obs.TelemetrySpec()
+        if getattr(tele, "epsilon", False):
+            eps0 = obs.init_eps_moments(None)
+    body = TJ.make_round_body(cfg, proto, store, sim=sim, spec=spec,
+                              telemetry=tele)
+    return _finish(name, body, wp, net=net, eps=eps0, dynamic=True)
+
+
+def _fleet(name: str, flat: bool) -> BuiltProgram:
+    from repro.core import trajectory as TJ
+    from repro.fleet import FleetEngine
+    cfg, store = _base()
+    proto = _proto(channel_model="dynamic", scenario="iot_dense",
+                   coherence_rounds=4, replicates=REPLICATES,
+                   flat_buffer=flat)
+    fleet = FleetEngine(proto)
+    key = jax.random.PRNGKey(_SEED)
+    spec = None
+    if flat:
+        wp, spec = fleet.init_flat_spec(key, cfg)
+    else:
+        wp = fleet.init_worker_params(key, cfg)
+    net = fleet.init(jax.random.PRNGKey(1))
+    body = TJ.make_round_body(cfg, proto, store, fleet=fleet, spec=spec)
+    return _finish(name, body, wp, net=net, dynamic=True)
+
+
+# name -> zero-arg builder; ORDER is the CLI report order
+PROGRAMS: Dict[str, Callable[[], BuiltProgram]] = {
+    "static-tree": lambda: _static("static-tree", flat=False),
+    "static-flat": lambda: _static("static-flat", flat=True),
+    "dynamic-tree": lambda: _dynamic("dynamic-tree", flat=False),
+    "dynamic-flat-tele": lambda: _dynamic("dynamic-flat-tele", flat=True,
+                                          telemetry=True),
+    "fleet-tree": lambda: _fleet("fleet-tree", flat=False),
+    "fleet-flat": lambda: _fleet("fleet-flat", flat=True),
+    "shard-flat-s2": lambda: _static("shard-flat-s2", flat=True,
+                                     n_shards=2),
+}
+
+
+def build_programs(names: Optional[Sequence[str]] = None
+                   ) -> List[BuiltProgram]:
+    if names is None:
+        names = list(PROGRAMS)
+    unknown = [n for n in names if n not in PROGRAMS]
+    if unknown:
+        raise KeyError(f"unknown program(s) {unknown}; "
+                       f"registry: {list(PROGRAMS)}")
+    return [PROGRAMS[n]() for n in names]

@@ -1,0 +1,69 @@
+"""AST source lint — the ci_check.sh stray-print grep, promoted.
+
+The grep version (PR 6) had the usual grep problems: it fired on
+``pprint(`` and string literals containing "print(", and its comment
+filter was a regex guess. This pass parses each library module with
+``ast`` and flags actual ``print(...)`` CALLS — structured output goes
+through repro.obs (runlog/console); an ad-hoc print in library code is
+invisible inside compiled chunks and pollutes CI logs.
+
+Scope (library code only): everything under ``src/repro`` EXCEPT
+
+* ``launch/`` and ``obs/`` — the driver/reporting layers, whose job is
+  to talk to the terminal;
+* any ``__main__.py`` — CLI entry points (``repro.analysis`` itself,
+  ``repro.obs.report``) print their reports by design.
+
+Findings share the repro.analysis schema, so the CLI emits them into the
+same JSON report and the same ERROR gate as the jaxpr checkers.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import List, Optional
+
+from repro.analysis.findings import Finding, Severity
+
+CHECKER = "source-lint"
+
+_SKIP_DIRS = ("launch", "obs")
+
+
+def _lint_module(path: pathlib.Path, rel: str) -> List[Finding]:
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:  # a module that doesn't parse is its own ERROR
+        return [Finding(CHECKER, Severity.ERROR, "source",
+                        f"syntax error: {e.msg}",
+                        where=f"{rel}:{e.lineno or 0}")]
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "print"):
+            out.append(Finding(
+                CHECKER, Severity.ERROR, "source",
+                "stray print() in library code — route it through "
+                "repro.obs (runlog/console)",
+                where=f"{rel}:{node.lineno}"))
+    return out
+
+
+def lint_source(root: Optional[pathlib.Path] = None) -> List[Finding]:
+    """Lint every library module under ``src/repro`` (see module
+    docstring for the scope). ``root`` overrides the tree to scan —
+    the tests point it at fixture trees."""
+    if root is None:
+        root = pathlib.Path(__file__).resolve().parents[1]  # src/repro
+    root = pathlib.Path(root)
+    findings: List[Finding] = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        parts = path.relative_to(root).parts
+        if parts and parts[0] in _SKIP_DIRS:
+            continue
+        if path.name == "__main__.py":
+            continue
+        findings.extend(_lint_module(path, rel))
+    return findings

@@ -363,9 +363,14 @@ def run_orthogonal(X: Tree, key, chan, eta) -> Tree:
     link_std = chan.awgn_sigma / gain
     mean_m_std = float(np.sqrt(np.mean(link_std ** 2) / (N - 1)))
 
-    keys = _leaf_keys(key, X)
-    k1 = jax.tree_util.tree_map(lambda k: jax.random.split(k)[0], keys)
-    k2 = jax.tree_util.tree_map(lambda k: jax.random.split(k)[1], keys)
+    # one split per leaf key, both halves sliced from the SAME pair —
+    # splitting the key twice (once per half) derives duplicate lineage
+    # from one parent, which the key-discipline checker (repro.analysis)
+    # rightly flags as reuse; split() is deterministic, so this form
+    # realizes bitwise-identical streams to the old double-split
+    pairs = jax.tree_util.tree_map(jax.random.split, _leaf_keys(key, X))
+    k1 = jax.tree_util.tree_map(lambda p: p[0], pairs)
+    k2 = jax.tree_util.tree_map(lambda p: p[1], pairs)
     n = jax.tree_util.tree_map(
         lambda k, x: inv_gain.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
         * jax.random.normal(k, x.shape, jnp.float32), k1, X)

@@ -311,26 +311,35 @@ class ChunkRunner:
         any count above 1 is a retrace (obs.retrace_guard sums these)."""
         return {k: fn._cache_size() for k, fn in self._cache.items()}
 
-    def run(self, carry: TrajCarry, k: int) -> Tuple[TrajCarry, Any]:
+    def program(self, k: int) -> Callable:
+        """The un-jitted k-round chunk program ``carry -> (carry', ys)`` —
+        scan over the body plus any attached chunk_epilogue, exactly what
+        ``run`` wraps in ``jax.jit(..., donate_argnums=(0,))``. Exposed so
+        repro.analysis traces/compiles the SAME program the driver ships
+        rather than a reconstruction that could drift."""
         k = int(k)
         if k < 1:
             raise ValueError(f"chunk length must be >= 1, got {k}")
+        body = self._body
+        # telemetry (or any body wrapper) may attach a chunk_epilogue:
+        # a (carry, stacked_ys) -> (carry, stacked_ys) transform fused
+        # into the SAME compiled program after the scan — one
+        # vectorized pass over the chunk's stacked outputs instead of
+        # k per-round op clusters (see _maybe_instrument)
+        post = getattr(body, "chunk_epilogue", None)
+
+        def scan_k(c):
+            c, ys = jax.lax.scan(lambda cc, _: body(cc), c, None,
+                                 length=k)
+            return (c, ys) if post is None else post(c, ys)
+
+        return scan_k
+
+    def run(self, carry: TrajCarry, k: int) -> Tuple[TrajCarry, Any]:
+        k = int(k)
         fn = self._cache.get(k)
         if fn is None:
-            body = self._body
-            # telemetry (or any body wrapper) may attach a chunk_epilogue:
-            # a (carry, stacked_ys) -> (carry, stacked_ys) transform fused
-            # into the SAME compiled program after the scan — one
-            # vectorized pass over the chunk's stacked outputs instead of
-            # k per-round op clusters (see _maybe_instrument)
-            post = getattr(body, "chunk_epilogue", None)
-
-            def scan_k(c):
-                c, ys = jax.lax.scan(lambda cc, _: body(cc), c, None,
-                                     length=k)
-                return (c, ys) if post is None else post(c, ys)
-
-            fn = jax.jit(scan_k,
+            fn = jax.jit(self.program(k),
                          donate_argnums=(0,) if self._donate else ())
             self._cache[k] = fn
         return fn(carry)

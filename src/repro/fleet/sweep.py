@@ -125,11 +125,15 @@ def _setup_fleet_task(fleet: FleetEngine, seed: int):
     return cfg, next_batch, full_batch, init_fleet_params
 
 
-def run_point(grid: ScenarioGrid, point: Dict, seed: int = 0) -> Dict:
+def run_point(grid: ScenarioGrid, point: Dict, seed: int = 0,
+              transfer_guard: bool = True) -> Dict:
     """One grid cell: R replicates batched through one compiled fleet round.
     Returns the cell's row — settings, the cell's own seed, the RESOLVED
     protocol + scenario configuration (so a row is re-runnable without the
-    grid object), and across-replicate aggregates."""
+    grid object), and across-replicate aggregates. ``transfer_guard``
+    runs the timed loop under ``obs.no_implicit_transfers`` — the cell
+    timing is the sweep's PRODUCT, so an implicit per-round host transfer
+    silently corrupting ``us_per_round`` must fail loudly instead."""
     proto = P.ProtocolConfig(
         scheme="dwfl", n_workers=point["n_workers"], gamma=grid.gamma,
         eta=grid.eta, clip=grid.clip, p_dbm=point["p_dbm"], seed=seed,
@@ -157,8 +161,12 @@ def run_point(grid: ScenarioGrid, point: Dict, seed: int = 0) -> Dict:
     t0 = time.perf_counter()
     for _ in range(grid.steps):
         key, rk = jax.random.split(key)
-        states, wp, metrics, chans, Ws = fleet_round(rk, states, wp,
-                                                     next_batch())
+        # batch assembly (host NumPy -> device stack) stays OUTSIDE the
+        # guard; the guarded dispatch must touch device data only
+        batch = next_batch()
+        with obs.no_implicit_transfers(transfer_guard):
+            states, wp, metrics, chans, Ws = fleet_round(rk, states, wp,
+                                                         batch)
         chan_log.append(chans)
         w_log.append(Ws)
     jax.tree_util.tree_leaves(wp)[0].block_until_ready()
@@ -189,7 +197,8 @@ def run_point(grid: ScenarioGrid, point: Dict, seed: int = 0) -> Dict:
 
 def run_grid(grid: ScenarioGrid, seed: Optional[int] = None,
              json_path: Optional[str] = None, verbose: bool = False,
-             runlog: Optional[obs.RunLog] = None) -> Dict:
+             runlog: Optional[obs.RunLog] = None,
+             transfer_guard: bool = True) -> Dict:
     """Sweep every cell; returns {"grid": settings, "rows": [cell rows]}
     and optionally writes it as JSON. Each cell runs under its OWN
     derived seed (``cell_seed(base, point)``); ``runlog`` (repro.obs)
@@ -197,7 +206,8 @@ def run_grid(grid: ScenarioGrid, seed: Optional[int] = None,
     base = grid.seed if seed is None else seed
     rows: List[Dict] = []
     for point in grid.points():
-        row = run_point(grid, point, seed=cell_seed(base, point))
+        row = run_point(grid, point, seed=cell_seed(base, point),
+                        transfer_guard=transfer_guard)
         rows.append(row)
         if runlog is not None:
             runlog.event("cell", **{k: v for k, v in row.items()
@@ -229,6 +239,9 @@ def main(argv=None):
     ap.add_argument("--replicates", type=int, default=8)
     ap.add_argument("--steps", type=int, default=40)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-transfer-guard", action="store_true",
+                    help="disable jax.transfer_guard('disallow') around "
+                         "the timed per-cell loops")
     ap.add_argument("--json", default=None)
     ap.add_argument("--runlog-dir", default=None,
                     help="open a structured run log under this directory "
@@ -246,7 +259,8 @@ def main(argv=None):
                                        config=asdict(grid), seed=args.seed,
                                        argv=argv)
         obs.console(f"[sweep] run log -> {runlog.dir}")
-    run_grid(grid, json_path=args.json, verbose=True, runlog=runlog)
+    run_grid(grid, json_path=args.json, verbose=True, runlog=runlog,
+             transfer_guard=not args.no_transfer_guard)
     if runlog is not None:
         runlog.close("ok", cells=grid.size())
 

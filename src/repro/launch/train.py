@@ -100,6 +100,11 @@ def main(argv=None):
     ap.add_argument("--no-scan", action="store_true",
                     help="legacy driver: one jitted dispatch per round, "
                          "host NumPy batch assembly")
+    ap.add_argument("--no-transfer-guard", action="store_true",
+                    help="disable jax.transfer_guard('disallow') around "
+                         "the hot loop (the guard rejects IMPLICIT host<->"
+                         "device transfers per dispatch; explicit "
+                         "device_put/device_get stay allowed)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--checkpoint", default=None)
@@ -342,7 +347,12 @@ def main(argv=None):
         t = 0
         for n, do_eval in TJ.plan_chunks(args.steps + 1, chunk,
                                          args.eval_every):
-            carry, out = runner.run(carry, n)
+            # the chunk dispatch is the hot path: everything it touches is
+            # device-resident by construction, and the transfer guard
+            # (repro.obs) makes any regression — a host batch smuggled in,
+            # an implicit readback — fail loudly at the call site
+            with obs.no_implicit_transfers(not args.no_transfer_guard):
+                carry, out = runner.run(carry, n)
             t += n
             if "chan" in out:
                 chan_chunks.append(out["chan"])
@@ -415,21 +425,31 @@ def main(argv=None):
                       lambda: P.make_train_step(cfg, proto))
             step = jax.jit(mk(), donate_argnums=0)
 
+        # legacy loop: host NumPy batches are uploaded EXPLICITLY
+        # (jax.device_put) so the guarded dispatches stay free of implicit
+        # transfers — the guard then catches any new host round-trip
+        guard_on = not args.no_transfer_guard
         for t in range(args.steps + 1):
             key, sk = jax.random.split(key)
             if fleet is not None:
-                net_state, wp, metrics, chan_t, W_t = fleet_round(
-                    sk, net_state, wp, next_batch())
+                batch = next_batch()
+                with obs.no_implicit_transfers(guard_on):
+                    net_state, wp, metrics, chan_t, W_t = fleet_round(
+                        sk, net_state, wp, batch)
                 chan_log.append(chan_t)
                 w_log.append(W_t)
             elif sim is not None:
                 sk, ck = jax.random.split(sk)
-                net_state, chan_t, mask_t, W_t = net_round(ck, net_state)
+                batch = jax.device_put(batcher.next())
+                with obs.no_implicit_transfers(guard_on):
+                    net_state, chan_t, mask_t, W_t = net_round(ck, net_state)
+                    wp, metrics = step(wp, batch, sk, chan_t, W_t)
                 chan_log.append(chan_t)
                 w_log.append(W_t)
-                wp, metrics = step(wp, batcher.next(), sk, chan_t, W_t)
             else:
-                wp, metrics = step(wp, batcher.next(), sk)
+                batch = jax.device_put(batcher.next())
+                with obs.no_implicit_transfers(guard_on):
+                    wp, metrics = step(wp, batch, sk)
             if t % args.eval_every == 0:
                 log_eval(t, metrics, wp)
 

@@ -15,7 +15,8 @@ Two halves (DESIGN.md §13):
 ``obs.guard.retrace_guard`` is the reusable zero-retrace checker the
 kernel benchmarks and CI smokes assert with.
 """
-from repro.obs.guard import RetraceError, retrace_guard
+from repro.obs.guard import (RetraceError, no_implicit_transfers,
+                             retrace_guard)
 from repro.obs.runlog import (EpsilonBudgetWatchdog, RetraceWatchdog, RunLog,
                               config_hash, console, git_sha)
 from repro.obs.telemetry import (TelemetrySpec, accumulate_eps,
@@ -26,5 +27,6 @@ __all__ = [
     "EpsilonBudgetWatchdog", "RetraceError", "RetraceWatchdog", "RunLog",
     "TelemetrySpec", "accumulate_eps", "channel_scalars",
     "config_hash", "console", "consensus_distance", "epsilon_round",
-    "git_sha", "init_eps_moments", "retrace_guard",
+    "git_sha", "init_eps_moments", "no_implicit_transfers",
+    "retrace_guard",
 ]

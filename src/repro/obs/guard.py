@@ -28,7 +28,40 @@ host runlog's recompile-after-warmup watchdog consumes it.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Callable, Optional
+
+
+@contextlib.contextmanager
+def no_implicit_transfers(enabled: bool = True):
+    """``jax.transfer_guard("disallow")`` as an opt-out hot-loop guard.
+
+    The runtime half of the host-sync invariant (repro.analysis checks
+    the static half): inside the block, any IMPLICIT host↔device
+    transfer — a NumPy array silently uploaded per dispatch, a traced
+    value pulled back by ``float()``/``np.asarray`` — raises immediately
+    at the offending call site instead of showing up months later as a
+    mysterious per-round stall. Explicit ``jax.device_put`` /
+    ``jax.device_get`` stay allowed, which is exactly the discipline the
+    drivers follow: pin inputs once (or per batch, explicitly), keep the
+    loop on device, read results back explicitly at eval/log boundaries.
+
+    ``enabled=False`` is the opt-out (train.py/sweep.py
+    ``--no-transfer-guard``) for debugging sessions where ad-hoc host
+    reads inside the loop are the point.
+
+    Only the HOST directions are guarded. Device-to-device transfers stay
+    allowed because they are not host syncs: on a sharded run the first
+    dispatch reshards the replicated carry onto the model mesh, which the
+    blanket ``jax.transfer_guard`` would reject.
+    """
+    if not enabled:
+        yield
+        return
+    import jax
+    with jax.transfer_guard_host_to_device("disallow"), \
+            jax.transfer_guard_device_to_host("disallow"):
+        yield
 
 
 class RetraceError(AssertionError):

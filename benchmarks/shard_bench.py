@@ -5,7 +5,7 @@ alongside the code.
     PYTHONPATH=src python -m benchmarks.shard_bench [--smoke]
 
 One case per shard count in {1, 2, 4}: S=1 is the production UNSHARDED
-fused flat step (the baseline), S>1 the shard_map round on an
+fused flat step (the baseline), S>1 the gather-free shard_map round on an
 S-device model mesh (this module forces
 ``--xla_force_host_platform_device_count=4`` when no device count was
 requested, so the mesh is real even on a laptop). Every sharded case is
@@ -13,11 +13,22 @@ cross-checked bitwise against the unsharded round on the canonical
 columns before timing — a throughput number for a wrong round is
 worthless.
 
-Honest-numbers caveat recorded in the JSON: on host-platform (fake) CPU
-devices all shards share the same silicon, so sharding measures the
-partition + collective OVERHEAD, not a speedup — the win on a real pod is
-capacity (each device holds d/S columns), which is exactly what the
-per-shard peak-buffer-bytes column shows.
+What the columns mean:
+
+* ``speedup_vs_s1`` — the contention-robust estimate: each pair times ONE
+  S=1 call and ONE S=S call back to back (alternating leg order) and the
+  speedup is the median of the per-pair t1/tS ratios. Single-call samples
+  + median-of-ratios survive a busy shared CPU where per-side means or
+  minima do not (see benchmarks.obs_bench for the full rationale). The
+  sharded round runs the grad pass on W/S workers per device — on a
+  single-socket host the host-platform devices timeshare one core, yet
+  the round still WINS because the worker-split pass eliminates the
+  S-fold redundant compute the old gather design paid.
+* ``peak_bytes_per_device`` — XLA's compiled memory analysis
+  (args + outputs + temps − donation aliasing): the live-set contract.
+  Falls with S — the persistent buffer is width/S columns per device and
+  the grad pass materializes only the [ceil(W/S), width] row block plus
+  chunk-bounded transients, never a full [W, width] replica.
 """
 from __future__ import annotations
 
@@ -35,6 +46,7 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import argparse
 import json
 import pathlib
+import statistics
 import time
 
 import jax
@@ -54,7 +66,6 @@ BATCH = 16
 
 def _task(hidden: int, seed: int = 0):
     from repro.configs.registry import get_arch
-    from repro.core import exchange as X
     from repro.core import protocol as P
     import repro.models.mlp as mlp
 
@@ -75,15 +86,69 @@ def _task(hidden: int, seed: int = 0):
     return cfg, proto, wp, batch
 
 
-def _time_rounds(step, flat, batch, n_iter: int):
-    key = jax.random.PRNGKey(7)
-    flat, _ = step(flat, batch, key)                       # compile
-    jax.block_until_ready(flat)
+def _peak_bytes(step, flat, batch):
+    """Per-device peak live bytes of the compiled round: what XLA's
+    memory analysis can see statically — argument + output + temp buffers
+    minus donation aliasing. None when the backend doesn't report it."""
+    try:
+        stats = step.lower(flat, batch,
+                           jax.random.PRNGKey(0)).compile().memory_analysis()
+        return int(stats.argument_size_in_bytes + stats.output_size_in_bytes
+                   + stats.temp_size_in_bytes - stats.alias_size_in_bytes)
+    except Exception:
+        return None
+
+
+def _one(step, flat, batch, key):
+    """One timed single-round call (the sample unit of the estimator)."""
     t0 = time.perf_counter()
-    for i in range(n_iter):
-        flat, _ = step(flat, batch, jax.random.fold_in(key, i))
-    jax.block_until_ready(flat)
-    return (time.perf_counter() - t0) / n_iter * 1e6        # us/round
+    out, _ = step(flat, batch, key)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def _paired_speedup(base_call, shard_call, target_s: float = 6.0):
+    """(t_base_best, t_shard_best, speedup) with the obs_bench discipline:
+    single-call samples, alternating leg order, median of per-pair
+    t_base/t_shard ratios — unbiased under background-load contamination
+    on a shared 1-core CI host (one burst wrecks one pair; the median
+    discards it)."""
+    jax.block_until_ready(base_call(0))      # warmup (already compiled)
+    jax.block_until_ready(shard_call(0))
+    t0 = time.perf_counter()
+    base_call(1)
+    once = max(time.perf_counter() - t0, 1e-4)
+    n = max(9, min(31, int(target_s / once)))
+
+    def sample(call, i):
+        t0 = time.perf_counter()
+        jax.block_until_ready(call(i))
+        return time.perf_counter() - t0
+
+    ratios, best_b, best_s = [], float("inf"), float("inf")
+    for i in range(n):
+        if i % 2 == 0:
+            t_b, t_s = sample(base_call, i), sample(shard_call, i)
+        else:
+            t_s, t_b = sample(shard_call, i), sample(base_call, i)
+        ratios.append(t_b / t_s)
+        best_b, best_s = min(best_b, t_b), min(best_s, t_s)
+    return best_b, best_s, statistics.median(ratios)
+
+
+def _solo_best(call, target_s: float = 3.0):
+    """Best single-call sample for a leg with no pairing partner (S=1's
+    own us_per_round column; the speedup gate never reads this)."""
+    jax.block_until_ready(call(0))
+    t0 = time.perf_counter()
+    jax.block_until_ready(call(1))
+    once = max(time.perf_counter() - t0, 1e-4)
+    best = float("inf")
+    for i in range(max(5, min(15, int(target_s / once)))):
+        t0 = time.perf_counter()
+        jax.block_until_ready(call(i))
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def main(smoke: bool = False):
@@ -94,65 +159,79 @@ def main(smoke: bool = False):
     from repro.shard import make_sharded_flat_train_step
 
     hidden = 64 if smoke else 512
-    n_iter = 5 if smoke else 30
     cfg, proto, wp, batch = _task(hidden)
 
     spec0 = X.make_flat_spec(wp)
     flat0 = spec0.flatten(wp)
     base = jax.jit(P.make_flat_train_step(cfg, proto, spec0.unravel_row))
+    key = jax.random.PRNGKey(7)
+    base_call = lambda i: base(flat0, batch, jax.random.fold_in(key, i))[0]
 
     # reference round for the bitwise cross-check (fixed key)
     ref, _ = base(flat0, batch, jax.random.PRNGKey(3))
     ref = np.asarray(ref)
 
-    cases, rows = [], []
+    t1_best = _solo_best(base_call)
+    peak1 = _peak_bytes(base, flat0, batch)
+    cases = [{
+        "shards": 1,
+        "kind": "unsharded",
+        "d": spec0.d,
+        "width": spec0.width,
+        "buffer_bytes_per_device": 4 * N_WORKERS * spec0.width,
+        "peak_bytes_per_device": peak1,
+        "us_per_round": round(t1_best * 1e6, 1),
+        "rounds_per_s": round(1.0 / t1_best, 2),
+        "speedup_vs_s1": 1.0,
+    }]
+    rows = [f"shard/S1,{t1_best * 1e6:.1f},{1.0:.3f}"]
+
     for S in SHARDS:
         if S == 1:
-            step, flat, spec = base, flat0, spec0
-            kind = "unsharded"
-        else:
-            if jax.device_count() < S:
-                rows.append(f"shard/S{S},skipped,0")
-                continue
-            spec = X.make_flat_spec(wp, n_shards=S)
-            mesh = mesh_lib.make_shard_mesh(S)
-            step = jax.jit(make_sharded_flat_train_step(cfg, proto, spec,
-                                                        mesh=mesh))
-            flat = jax.device_put(
-                spec.flatten(wp),
-                shardings_lib.flat_buffer_sharding(spec, mesh))
-            kind = f"{S}-device shard_map"
-            got, _ = step(flat, batch, jax.random.PRNGKey(3))
-            got = np.asarray(spec.unpad(got))
-            if not np.array_equal(got, ref):
-                raise AssertionError(
-                    f"S={S} sharded round diverged from the unsharded one "
-                    f"(max |diff| {np.abs(got - ref).max()})")
-        us = _time_rounds(step, flat, batch, n_iter)
-        case = {
+            continue
+        if jax.device_count() < S:
+            rows.append(f"shard/S{S},skipped,0")
+            continue
+        spec = X.make_flat_spec(wp, n_shards=S)
+        mesh = mesh_lib.make_shard_mesh(S)
+        step = jax.jit(make_sharded_flat_train_step(cfg, proto, spec,
+                                                    mesh=mesh))
+        flat = jax.device_put(
+            spec.flatten(wp),
+            shardings_lib.flat_buffer_sharding(spec, mesh))
+        got, _ = step(flat, batch, jax.random.PRNGKey(3))
+        got = np.asarray(spec.unpad(got))
+        if not np.array_equal(got, ref):
+            raise AssertionError(
+                f"S={S} sharded round diverged from the unsharded one "
+                f"(max |diff| {np.abs(got - ref).max()})")
+        shard_call = lambda i: step(flat, batch,
+                                    jax.random.fold_in(key, i))[0]
+        t_b, t_s, speedup = _paired_speedup(base_call, shard_call)
+        cases.append({
             "shards": S,
-            "kind": kind,
+            "kind": f"{S}-device shard_map (gather-free)",
             "d": spec0.d,
             "width": spec.width,
             "buffer_bytes_per_device": 4 * N_WORKERS * spec.width // S,
-            "us_per_round": round(us, 1),
-            "rounds_per_s": round(1e6 / us, 2),
-        }
-        cases.append(case)
-        rows.append(f"shard/S{S},{us:.1f},{case['rounds_per_s']}")
+            "peak_bytes_per_device": _peak_bytes(step, flat, batch),
+            "us_per_round": round(t_s * 1e6, 1),
+            "rounds_per_s": round(1.0 / t_s, 2),
+            "speedup_vs_s1": round(speedup, 3),
+        })
+        rows.append(f"shard/S{S},{t_s * 1e6:.1f},{speedup:.3f}")
 
     from benchmarks.common import provenance
     report = {
         "bench": "shard",
         "workers": N_WORKERS,
         "hidden": hidden,
-        "iters": n_iter,
         "devices": jax.device_count(),
         "smoke": smoke,
         "provenance": provenance(smoke),
-        "note": ("host-platform CPU devices share one socket: sharded "
-                 "rows measure partition+collective overhead, the "
-                 "capacity win is buffer_bytes_per_device"),
+        "estimator": ("speedup_vs_s1 = median over alternating-order "
+                      "paired single-call samples of t_S1/t_S; "
+                      "us_per_round = best sample"),
         "cases": cases,
     }
     out = OUT_SMOKE if smoke else OUT

@@ -13,6 +13,9 @@ driver programs (registry.py), no execution required:
 * dtype-discipline (dtypes.py)   — no f64/complex128 in kernel paths
 * host-sync       (hostsync.py)  — no callbacks/host round-trips inside
                                    compiled programs (scan bodies!)
+* gather-free     (gather.py)    — no full-width all_gather in model-
+                                   sharded programs: the ~(W·d)/S peak-
+                                   memory contract of the sharded round
 
 plus the AST source lint (sourcelint.py). ``python -m repro.analysis``
 runs everything over the registry and fails on ERROR findings —
@@ -23,14 +26,16 @@ from repro.analysis.donation import aval_signature, check_donation
 from repro.analysis.dtypes import check_dtype_discipline
 from repro.analysis.findings import (Finding, Severity, report_json,
                                      summarize)
+from repro.analysis.gather import check_gather_free
 from repro.analysis.hostsync import check_host_sync
 from repro.analysis.keys import check_key_discipline
-from repro.analysis.registry import PROGRAMS, BuiltProgram, build_programs
+from repro.analysis.registry import (PROGRAMS, BuiltProgram,
+                                     available_programs, build_programs)
 from repro.analysis.sourcelint import lint_source
 
 
 def analyze_program(prog: BuiltProgram):
-    """All five jaxpr/HLO checker families over one registry program."""
+    """All six jaxpr/HLO checker families over one registry program."""
     findings = []
     findings += check_key_discipline(prog.closed_jaxpr, prog.name)
     findings += check_donation(prog.hlo_text, prog.donated, prog.name)
@@ -38,13 +43,17 @@ def analyze_program(prog: BuiltProgram):
                                    prog.dynamic, prog.name)
     findings += check_dtype_discipline(prog.closed_jaxpr, prog.name)
     findings += check_host_sync(prog.closed_jaxpr, prog.name)
+    findings += check_gather_free(prog.closed_jaxpr, prog.name,
+                                  sharded=prog.sharded,
+                                  flat_width=prog.flat_width,
+                                  shard_width=prog.shard_width)
     return findings
 
 
 __all__ = [
     "Finding", "Severity", "summarize", "report_json",
     "check_key_discipline", "check_donation", "check_weak_closure",
-    "check_dtype_discipline", "check_host_sync", "lint_source",
-    "aval_signature", "PROGRAMS", "BuiltProgram", "build_programs",
-    "analyze_program",
+    "check_dtype_discipline", "check_host_sync", "check_gather_free",
+    "lint_source", "aval_signature", "PROGRAMS", "BuiltProgram",
+    "available_programs", "build_programs", "analyze_program",
 ]

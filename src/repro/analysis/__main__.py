@@ -15,8 +15,9 @@ import pathlib
 import sys
 import time
 
-from repro.analysis import (Severity, analyze_program, build_programs,
-                            lint_source, report_json, summarize)
+from repro.analysis import (Severity, analyze_program, available_programs,
+                            build_programs, lint_source, report_json,
+                            summarize)
 from repro.analysis.registry import PROGRAMS
 
 
@@ -41,8 +42,13 @@ def main(argv=None) -> int:
     t0 = time.time()
     findings, programs = [], []
     if not args.source_only:
-        names = (args.programs.split(",") if args.programs
-                 else list(PROGRAMS))
+        if args.programs:
+            names = args.programs.split(",")
+        else:
+            names = available_programs()
+            for skipped in set(PROGRAMS) - set(names):
+                print(f"[analysis] {skipped}: skipped (environment "
+                      f"precondition not met — e.g. too few devices)")
         for name in names:
             t1 = time.time()
             prog, = build_programs([name])   # trace + donated compile

@@ -1,0 +1,83 @@
+"""gather-free checker: no full-width all_gather in sharded programs.
+
+The sharded round's memory contract (repro.shard.round, DESIGN.md §11)
+is that NO device ever materializes the full [W, padded_width] flat
+buffer: the persistent slab is width/S columns and the grad pass obtains
+full ROWS for its worker block only, via chunk-segmented ``all_to_all``
+collectives. The single construct that silently breaks the contract —
+and reintroduces both the S-fold redundant grad compute and the O(W·d)
+per-device peak this repo's first sharded round paid — is an
+``all_gather`` along the COLUMN axis that widens a shard_width operand
+back to the full padded width.
+
+The checker walks every equation of the traced program (shard_map bodies
+included — walk.iter_eqns descends) and ERRORs on any ``all_gather``
+whose output last axis is the full physical buffer width while its input
+last axis is the per-shard width: exactly the gather-compute-slice
+pattern. Gathers of per-worker METRIC vectors (the [W]-sized loss/gnorm
+all_gathers, whose last axis is worker-count-sized) and the chunk
+``all_to_all`` pair are the sanctioned collectives and never match.
+
+Unsharded programs have no contract to enforce — the checker emits
+nothing for them (reported as an INFO so the report shows the check ran).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.walk import iter_eqns
+
+CHECKER = "gather-free"
+
+
+def _last_dim(var) -> int:
+    shape = getattr(getattr(var, "aval", None), "shape", None)
+    if not shape:
+        return 0
+    try:
+        return int(shape[-1])
+    except TypeError:       # symbolic dims — never the flat buffer here
+        return 0
+
+
+def check_gather_free(closed_jaxpr, program: str, *, sharded: bool,
+                      flat_width: int, shard_width: int) -> List[Finding]:
+    """ERROR on every full-width column all_gather in a sharded program.
+
+    ``flat_width`` is the physical padded width of the flat buffer
+    (layout.padded_width), ``shard_width`` the per-device column count;
+    both 0 / ``sharded=False`` for unsharded programs (no-op)."""
+    if not sharded or flat_width <= 0:
+        return [Finding(
+            CHECKER, Severity.INFO, program,
+            "program is not model-sharded; gather-free contract not "
+            "applicable")]
+    findings: List[Finding] = []
+    n_gathers = 0
+    for path, eqn in iter_eqns(closed_jaxpr):
+        if eqn.primitive.name != "all_gather":
+            continue
+        n_gathers += 1
+        d_in = max((_last_dim(v) for v in eqn.invars), default=0)
+        d_out = max((_last_dim(v) for v in eqn.outvars), default=0)
+        if d_out == flat_width and d_in < d_out:
+            findings.append(Finding(
+                CHECKER, Severity.ERROR, program,
+                f"full-width all_gather: widens last axis {d_in} -> "
+                f"{d_out} (= padded buffer width), materializing a "
+                f"[*, {d_out}] replica on every shard — the "
+                f"gather-compute-slice pattern the gather-free grad pass "
+                f"exists to eliminate",
+                where=path or "<top>",
+                detail={"in_last_dim": d_in, "out_last_dim": d_out,
+                        "flat_width": flat_width,
+                        "shard_width": shard_width}))
+    if not findings:
+        findings.append(Finding(
+            CHECKER, Severity.INFO, program,
+            f"no full-width all_gather ({n_gathers} benign all_gather "
+            f"eqn(s) — metric vectors)",
+            detail={"all_gather_eqns": n_gathers,
+                    "flat_width": flat_width}))
+    return findings

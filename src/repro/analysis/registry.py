@@ -12,9 +12,11 @@ produces BOTH static views the checkers need:
   uint32 keys, exactly as the driver runs it (donation.py).
 
 The catalogue covers every shipped path: static/dynamic/fleet ×
-tree/flat, telemetry+ε in-carry, and the model-sharded flat round
-(S=2, logical sharding — device-count independent, so CI on one CPU
-checks the same program structure a real mesh runs).
+tree/flat, telemetry+ε in-carry, and the model-sharded flat round twice
+— S=2 LOGICAL sharding (device-count independent) and the S=2 MESH
+program (shard_map + the gather-free collectives; needs >= 2 devices,
+so it drops out of ``available_programs()`` on a bare 1-device runtime
+and CI's lint job forces a 4-device host platform).
 
 Programs build lazily and independently: ``build_programs(["static-tree"])``
 traces/compiles one program, the CLI default builds all of them (<60 s
@@ -46,6 +48,9 @@ class BuiltProgram:
     closed_jaxpr: object   # typed-key trace of the shipped chunk program
     hlo_text: str          # optimized HLO of the donated raw-key compile
     donated: List          # [(carry leaf path, HLO signature)]
+    sharded: bool = False  # model-sharded: gather-free contract applies
+    flat_width: int = 0    # physical padded buffer width (sharded only)
+    shard_width: int = 0   # per-device column count (sharded only)
 
 
 @functools.lru_cache(maxsize=1)
@@ -68,7 +73,7 @@ def _proto(**kw):
 
 
 def _finish(name: str, body: Callable, wp, net=None, eps=None,
-            dynamic: bool = False) -> BuiltProgram:
+            dynamic: bool = False, spec=None) -> BuiltProgram:
     from repro.core import trajectory as TJ
     program = TJ.ChunkRunner(body).program(CHUNK)
     typed = TJ.TrajCarry(jax.random.key(_SEED), wp, net, eps)
@@ -76,14 +81,29 @@ def _finish(name: str, body: Callable, wp, net=None, eps=None,
     raw = TJ.TrajCarry(jax.random.PRNGKey(_SEED), wp, net, eps)
     hlo = (jax.jit(program, donate_argnums=(0,))
            .lower(raw).compile().as_text())
+    def _sig(leaf):
+        # SPMD-compiled entry layouts carry PER-DEVICE shapes: a leaf
+        # committed to a mesh must be matched by its shard shape, not the
+        # global one (single-device shardings return the shape unchanged)
+        shape = leaf.shape
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None and hasattr(sharding, "shard_shape"):
+            shape = sharding.shard_shape(leaf.shape)
+        return donation_lib.aval_signature(leaf.dtype, shape)
+
     leaves = jax.tree_util.tree_flatten_with_path(raw)[0]
-    donated = [(f"carry{jax.tree_util.keystr(path)}",
-                donation_lib.aval_signature(leaf.dtype, leaf.shape))
+    donated = [(f"carry{jax.tree_util.keystr(path)}", _sig(leaf))
                for path, leaf in leaves]
-    return BuiltProgram(name, dynamic, N_WORKERS, closed, hlo, donated)
+    sharded = spec is not None and getattr(spec, "layout", None) is not None
+    return BuiltProgram(
+        name, dynamic, N_WORKERS, closed, hlo, donated,
+        sharded=sharded,
+        flat_width=spec.layout.padded_width if sharded else 0,
+        shard_width=spec.layout.shard_width if sharded else 0)
 
 
-def _static(name: str, flat: bool, n_shards: int = 1) -> BuiltProgram:
+def _static(name: str, flat: bool, n_shards: int = 1,
+            mesh: bool = False) -> BuiltProgram:
     from repro.core import exchange as X
     from repro.core import protocol as P
     from repro.core import trajectory as TJ
@@ -91,11 +111,21 @@ def _static(name: str, flat: bool, n_shards: int = 1) -> BuiltProgram:
     proto = _proto(flat_buffer=flat)
     wp = P.init_worker_params(jax.random.PRNGKey(_SEED), cfg, N_WORKERS)
     spec = None
+    shard_mesh = None
     if flat:
         spec = X.make_flat_spec(wp, n_shards=n_shards)
         wp = spec.flatten(wp)
-    body = TJ.make_round_body(cfg, proto, store, spec=spec)
-    return _finish(name, body, wp)
+    if mesh:
+        from repro.launch import mesh as mesh_lib
+        from repro.launch import shardings as shardings_lib
+        shard_mesh = mesh_lib.make_shard_mesh(n_shards)
+        # place the buffer exactly as the driver does — donation aliasing
+        # only holds when the compiled input sharding matches the output's
+        wp = jax.device_put(
+            wp, shardings_lib.flat_buffer_sharding(spec, shard_mesh))
+    body = TJ.make_round_body(cfg, proto, store, spec=spec,
+                              shard_mesh=shard_mesh)
+    return _finish(name, body, wp, spec=spec if mesh else None)
 
 
 def _dynamic(name: str, flat: bool, telemetry: bool = False) -> BuiltProgram:
@@ -153,13 +183,31 @@ PROGRAMS: Dict[str, Callable[[], BuiltProgram]] = {
     "fleet-flat": lambda: _fleet("fleet-flat", flat=True),
     "shard-flat-s2": lambda: _static("shard-flat-s2", flat=True,
                                      n_shards=2),
+    # the REAL mesh program (shard_map + collectives): the one the
+    # gather-free checker enforces the memory contract on. Needs >= 2
+    # devices (CI lint exports XLA_FLAGS=--xla_force_host_platform_
+    # device_count=4; see available_programs).
+    "shard-flat-s2-mesh": lambda: _static("shard-flat-s2-mesh", flat=True,
+                                          n_shards=2, mesh=True),
 }
+
+# programs with an environment precondition: name -> () -> bool
+_REQUIRES: Dict[str, Callable[[], bool]] = {
+    "shard-flat-s2-mesh": lambda: jax.device_count() >= 2,
+}
+
+
+def available_programs() -> List[str]:
+    """Registry names buildable in THIS environment (the CLI default):
+    mesh programs drop out when the runtime has too few devices rather
+    than failing the whole lint."""
+    return [n for n in PROGRAMS if _REQUIRES.get(n, lambda: True)()]
 
 
 def build_programs(names: Optional[Sequence[str]] = None
                    ) -> List[BuiltProgram]:
     if names is None:
-        names = list(PROGRAMS)
+        names = available_programs()
     unknown = [n for n in names if n not in PROGRAMS]
     if unknown:
         raise KeyError(f"unknown program(s) {unknown}; "

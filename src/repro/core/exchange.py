@@ -495,9 +495,17 @@ class FlatSpec:
     ``unravel(flat)``: full worker-stacked tree (original dtypes) — only
     at eval/checkpoint time. ``unravel_row(v)``: ONE worker's (un-stacked)
     tree — inside the per-worker grad vmap of the flat train step.
+
+    ``max_chunk_cols`` (sharded specs) caps the column width of the
+    gather-free grad pass's transfer chunks (``chunk_plan`` —
+    repro.shard.layout.plan_chunks over this spec's leaf sizes): the
+    sharded round then moves at most ~W·max_chunk_cols buffer elements
+    per collective instead of a whole shard window. A pure data-movement
+    knob — every budget realizes the bitwise-identical round.
     """
 
-    def __init__(self, template: Tree, lead_axes: int = 1, layout=None):
+    def __init__(self, template: Tree, lead_axes: int = 1, layout=None,
+                 max_chunk_cols: Optional[int] = None):
         leaves, treedef = jax.tree_util.tree_flatten(template)
         self._treedef = treedef
         self._shapes = [tuple(l.shape) for l in leaves]
@@ -510,7 +518,13 @@ class FlatSpec:
         if layout is not None and layout.d != self.d:
             raise ValueError(f"layout is for d={layout.d}, template ravels "
                              f"to d={self.d}")
+        if max_chunk_cols is not None and layout is None:
+            raise ValueError("max_chunk_cols is a sharded-buffer knob — "
+                             "it requires a ShardLayout")
         self.layout = layout
+        self.max_chunk_cols = (None if max_chunk_cols is None
+                               else int(max_chunk_cols))
+        self._chunk_plan = None
 
     @property
     def width(self) -> int:
@@ -521,6 +535,32 @@ class FlatSpec:
     @property
     def n_shards(self) -> int:
         return 1 if self.layout is None else self.layout.n_shards
+
+    def leaf_sizes(self) -> list:
+        """Per-leaf flat sizes in ravel order (sum == d)."""
+        return list(self._sizes)
+
+    def leaf_offsets(self) -> list:
+        """Global column offset of each leaf in the canonical [0, d)
+        buffer (ravel order; the chunk plan's leaf boundaries)."""
+        out, off = [], 0
+        for n in self._sizes:
+            out.append(off)
+            off += n
+        return out
+
+    @property
+    def chunk_plan(self):
+        """The leaf x shard-window ChunkPlan of this spec (None for
+        unsharded specs) — the schedule the gather-free sharded grad pass
+        executes (repro.shard.round)."""
+        if self.layout is None:
+            return None
+        if self._chunk_plan is None:
+            from repro.shard.layout import plan_chunks
+            self._chunk_plan = plan_chunks(self.layout, self._sizes,
+                                           self.max_chunk_cols)
+        return self._chunk_plan
 
     def flatten(self, X: Tree) -> jnp.ndarray:
         leaves = jax.tree_util.tree_leaves(X)
@@ -555,27 +595,34 @@ class FlatSpec:
 
     def layout_meta(self) -> dict:
         """JSON-able layout record for checkpoint manifests."""
-        return {
+        meta = {
             "d": self.d,
             "lead_axes": self.lead_axes,
             "lead_shape": list(self.lead_shape),
             "n_shards": self.n_shards,
             "width": self.width,
         }
+        if self.layout is not None:
+            meta["chunk_plan"] = self.chunk_plan.to_meta()
+        return meta
 
 
 def make_flat_spec(template: Tree, lead_axes: int = 1, layout=None,
-                   n_shards: Optional[int] = None) -> FlatSpec:
+                   n_shards: Optional[int] = None,
+                   max_chunk_cols: Optional[int] = None) -> FlatSpec:
     """Build the FlatSpec for ``template``. Pass either a ready
     ``repro.shard.ShardLayout`` (``layout``) or just ``n_shards`` (> 1) to
     have the layout derived from the raveled width; the default is the
-    legacy unsharded exact-d buffer."""
+    legacy unsharded exact-d buffer. ``max_chunk_cols`` (sharded only)
+    bounds the gather-free grad pass's per-collective chunk width."""
     if n_shards is not None and n_shards > 1:
         if layout is not None:
             raise ValueError("pass layout OR n_shards, not both")
         from repro.shard.layout import ShardLayout
         layout = ShardLayout(FlatSpec(template, lead_axes).d, n_shards)
-    return FlatSpec(template, lead_axes, layout)
+    if layout is None:
+        max_chunk_cols = None
+    return FlatSpec(template, lead_axes, layout, max_chunk_cols)
 
 
 def flatten_worker_tree(X: Tree, lead_axes: int = 1) -> jnp.ndarray:

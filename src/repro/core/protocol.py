@@ -365,16 +365,22 @@ def make_dynamic_train_step(cfg: ModelConfig, proto: ProtocolConfig) -> Callable
 
 
 def _make_flat_local_pass(cfg: ModelConfig, proto: ProtocolConfig,
-                          unravel_row):
+                          unravel_row, remat: bool = False):
     """Per-worker clipped gradients ON THE FLAT BUFFER: each worker's loss
     is a function of its flat [d] row (autodiff carries the ravel — no
-    explicit per-round concatenate), and the L2 clip is one vector norm."""
+    explicit per-round concatenate), and the L2 clip is one vector norm.
+    ``remat`` wraps the per-worker value_and_grad target in
+    jax.checkpoint: activations are recomputed in the backward pass, so
+    the grad pass's live set stays ~O(params + one layer) per worker —
+    the knob the sharded round exposes for big models."""
     clip = proto.clip
 
     def local_grads(flat, batch):
         def one(fv, b):
-            loss, g = jax.value_and_grad(
-                lambda v: M.loss_fn(unravel_row(v), b, cfg))(fv)
+            target = lambda v: M.loss_fn(unravel_row(v), b, cfg)
+            if remat:
+                target = jax.checkpoint(target)
+            loss, g = jax.value_and_grad(target)(fv)
             g, gnorm = privacy.clip_gradient_tree(g, clip)
             return loss, g, gnorm
         return jax.vmap(one)(flat, batch)

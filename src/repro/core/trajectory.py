@@ -66,7 +66,8 @@ class TrajCarry(NamedTuple):
 
 def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
                     flat: bool = False, unravel_row=None, spec=None,
-                    shard_mesh=None, telemetry=None) -> Callable:
+                    shard_mesh=None, telemetry=None,
+                    remat: bool = False) -> Callable:
     """Build ``body(carry) -> (carry', out)`` — one full DWFL round.
 
     ``store`` is a repro.data.device store (sample/sample_fleet). Exactly
@@ -95,6 +96,10 @@ def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
     dynamic/fleet paths — [K, ...] / [K, R, ...] leaves after a K-round
     scan, one array per chunk instead of one Python list entry per round.
 
+    ``remat`` (sharded specs only) rematerializes each worker's forward
+    in the backward pass of the gather-free grad block — the big-model
+    knob; a no-op on unsharded paths.
+
     ``telemetry`` (obs.telemetry.TelemetrySpec) wraps the built body in
     pure read-only instrumentation: the enabled per-round scalars are
     packed into ``out["telemetry"]`` ([M] per round, [R, M] for the
@@ -113,7 +118,7 @@ def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
     if fleet is not None:
         step = fleet.make_fleet_step(cfg, mesh=shard_mesh if sharded else None,
                                      flat=flat, unravel_row=unravel_row,
-                                     spec=spec)
+                                     spec=spec, remat=remat)
         R = fleet.replicates
 
         def body(carry: TrajCarry):
@@ -133,7 +138,7 @@ def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
             from repro.shard.round import \
                 make_sharded_dynamic_flat_train_step
             step = make_sharded_dynamic_flat_train_step(
-                cfg, proto, spec, mesh=shard_mesh)
+                cfg, proto, spec, mesh=shard_mesh, remat=remat)
         else:
             step = (protocol_lib.make_dynamic_flat_train_step(
                         cfg, proto, unravel_row) if flat
@@ -153,7 +158,7 @@ def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
     if sharded:
         from repro.shard.round import make_sharded_flat_train_step
         step = make_sharded_flat_train_step(cfg, proto, spec,
-                                            mesh=shard_mesh)
+                                            mesh=shard_mesh, remat=remat)
     else:
         step = (protocol_lib.make_flat_train_step(cfg, proto, unravel_row)
                 if flat else protocol_lib.make_train_step(cfg, proto))

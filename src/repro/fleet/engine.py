@@ -140,15 +140,19 @@ class FleetEngine:
             lambda k: protocol_lib.init_worker_params(k, cfg, self.proto.n_workers)
         )(self.split_keys(key))
 
-    def init_flat_spec(self, key, cfg, n_shards: int = 1):
+    def init_flat_spec(self, key, cfg, n_shards: int = 1,
+                       max_chunk_cols=None):
         """Flat-buffer fleet params as ([R, W, width] f32 buffer,
         exchange.FlatSpec). Raveled ONCE here; ``n_shards`` > 1 attaches a
         model-axis ShardLayout (repro.shard) — the buffer is then padded
         to the layout's physical width and usable with the sharded fleet
-        step (2-D replicas×model mesh, or logically on one device)."""
+        step (2-D replicas×model mesh, or logically on one device).
+        ``max_chunk_cols`` caps the gather-free grad pass's per-collective
+        chunk width (spec.chunk_plan); ignored when unsharded."""
         wp = self.init_worker_params(key, cfg)
         spec = exchange_lib.make_flat_spec(wp, lead_axes=2,
-                                           n_shards=n_shards)
+                                           n_shards=n_shards,
+                                           max_chunk_cols=max_chunk_cols)
         return spec.flatten(wp), spec
 
     def init_flat_params(self, key, cfg):
@@ -158,7 +162,8 @@ class FleetEngine:
         return flat, spec.unravel, spec.unravel_row
 
     def make_fleet_step(self, cfg, mesh=None, axis: str = "replicas",
-                        flat: bool = False, unravel_row=None, spec=None):
+                        flat: bool = False, unravel_row=None, spec=None,
+                        remat: bool = False):
         """The batched round:
 
             step(worker_params, batch, keys, chans, Ws)
@@ -193,9 +198,10 @@ class FleetEngine:
                 if mesh is not None and "model" in mesh.axis_names:
                     return make_fleet_sharded_step(cfg, self.proto, spec,
                                                    mesh,
-                                                   replicate_axis=axis)
+                                                   replicate_axis=axis,
+                                                   remat=remat)
                 base = make_sharded_dynamic_flat_train_step(
-                    cfg, self.proto, spec, mesh=None)
+                    cfg, self.proto, spec, mesh=None, remat=remat)
             else:
                 if unravel_row is None and spec is not None:
                     unravel_row = spec.unravel_row

@@ -83,18 +83,32 @@ def _round_math(p, g, normal_pair, c, sigma_m, amp, selfs, mscale, listen, w,
     """The fused-round arithmetic, shared verbatim by the Pallas kernel
     body and the jnp lowering. All vector args are [N]-columns already
     reshaped to [N, 1]; ``normal_pair`` lazily yields the two noise
-    fields."""
+    fields.
+
+    The noisy branch is written as ONE block matmul
+
+        [w | w − diag(self) | diag(m_scale·σ_m)] @ [x; n/c; 𝒢_m]
+
+    which is algebraically the mix + self-correction + AWGN chain
+    (w@(x+n/c) + m_scale·σ_m·𝒢_m − self·(n/c) = upd + x). Besides mapping
+    the whole post-noise pipeline onto the MXU, the GEMM operands force
+    XLA CPU to MATERIALIZE the two hash+erf_inv noise fields: the naive
+    elementwise form fuses both chains into the consumer loop and crosses
+    a kLoop-fusion performance cliff (~3-7x at sharded window widths —
+    ``lax.optimization_barrier`` is stripped by the CPU backend, so the
+    operand boundary is the only reliable materialization point)."""
     x = p - gamma * g
     if noisy:
         g_n, g_m = normal_pair()
         nf = (amp / c) * g_n                 # n/c: pre-scaled DP noise
-        z = x + nf
-        mixed = jnp.dot(w, z, preferred_element_type=jnp.float32)
-        upd = mixed + mscale * (sigma_m * g_m) - x - selfs * nf
-    else:
-        mixed = jnp.dot(w, x, preferred_element_type=jnp.float32)
-        upd = mixed - x
-    return x + eta * listen * upd
+        eye = jnp.eye(p.shape[0], dtype=jnp.float32)
+        blocks = jnp.concatenate(
+            [w, w - eye * selfs, eye * (mscale * sigma_m)], axis=1)
+        z3 = jnp.concatenate([x, nf, g_m], axis=0)
+        upd_px = jnp.dot(blocks, z3, preferred_element_type=jnp.float32)
+        return x + eta * listen * (upd_px - x)
+    mixed = jnp.dot(w, x, preferred_element_type=jnp.float32)
+    return x + eta * listen * (mixed - x)
 
 
 def _dp_mix_kernel(seed_ref, off_ref, scal_ref, amp_ref, selfs_ref,

@@ -93,6 +93,19 @@ def main(argv=None):
                          "(CPU: XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=S), else shards logically on one "
                          "device. Requires --flat-buffer.")
+    ap.add_argument("--max-chunk-cols", type=int, default=0,
+                    help="cap (in columns) on each collective of the "
+                         "sharded round's gather-free grad pass "
+                         "(repro.shard chunk plan): bounds the transient "
+                         "gather buffer at ~n_workers x cap elements. "
+                         "0 = unbounded (one chunk per leaf x window "
+                         "intersection). Requires --model-shards > 1.")
+    ap.add_argument("--remat", action="store_true",
+                    help="rematerialize each worker's forward in the "
+                         "backward pass of the sharded grad block "
+                         "(jax.checkpoint): trades compute for activation "
+                         "memory on big configs. Requires "
+                         "--model-shards > 1.")
     ap.add_argument("--chunk-rounds", type=int, default=0,
                     help="scan-fused trajectory engine: rounds compiled "
                          "into one lax.scan dispatch (0 = auto: one "
@@ -174,6 +187,13 @@ def main(argv=None):
     if n_shards > 1 and not proto.flat_buffer:
         raise SystemExit("--model-shards requires --flat-buffer (only the "
                          "persistent flat buffer has a model axis to shard)")
+    max_chunk_cols = args.max_chunk_cols if args.max_chunk_cols > 0 else None
+    if max_chunk_cols is not None and n_shards <= 1:
+        raise SystemExit("--max-chunk-cols caps the sharded round's "
+                         "collective chunks; it requires --model-shards > 1")
+    if args.remat and n_shards <= 1:
+        raise SystemExit("--remat rematerializes the sharded grad block; "
+                         "it requires --model-shards > 1")
     sim, fleet = None, None
     if args.replicates > 1:
         from repro.fleet import FleetEngine
@@ -213,7 +233,8 @@ def main(argv=None):
     unravel = unravel_row = None
     if fleet is not None:
         if proto.flat_buffer:
-            wp, spec = fleet.init_flat_spec(key, cfg, n_shards=n_shards)
+            wp, spec = fleet.init_flat_spec(key, cfg, n_shards=n_shards,
+                                            max_chunk_cols=max_chunk_cols)
             unravel, unravel_row = spec.unravel, spec.unravel_row
             n_params = spec.d      # lead_axes=2: d is PER-WORKER already
         else:
@@ -226,7 +247,8 @@ def main(argv=None):
         n_params = sum(int(x.size) for x in jax.tree_util.tree_leaves(wp)) // W
         if proto.flat_buffer:
             from repro.core import exchange as X
-            spec = X.make_flat_spec(wp, n_shards=n_shards)
+            spec = X.make_flat_spec(wp, n_shards=n_shards,
+                                    max_chunk_cols=max_chunk_cols)
             unravel, unravel_row = spec.unravel, spec.unravel_row
             wp = spec.flatten(wp)
     if spec is not None and spec.n_shards > 1:
@@ -250,6 +272,11 @@ def main(argv=None):
         print(f"[train] model shards: {spec.n_shards} x "
               f"{spec.layout.shard_width} cols ({spec.width} padded, "
               f"d={spec.d}) on {where}")
+        plan = spec.chunk_plan
+        cap = plan.max_chunk_cols
+        print(f"[train] grad-pass chunk plan: {len(plan.chunks)} chunks, "
+              f"{len(plan.exec_segments())} collective segments"
+              + (f", cap {cap} cols" if cap else " (unbounded)"))
     print(f"[train] params/worker: {n_params/1e6:.2f}M"
           + (" (flat dp_mix buffer)" if proto.flat_buffer else ""))
 
@@ -325,7 +352,8 @@ def main(argv=None):
         body = TJ.make_round_body(
             cfg, proto, store, sim=None if fleet is not None else sim,
             fleet=fleet, flat=proto.flat_buffer, unravel_row=unravel_row,
-            spec=spec, shard_mesh=shard_mesh, telemetry=tele)
+            spec=spec, shard_mesh=shard_mesh, telemetry=tele,
+            remat=args.remat)
         coher = (sim.scenario.fading.coherence_rounds
                  if sim is not None else None)
         chunk = (args.chunk_rounds if args.chunk_rounds > 0
@@ -405,7 +433,7 @@ def main(argv=None):
             if sharded:
                 from repro.shard import make_sharded_dynamic_flat_train_step
                 mk = lambda: make_sharded_dynamic_flat_train_step(
-                    cfg, proto, spec, mesh=shard_mesh)
+                    cfg, proto, spec, mesh=shard_mesh, remat=args.remat)
             else:
                 mk = (lambda: P.make_dynamic_flat_train_step(cfg, proto,
                                                              unravel_row)
@@ -418,7 +446,7 @@ def main(argv=None):
             if sharded:
                 from repro.shard import make_sharded_flat_train_step
                 mk = lambda: make_sharded_flat_train_step(
-                    cfg, proto, spec, mesh=shard_mesh)
+                    cfg, proto, spec, mesh=shard_mesh, remat=args.remat)
             else:
                 mk = (lambda: P.make_flat_train_step(cfg, proto, unravel_row)
                       ) if proto.flat_buffer else (

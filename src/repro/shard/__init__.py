@@ -5,7 +5,8 @@ round/step builders live in repro.shard.round and are re-exported lazily
 here (round pulls in protocol + the kernel stack, and exchange.FlatSpec
 imports this package's layout — eager re-export would cycle).
 """
-from repro.shard.layout import LANES, ShardLayout
+from repro.shard.layout import (LANES, Chunk, ChunkPlan, ShardLayout,
+                                plan_chunks)
 
 _ROUND_EXPORTS = (
     "dp_mix_round_sharded",
@@ -16,7 +17,8 @@ _ROUND_EXPORTS = (
     "shard_window_round",
 )
 
-__all__ = ["LANES", "ShardLayout", *_ROUND_EXPORTS]
+__all__ = ["LANES", "Chunk", "ChunkPlan", "ShardLayout", "plan_chunks",
+           *_ROUND_EXPORTS]
 
 
 def __getattr__(name):

@@ -26,7 +26,8 @@ exchange.FlatSpec and repro.shard.round build on).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -112,3 +113,119 @@ class ShardLayout:
                     f"this build derives {getattr(lay, k)} (lane tile "
                     f"changed?)")
         return lay
+
+
+# ---------------------------------------------------------------------------
+# chunk plan: leaf x shard-window tiling of [0, d) for the gather-free pass
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Chunk:
+    """One chunk of the gather-free grad pass: a contiguous global column
+    span [start, stop) of the canonical [0, d) buffer that lies within
+    exactly ONE leaf and ONE shard window. ``local_start``/``local_stop``
+    are the same span in the owning shard's window coordinates
+    (start − shard·shard_width)."""
+    leaf: int           # leaf index in FlatSpec ravel order
+    start: int          # global column span [start, stop)
+    stop: int
+    shard: int          # owning shard window
+    local_start: int    # window-local coordinates of the same span
+    local_stop: int
+
+    @property
+    def cols(self) -> int:
+        return self.stop - self.start
+
+
+@dataclass(frozen=True)
+class ChunkPlan:
+    """The per-leaf chunk plan of a ShardLayout (ISSUE 8 tentpole).
+
+    Contract (property-swept by tests/test_shard.py):
+
+    * the chunks tile [0, d) exactly once, in order, with no overlap;
+    * every chunk lies within ONE leaf and ONE shard window — chunk
+      boundaries are the union of leaf boundaries, window boundaries, and
+      budget splits;
+    * no chunk exceeds ``max_chunk_cols`` columns when a budget is set.
+
+    The plan is PURE GEOMETRY: the executor (repro.shard.round) derives
+    its collective schedule from ``exec_segments()`` — the window-LOCAL
+    column segments whose union of cut points covers [0, shard_width) —
+    and moves one segment per collective, so the budget bounds the
+    transient gather buffer at ~n_workers·max_chunk_cols elements while
+    the realized arithmetic (and therefore the noise stream) is bitwise
+    IDENTICAL across every budget choice: chunking is data movement,
+    never math."""
+    layout: ShardLayout
+    max_chunk_cols: Optional[int] = None
+    chunks: Tuple[Chunk, ...] = field(default=())
+
+    def exec_segments(self) -> List[Tuple[int, int]]:
+        """Window-local segments [(l0, l1), ...] partitioning
+        [0, shard_width): the union of every window's chunk cut points
+        (re-split to the budget so the padding tail of the last window
+        obeys it too). One collective moves one segment — S aligned
+        spans, one per window — so every segment's transient is at most
+        ~n_shards·(budget) columns wide."""
+        sw = self.layout.shard_width
+        cuts = {0, sw}
+        for c in self.chunks:
+            cuts.add(c.local_start)
+            cuts.add(min(c.local_stop, sw))
+        edges = sorted(cuts)
+        out: List[Tuple[int, int]] = []
+        for a, b in zip(edges[:-1], edges[1:]):
+            out.extend(_budget_splits(a, b, self.max_chunk_cols))
+        return out
+
+    def to_meta(self) -> dict:
+        return {"max_chunk_cols": self.max_chunk_cols,
+                "n_chunks": len(self.chunks)}
+
+
+def _budget_splits(start: int, stop: int,
+                   budget: Optional[int]) -> List[Tuple[int, int]]:
+    """Split [start, stop) into even-ish pieces of at most ``budget``."""
+    n = stop - start
+    if budget is None or n <= budget:
+        return [(start, stop)]
+    pieces = -(-n // budget)
+    edges = [start + (n * i) // pieces for i in range(pieces + 1)]
+    return list(zip(edges[:-1], edges[1:]))
+
+
+def plan_chunks(layout: ShardLayout, leaf_sizes: Sequence[int],
+                max_chunk_cols: Optional[int] = None) -> ChunkPlan:
+    """Build the ChunkPlan for ``layout`` over leaves of the given flat
+    sizes (FlatSpec._sizes order). ``max_chunk_cols`` caps every chunk's
+    width (None = unbounded: one chunk per leaf x window intersection)."""
+    if sum(leaf_sizes) != layout.d:
+        raise ValueError(f"leaf sizes sum to {sum(leaf_sizes)}, layout has "
+                         f"d={layout.d}")
+    if max_chunk_cols is not None and max_chunk_cols < 1:
+        raise ValueError(f"max_chunk_cols must be >= 1, got "
+                         f"{max_chunk_cols}")
+    sw = layout.shard_width
+    # global cut points: leaf boundaries + window boundaries inside [0, d)
+    cuts = {0, layout.d}
+    off = 0
+    for n in leaf_sizes:
+        off += n
+        cuts.add(off)
+    for s in range(1, layout.n_shards):
+        if s * sw < layout.d:
+            cuts.add(s * sw)
+    edges = sorted(cuts)
+    # leaf lookup by start offset
+    leaf_starts = np.cumsum([0] + list(leaf_sizes))
+    chunks: List[Chunk] = []
+    for a, b in zip(edges[:-1], edges[1:]):
+        leaf = int(np.searchsorted(leaf_starts, a, side="right") - 1)
+        shard = a // sw
+        for c0, c1 in _budget_splits(a, b, max_chunk_cols):
+            chunks.append(Chunk(leaf, c0, c1, shard,
+                                c0 - shard * sw, c1 - shard * sw))
+    return ChunkPlan(layout, max_chunk_cols, tuple(chunks))

@@ -222,6 +222,77 @@ def test_source_lint_clean_on_library_tree():
 
 
 # ---------------------------------------------------------------------------
+# gather-free checker (repro.shard memory contract)
+# ---------------------------------------------------------------------------
+
+
+def test_gather_checker_noop_on_unsharded_program():
+    from repro.analysis import check_gather_free
+    cj = jax.make_jaxpr(lambda x: x * 2.0)(jnp.ones((4, 8), jnp.float32))
+    fs = check_gather_free(cj, "fix", sharded=False, flat_width=0,
+                           shard_width=0)
+    assert not _errors(fs)
+    assert any(f.severity == Severity.INFO for f in fs)
+
+
+_GATHER_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import jax, jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.analysis import (Severity, analyze_program, build_programs,
+                            check_gather_free)
+from repro.launch import mesh as mesh_lib
+
+W, SW = 4, 256
+width = 2 * SW
+mesh = mesh_lib.make_shard_mesh(2)
+
+def gathered(flat):     # adversarial: the old gather-compute-slice round
+    def body(fl):
+        full = jax.lax.all_gather(fl, "model", axis=1, tiled=True)
+        return full.sum(axis=1, keepdims=True) * jnp.ones_like(fl)
+    return shard_map(body, mesh=mesh, in_specs=(P(None, "model"),),
+                     out_specs=P(None, "model"), check_rep=False)(flat)
+
+cj = jax.make_jaxpr(gathered)(jnp.zeros((W, width), jnp.float32))
+fs = check_gather_free(cj, "adversarial", sharded=True,
+                       flat_width=width, shard_width=SW)
+errs = [f for f in fs if f.severity == Severity.ERROR]
+assert errs, "checker must fire on the gathered fixture"
+assert "all_gather" in errs[0].message, errs[0].message
+
+# ... and the SHIPPED mesh program (gather-free pass) is clean across
+# every checker, gather-free included
+prog, = build_programs(["shard-flat-s2-mesh"])
+assert prog.sharded and prog.flat_width > 0 and prog.shard_width > 0
+bad = [f for f in analyze_program(prog) if f.severity >= Severity.WARNING]
+assert not bad, "\\n".join(str(f) for f in bad)
+print("GATHER_CHECK_OK")
+"""
+
+
+def test_gather_checker_fires_on_fixture_clean_on_shipped_subprocess():
+    """The satellite acceptance pair in one forced-2-device subprocess:
+    the checker ERRORs on the adversarial full-width-gather round and
+    stays silent on the shipped gather-free mesh program."""
+    import os as _os
+    import subprocess
+    import sys as _sys
+    env = dict(_os.environ)
+    env["PYTHONPATH"] = (_os.path.join(_os.path.dirname(__file__), "..",
+                                       "src")
+                         + _os.pathsep + env.get("PYTHONPATH", ""))
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([_sys.executable, "-c", _GATHER_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-4000:]
+    assert "GATHER_CHECK_OK" in res.stdout
+
+
+# ---------------------------------------------------------------------------
 # Finding schema / report
 # ---------------------------------------------------------------------------
 
@@ -249,7 +320,7 @@ def shipped():
 def test_registry_covers_all_driver_paths():
     assert {"static-tree", "static-flat", "dynamic-tree",
             "dynamic-flat-tele", "fleet-tree", "fleet-flat",
-            "shard-flat-s2"} <= set(PROGRAMS)
+            "shard-flat-s2", "shard-flat-s2-mesh"} <= set(PROGRAMS)
 
 
 def test_shipped_programs_have_no_findings(shipped):

@@ -49,13 +49,14 @@ def _store(seed=0):
     return ClassificationStore.build(x, y, parts, BATCH)
 
 
-def _dynamic_setup(n_shards):
+def _dynamic_setup(n_shards, max_chunk_cols=None):
     cfg = _cfg()
     proto = _proto(channel_model="dynamic", scenario="iot_dense")
     sim = proto.simulator()
     wp = _wp(cfg)
-    spec = X.make_flat_spec(wp, n_shards=n_shards) if n_shards > 1 \
-        else X.make_flat_spec(wp)
+    spec = X.make_flat_spec(wp, n_shards=n_shards,
+                            max_chunk_cols=max_chunk_cols) \
+        if n_shards > 1 else X.make_flat_spec(wp)
     body = TJ.make_round_body(cfg, proto, _store(), sim=sim, spec=spec)
     net0 = sim.init(jax.random.PRNGKey(4))
     carry0 = TJ.TrajCarry(jax.random.PRNGKey(5), spec.flatten(wp), net0)
@@ -122,6 +123,39 @@ def test_checkpoint_relayout_across_shard_counts(tmp_path):
         finals[S] = np.asarray(spec.unpad(got.params))
     np.testing.assert_array_equal(finals[1], finals[2])
     np.testing.assert_array_equal(finals[1], finals[4])
+
+
+def test_checkpoint_relayout_across_chunk_budgets(tmp_path):
+    """The grad-pass chunk budget (max_chunk_cols) is a pure execution
+    detail: a checkpoint written under one budget restores and continues
+    bitwise under any other budget or shard count, and the manifest's
+    flat_layout records the writer's chunk plan."""
+    import json
+
+    spec_w, body_w, carry_w = _dynamic_setup(2, max_chunk_cols=64)
+    ref = _run(body_w, carry_w, 6)
+    mid = _run(body_w, carry_w, 3)
+    path = os.path.join(tmp_path, "budget")
+    save_flat(path, mid.params, spec_w, step=3,
+              state={"key": mid.key, "net": mid.net})
+
+    # the chunk plan round-trips through the manifest metadata
+    recorded = json.load(open(path + ".json"))
+    plan_meta = recorded["metadata"]["flat_layout"]["chunk_plan"]
+    assert plan_meta == spec_w.chunk_plan.to_meta()
+    assert plan_meta["max_chunk_cols"] == 64
+    assert plan_meta["n_chunks"] == len(spec_w.chunk_plan.chunks)
+
+    ref_cols = np.asarray(spec_w.unpad(ref.params))
+    for S, cap in ((2, None), (2, 13), (4, 200)):
+        spec, body, _ = _dynamic_setup(S, max_chunk_cols=cap)
+        flat, state, _m = restore_flat(
+            path, spec, state_like={"key": mid.key, "net": mid.net})
+        got = _run(body, TJ.TrajCarry(jnp.asarray(state["key"]), flat,
+                                      jax.tree_util.tree_map(
+                                          jnp.asarray, state["net"])), 3)
+        np.testing.assert_array_equal(np.asarray(spec.unpad(got.params)),
+                                      ref_cols)
 
 
 def test_restore_flat_rejects_mismatched_contract(tmp_path):

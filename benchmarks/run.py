@@ -21,7 +21,7 @@ def main() -> None:
                             fig5_orthogonal, fig6_centralized,
                             privacy_table, kernel_bench, sampling_ablation,
                             coherence_sweep, exchange_bench, fleet_sweep,
-                            trajectory_bench)
+                            trajectory_bench, workers_bench)
 
     suites = [
         ("fig2_power", lambda: fig2_power.main(args.steps)),
@@ -37,6 +37,10 @@ def main() -> None:
         # emits BENCH_trajectory.json at the repo root (K-chunked scan vs
         # per-round dispatch rounds/sec; asserts the >= 2x acceptance)
         ("trajectory_bench", lambda: trajectory_bench.main(args.steps)),
+        # emits BENCH_workers.json at the repo root (dense vs sparse
+        # dp_mix round over N in 64..8192; asserts the >= 3x acceptance
+        # at N >= 2048 and sub-quadratic sparse peak-memory growth)
+        ("workers_bench", workers_bench.main),
         ("sampling_ablation", lambda: sampling_ablation.main(args.steps)),
         ("fleet_sweep", lambda: fleet_sweep.main(args.steps)),
         ("coherence_sweep", lambda: coherence_sweep.main(args.steps)),

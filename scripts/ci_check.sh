@@ -260,4 +260,53 @@ python -m pytest -q -m "not slow" tests/test_obs.py
 python -m pytest -q tests/test_trajectory.py -k "telemetry or consensus"
 fi
 
+echo "== ISSUE 9 smoke: sparse neighbor-list training path =="
+# sparse mixing end to end (graph emission -> kernel -> eps) + the
+# isolated-worker fallback, then the worker-axis row shard on a REAL
+# 2-device mesh
+python -m repro.launch.train \
+    --arch dwfl-paper --steps 10 --workers 8 --batch-size 8 \
+    --channel-model dynamic --scenario iot_dense --sparse-neighbors 3 \
+    --flat-buffer --chunk-rounds 4 --eval-every 5
+python -m repro.launch.train \
+    --arch dwfl-paper --steps 10 --workers 16 --batch-size 8 \
+    --channel-model dynamic --scenario mesh_sparse --sparse-neighbors 4 \
+    --graph-fallback --flat-buffer --chunk-rounds 4 --eval-every 5
+XLA_FLAGS=--xla_force_host_platform_device_count=2 python -m repro.launch.train \
+    --arch dwfl-paper --steps 10 --workers 8 --batch-size 8 \
+    --channel-model dynamic --scenario iot_dense --sparse-neighbors 3 \
+    --flat-buffer --worker-shards 2 --chunk-rounds 4 --eval-every 0
+
+echo "== ISSUE 9 smoke: worker-scale perf artifact (N in 128/256/512) =="
+# cross-checks sparse vs the dense reference round before timing anything
+python -m benchmarks.workers_bench --smoke
+python - <<'EOF'
+import json
+rep = json.load(open("bench_out/BENCH_workers_smoke.json"))
+cases = {c["n_workers"]: c for c in rep["cases"]}
+assert set(cases) == {128, 256, 512}, rep
+assert all(c["crosschecked"] for c in rep["cases"]), rep
+# throughput gate: by N=512 the O(N*k*d) round must have overtaken the
+# dense O(N^2*d) one (the full-run BENCH_workers.json asserts >= 3x at
+# N >= 2048; the smoke bar is the crossover itself)
+assert cases[512]["speedup"] >= 1.0, cases[512]
+# memory gate: sub-quadratic sparse growth over the 4x N step (quadratic
+# would be 16x) and strictly slower growth than the dense leg's
+s128, s512 = (cases[128]["sparse_peak_bytes"], cases[512]["sparse_peak_bytes"])
+d128, d512 = (cases[128]["dense_peak_bytes"], cases[512]["dense_peak_bytes"])
+assert None not in (s128, s512, d128, d512), rep
+assert s512 / s128 < 8.0, (s128, s512)
+assert s512 / s128 < d512 / d128, (s128, s512, d128, d512)
+print("bench_out/BENCH_workers_smoke.json:",
+      ", ".join(f"N={n}: {cases[n]['speedup']}x, "
+                f"peak {cases[n]['sparse_peak_bytes']/1e3:.0f}kB sparse / "
+                f"{cases[n]['dense_peak_bytes']/1e3:.0f}kB dense"
+                for n in (128, 256, 512)))
+EOF
+
+if [[ "$RUN_REGRESSION" == 1 ]]; then
+echo "== ISSUE 9 regression tests: sparse engine + worker sharding =="
+python -m pytest -q -m "not slow" tests/test_sparse.py
+fi
+
 echo "ci_check: OK"

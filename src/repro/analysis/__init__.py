@@ -1,6 +1,6 @@
 """repro.analysis — static checkers for the compiled DWFL programs.
 
-Five invariant families (DESIGN.md §14), each a pure function
+Seven invariant families (DESIGN.md §14), each a pure function
 ``program -> list[Finding]`` over a traced/compiled view of the SHIPPED
 driver programs (registry.py), no execution required:
 
@@ -16,12 +16,16 @@ driver programs (registry.py), no execution required:
 * gather-free     (gather.py)    — no full-width all_gather in model-
                                    sharded programs: the ~(W·d)/S peak-
                                    memory contract of the sharded round
+* dense-mixing    (densemix.py)  — no [N, N]-shaped contraction in
+                                   sparse neighbor-list programs: the
+                                   O(N·k·d) per-round contract
 
 plus the AST source lint (sourcelint.py). ``python -m repro.analysis``
 runs everything over the registry and fails on ERROR findings —
 ci_check.sh --lint / the CI lint job.
 """
 from repro.analysis.constants import check_weak_closure
+from repro.analysis.densemix import check_dense_mixing
 from repro.analysis.donation import aval_signature, check_donation
 from repro.analysis.dtypes import check_dtype_discipline
 from repro.analysis.findings import (Finding, Severity, report_json,
@@ -35,7 +39,7 @@ from repro.analysis.sourcelint import lint_source
 
 
 def analyze_program(prog: BuiltProgram):
-    """All six jaxpr/HLO checker families over one registry program."""
+    """All seven jaxpr/HLO checker families over one registry program."""
     findings = []
     findings += check_key_discipline(prog.closed_jaxpr, prog.name)
     findings += check_donation(prog.hlo_text, prog.donated, prog.name)
@@ -47,6 +51,9 @@ def analyze_program(prog: BuiltProgram):
                                   sharded=prog.sharded,
                                   flat_width=prog.flat_width,
                                   shard_width=prog.shard_width)
+    findings += check_dense_mixing(prog.closed_jaxpr, prog.name,
+                                   sparse=prog.sparse,
+                                   n_workers=prog.n_workers)
     return findings
 
 
@@ -54,6 +61,7 @@ __all__ = [
     "Finding", "Severity", "summarize", "report_json",
     "check_key_discipline", "check_donation", "check_weak_closure",
     "check_dtype_discipline", "check_host_sync", "check_gather_free",
+    "check_dense_mixing",
     "lint_source", "aval_signature", "PROGRAMS", "BuiltProgram",
     "available_programs", "build_programs", "analyze_program",
 ]

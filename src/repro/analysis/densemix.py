@@ -1,0 +1,106 @@
+"""dense-mixing checker: no [N, N]-shaped contraction in sparse programs.
+
+The sparse neighbor-list round (repro.net.sparse, kernels.dp_mix's
+``dp_mix_round_sparse``) exists to make every per-round cost O(N·k·d) —
+its whole contract is that nothing in the compiled program scales as
+N². The single construct that silently breaks it is a ``dot_general``
+that contracts over a worker-count-sized axis with a worker×worker
+matrix operand: exactly what reappears if the plan dispatch ever falls
+back to the dense kernel (``W @ (x + n/c)`` or the fused block GEMM
+``[w | w − I·self | I·mσ] @ [x; n/c; 𝒢]``), if an ε/telemetry helper
+densifies the SparseW, or if an einsum mixes through an adjacency.
+
+The checker walks every equation of the traced program (scan bodies and
+shard_map included — walk.iter_eqns descends) and ERRORs on any
+``dot_general`` whose contracted dimension is worker-count sized AND
+whose contracting operand carries TWO worker-count-sized trailing dims —
+the [N, N] (or padded [Np, Np] / blocked [Np, 3·Np]) mixing-matrix
+signature. The per-worker grad pass's matmuls never match (their
+contractions are model/batch sized; the operand test keeps even an
+N-sized batch axis from false-positives unless an actual worker×worker
+matrix participates).
+
+Dense-mode programs have no contract to enforce — the checker emits an
+INFO for them so the report shows the check ran (mirroring gather.py).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.walk import iter_eqns
+
+CHECKER = "dense-mixing"
+
+_SUBLANES = 8      # kernels.dp_mix worker-axis pad multiple
+
+
+def _worker_sizes(n_workers: int) -> frozenset:
+    """The worker-count-sized axis lengths a dense mixing contraction can
+    carry: N itself, the sublane-padded Np, and the fused block GEMM's
+    3-stacked variants."""
+    np_ = -(-n_workers // _SUBLANES) * _SUBLANES
+    return frozenset({n_workers, np_, 3 * n_workers, 3 * np_})
+
+
+def _shape(var):
+    shape = getattr(getattr(var, "aval", None), "shape", None)
+    if shape is None:
+        return ()
+    try:
+        return tuple(int(s) for s in shape)
+    except TypeError:       # symbolic dims — never the mixing matrix here
+        return ()
+
+
+def check_dense_mixing(closed_jaxpr, program: str, *, sparse: bool,
+                       n_workers: int) -> List[Finding]:
+    """ERROR on every [N, N]-shaped contraction in a sparse-mode program.
+
+    ``sparse`` marks programs built with ProtocolConfig(sparse_neighbors
+    > 0) — the O(N·k) contract holders; dense programs are a no-op."""
+    if not sparse or n_workers <= 1:
+        return [Finding(
+            CHECKER, Severity.INFO, program,
+            "program does not use sparse neighbor-list mixing; "
+            "dense-mixing contract not applicable")]
+    sizes = _worker_sizes(n_workers)
+    findings: List[Finding] = []
+    n_dots = 0
+    for path, eqn in iter_eqns(closed_jaxpr):
+        if eqn.primitive.name != "dot_general":
+            continue
+        n_dots += 1
+        dims = eqn.params.get("dimension_numbers")
+        if not dims:
+            continue
+        (lhs_c, rhs_c), _batch = dims
+        for var, contract in zip(eqn.invars[:2], (lhs_c, rhs_c)):
+            shape = _shape(var)
+            if not contract or len(shape) < 2:
+                continue
+            c_sizes = [shape[a] for a in contract if a < len(shape)]
+            if not any(s in sizes for s in c_sizes):
+                continue
+            # the mixing-matrix signature: the contracting operand's two
+            # trailing dims are BOTH worker-count sized ([N, N] / padded
+            # [Np, Np] / the blocked [Np, 3Np])
+            if shape[-1] in sizes and shape[-2] in sizes:
+                findings.append(Finding(
+                    CHECKER, Severity.ERROR, program,
+                    f"[N, N]-shaped contraction: dot_general contracts a "
+                    f"worker-count-sized axis of a {shape} operand "
+                    f"(N={n_workers}) — the dense O(N²·d) mixing the "
+                    f"sparse neighbor-list path exists to eliminate",
+                    where=path or "<top>",
+                    detail={"operand_shape": list(shape),
+                            "contracted_sizes": c_sizes,
+                            "n_workers": n_workers}))
+                break
+    if not findings:
+        findings.append(Finding(
+            CHECKER, Severity.INFO, program,
+            f"no [N, N]-shaped contraction ({n_dots} benign dot_general "
+            f"eqn(s) — grad-pass/model matmuls)",
+            detail={"dot_general_eqns": n_dots, "n_workers": n_workers}))
+    return findings

@@ -12,7 +12,8 @@ produces BOTH static views the checkers need:
   uint32 keys, exactly as the driver runs it (donation.py).
 
 The catalogue covers every shipped path: static/dynamic/fleet ×
-tree/flat, telemetry+ε in-carry, and the model-sharded flat round twice
+tree/flat, telemetry+ε in-carry, the sparse neighbor-list round
+(dense-mixing contract), and the model-sharded flat round twice
 — S=2 LOGICAL sharding (device-count independent) and the S=2 MESH
 program (shard_map + the gather-free collectives; needs >= 2 devices,
 so it drops out of ``available_programs()`` on a bare 1-device runtime
@@ -51,6 +52,7 @@ class BuiltProgram:
     sharded: bool = False  # model-sharded: gather-free contract applies
     flat_width: int = 0    # physical padded buffer width (sharded only)
     shard_width: int = 0   # per-device column count (sharded only)
+    sparse: bool = False   # neighbor-list mixing: dense-mixing contract
 
 
 @functools.lru_cache(maxsize=1)
@@ -73,7 +75,8 @@ def _proto(**kw):
 
 
 def _finish(name: str, body: Callable, wp, net=None, eps=None,
-            dynamic: bool = False, spec=None) -> BuiltProgram:
+            dynamic: bool = False, spec=None,
+            sparse: bool = False) -> BuiltProgram:
     from repro.core import trajectory as TJ
     program = TJ.ChunkRunner(body).program(CHUNK)
     typed = TJ.TrajCarry(jax.random.key(_SEED), wp, net, eps)
@@ -99,7 +102,8 @@ def _finish(name: str, body: Callable, wp, net=None, eps=None,
         name, dynamic, N_WORKERS, closed, hlo, donated,
         sharded=sharded,
         flat_width=spec.layout.padded_width if sharded else 0,
-        shard_width=spec.layout.shard_width if sharded else 0)
+        shard_width=spec.layout.shard_width if sharded else 0,
+        sparse=sparse)
 
 
 def _static(name: str, flat: bool, n_shards: int = 1,
@@ -128,13 +132,15 @@ def _static(name: str, flat: bool, n_shards: int = 1,
     return _finish(name, body, wp, spec=spec if mesh else None)
 
 
-def _dynamic(name: str, flat: bool, telemetry: bool = False) -> BuiltProgram:
+def _dynamic(name: str, flat: bool, telemetry: bool = False,
+             sparse_k: int = 0) -> BuiltProgram:
     from repro.core import exchange as X
     from repro.core import protocol as P
     from repro.core import trajectory as TJ
     cfg, store = _base()
     proto = _proto(channel_model="dynamic", scenario="iot_dense",
-                   coherence_rounds=4, flat_buffer=flat)
+                   coherence_rounds=4, flat_buffer=flat,
+                   sparse_neighbors=sparse_k)
     sim = proto.simulator()
     net = sim.init(jax.random.PRNGKey(1))
     wp = P.init_worker_params(jax.random.PRNGKey(_SEED), cfg, N_WORKERS)
@@ -150,7 +156,8 @@ def _dynamic(name: str, flat: bool, telemetry: bool = False) -> BuiltProgram:
             eps0 = obs.init_eps_moments(None)
     body = TJ.make_round_body(cfg, proto, store, sim=sim, spec=spec,
                               telemetry=tele)
-    return _finish(name, body, wp, net=net, eps=eps0, dynamic=True)
+    return _finish(name, body, wp, net=net, eps=eps0, dynamic=True,
+                   sparse=sparse_k > 0)
 
 
 def _fleet(name: str, flat: bool) -> BuiltProgram:
@@ -179,6 +186,12 @@ PROGRAMS: Dict[str, Callable[[], BuiltProgram]] = {
     "dynamic-tree": lambda: _dynamic("dynamic-tree", flat=False),
     "dynamic-flat-tele": lambda: _dynamic("dynamic-flat-tele", flat=True,
                                           telemetry=True),
+    # the sparse neighbor-list round (padded [N, k] W, O(N·k·d) mixing):
+    # the program the dense-mixing checker enforces the no-[N,N]-
+    # contraction contract on — telemetry+ε in-carry so the graph-aware
+    # accountant's sparse branch is inside the checked jaxpr too.
+    "dynamic-sparse-flat": lambda: _dynamic("dynamic-sparse-flat", flat=True,
+                                            telemetry=True, sparse_k=3),
     "fleet-tree": lambda: _fleet("fleet-tree", flat=False),
     "fleet-flat": lambda: _fleet("fleet-flat", flat=True),
     "shard-flat-s2": lambda: _static("shard-flat-s2", flat=True,

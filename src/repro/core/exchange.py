@@ -261,6 +261,23 @@ def plan_dynamic(proto, chan, k_x=None, W_arg=None) -> MixPlan:
                    m_scale=1.0 / (chan.c * deg), listen=listen)
 
 
+def plan_dynamic_sparse(proto, chan, k_x=None, W_arg=None) -> MixPlan:
+    """plan_dynamic for a padded neighbor list (repro.net.sparse.SparseW):
+    the MixPlan carries the SparseW itself as ``W`` (it is a pytree, so the
+    plan still flows through jit/scan unchanged) and derives the SAME
+    listen/m_scale vectors the dense plan computes — off_degree counts the
+    identical integers ``sum((W>0) & ~eye, 1)`` does, so the two plans are
+    bitwise-equal everywhere except the W representation."""
+    sw = W_arg
+    off_deg = sw.off_degree()
+    listen = (off_deg > 0).astype(jnp.float32)
+    deg = jnp.maximum(off_deg, 1.0)
+    return MixPlan(W=sw, c=jnp.asarray(chan.c, jnp.float32),
+                   amp=mix_noise_amp(chan),
+                   sigma_m=jnp.asarray(chan.awgn_sigma, jnp.float32),
+                   m_scale=1.0 / (chan.c * deg), listen=listen)
+
+
 def plan_sampled(proto, chan, k_x=None, W_arg=None) -> MixPlan:
     from repro.core import protocol as protocol_lib
     mask = W_arg if W_arg is not None else protocol_lib.sample_participation(
@@ -277,7 +294,50 @@ def plan_sampled(proto, chan, k_x=None, W_arg=None) -> MixPlan:
 # ---------------------------------------------------------------------------
 
 
+def mix_exchange_sparse(X: Tree, noise_n: Tree, noise_m: Tree, c, eta, sw, *,
+                        self_scale=None, m_scale=None, listen=None) -> Tree:
+    """:func:`mix_exchange` against a padded neighbor list
+    (repro.net.sparse.SparseW): the [N,N] einsum becomes k row-gathers of
+    the noised buffer — O(N·k·leaf) instead of O(N²·leaf), identical
+    update otherwise (ULP-close: slot-order summation)."""
+    N = sw.idx.shape[-2]
+
+    def _vec(v, n_lead, ndim):
+        if v is None:
+            return None
+        v = jnp.asarray(v, jnp.float32)
+        if v.ndim == 0:
+            return v
+        return v.reshape((n_lead,) + (1,) * (ndim - 1))
+
+    def one(x, n, m):
+        xf = x.astype(jnp.float32)
+        nf = n.astype(jnp.float32) / c
+        z = xf + nf
+        col = lambda v: v.reshape((N,) + (1,) * (x.ndim - 1))
+        mixed = col(sw.self_w.astype(jnp.float32)) * z
+        for s in range(sw.idx.shape[-1]):
+            mixed = mixed + col(sw.w[:, s]) * z[sw.idx[:, s]]
+        selfs = _vec(self_scale, N, x.ndim)
+        upd = mixed - xf - (nf if selfs is None else selfs * nf)
+        if m is not None:
+            mf = m.astype(jnp.float32)
+            ms = _vec(m_scale, m.shape[0], m.ndim)
+            upd = upd + (mf if ms is None else ms * mf)
+        li = _vec(listen, N, x.ndim)
+        if li is not None:
+            upd = li * upd
+        return (xf + eta * upd).astype(x.dtype)
+
+    return jax.tree_util.tree_map(one, X, noise_n, noise_m)
+
+
 def run_mix(X, noise_n, noise_m, eta, plan: MixPlan) -> Tree:
+    from repro.net.sparse import SparseW
+    if isinstance(plan.W, SparseW):
+        return mix_exchange_sparse(X, noise_n, noise_m, plan.c, eta, plan.W,
+                                   self_scale=plan.self_scale,
+                                   m_scale=plan.m_scale, listen=plan.listen)
     return mix_exchange(X, noise_n, noise_m, plan.c, eta, plan.W,
                         self_scale=plan.self_scale, m_scale=plan.m_scale,
                         listen=plan.listen)
@@ -307,6 +367,14 @@ def _run_dynamic(X, keys, chan, proto, *, axis=None, W=None):
     n = dp_noise(k_n, X, chan)
     m = channel_noise(k_m, X, chan.awgn_sigma)
     return run_mix(X, n, m, proto.eta, plan_dynamic(proto, chan, W_arg=W))
+
+
+def _run_dynamic_sparse(X, keys, chan, proto, *, axis=None, W=None):
+    k_n, k_m = keys[0], keys[1]
+    n = dp_noise(k_n, X, chan)
+    m = channel_noise(k_m, X, chan.awgn_sigma)
+    return run_mix(X, n, m, proto.eta,
+                   plan_dynamic_sparse(proto, chan, W_arg=W))
 
 
 def _run_sampled(X, keys, chan, proto, *, axis=None, W=None):
@@ -431,6 +499,8 @@ SPECS = {
     "gossip": ExchangeSpec("gossip", _run_gossip, plan=plan_gossip),
     "topology": ExchangeSpec("topology", _run_topology, plan=plan_topology),
     "dynamic": ExchangeSpec("dynamic", _run_dynamic, plan=plan_dynamic),
+    "dynamic_sparse": ExchangeSpec("dynamic_sparse", _run_dynamic_sparse,
+                                   plan=plan_dynamic_sparse),
     "sampled": ExchangeSpec("sampled", _run_sampled, plan=plan_sampled),
     "collective": ExchangeSpec("collective", _run_collective),
     "orthogonal": ExchangeSpec("orthogonal", _run_orthogonal_spec,
@@ -451,6 +521,10 @@ def resolve_spec(proto, axis: Optional[str] = None,
         if proto.scheme != "dwfl":
             raise ValueError(f"dynamic channel model requires scheme='dwfl', "
                              f"got {proto.scheme!r}")
+        # sparse_neighbors > 0: the per-round W is a repro.net.sparse
+        # SparseW neighbor list and mixing runs O(N·k)
+        if getattr(proto, "sparse_neighbors", 0):
+            return SPECS["dynamic_sparse"]
         return SPECS["dynamic"]
     if proto.scheme == "gossip":
         return SPECS["gossip"]

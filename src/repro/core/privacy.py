@@ -152,11 +152,20 @@ def _masking_sums(chan, W):
     other worker masks every receiver). With a round's mixing matrix W, a
     receiver is masked only by its ACTIVE off-diagonal neighbors — churned-
     out workers have zero rows/columns and contribute nothing; a worker
-    with no neighbors hears nothing at all (listening=False)."""
+    with no neighbors hears nothing at all (listening=False).
+
+    W may also be a repro.net.sparse.SparseW neighbor list: the masking
+    sum then gathers the k realized neighbors' s² per receiver — O(N·k)
+    instead of the dense O(N²) contraction, same formula (the neighbor
+    list never stores the diagonal, so no ~eye correction is needed)."""
     import jax.numpy as jnp
     s2 = chan.noise_scale ** 2
     if W is None:
         return jnp.sum(s2) - s2, jnp.ones(s2.shape, bool)
+    from repro.net.sparse import SparseW
+    if isinstance(W, SparseW):
+        valid = W.valid().astype(s2.dtype)
+        return jnp.sum(valid * s2[W.idx], axis=-1), W.off_degree() > 0
     adj = ((jnp.asarray(W) > 0)
            & ~jnp.eye(s2.shape[0], dtype=bool)).astype(s2.dtype)
     return adj @ s2, jnp.sum(adj, axis=1) > 0

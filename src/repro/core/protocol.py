@@ -83,6 +83,17 @@ class ProtocolConfig:
                                  # launch/train.py --flat-buffer). Mixing-
                                  # family schemes only (dwfl/gossip incl.
                                  # topology/sampled/dynamic).
+    sparse_neighbors: int = 0    # >0: degree cap k — the dynamic per-round
+                                 # W becomes a padded neighbor list
+                                 # (repro.net.sparse.SparseW) and mixing,
+                                 # AWGN scaling, and the graph-aware ε all
+                                 # run O(N·k) instead of O(N²)
+                                 # (exchange.SPECS["dynamic_sparse"];
+                                 # launch/train.py --sparse-neighbors)
+    graph_fallback: bool = False # bridge radius-isolated workers to their
+                                 # nearest active neighbor instead of
+                                 # silently training identity rows
+                                 # (net.geometry; DESIGN.md §15)
 
     def mixing_matrix(self):
         from repro.core import topology as topo
@@ -129,7 +140,9 @@ class ProtocolConfig:
             noise_policy=self.noise_policy,
             coherence_rounds=self.coherence_rounds,
             target_epsilon=self.target_epsilon, gamma=self.gamma,
-            clip=self.clip, delta=self.delta)
+            clip=self.clip, delta=self.delta,
+            sparse_k=self.sparse_neighbors,
+            graph_fallback=self.graph_fallback)
 
 
 def sample_participation(key, n_workers: int, q: float) -> jnp.ndarray:

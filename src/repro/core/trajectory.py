@@ -66,7 +66,7 @@ class TrajCarry(NamedTuple):
 
 def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
                     flat: bool = False, unravel_row=None, spec=None,
-                    shard_mesh=None, telemetry=None,
+                    shard_mesh=None, worker_mesh=None, telemetry=None,
                     remat: bool = False) -> Callable:
     """Build ``body(carry) -> (carry', out)`` — one full DWFL round.
 
@@ -95,6 +95,12 @@ def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
     ``chan`` (TracedChannelState) and ``W`` (mixing matrix) on the
     dynamic/fleet paths — [K, ...] / [K, R, ...] leaves after a K-round
     scan, one array per chunk instead of one Python list entry per round.
+
+    ``worker_mesh`` (sim path, flat buffer, sparse_neighbors > 0): run
+    each round worker-axis sharded over the mesh's "workers" axis
+    (repro.shard.worker — N beyond one device). The carry's flat buffer
+    and the store's batches are row-sharded; channel/W stay replicated.
+    Mutually exclusive with a model-sharded ``spec`` for now.
 
     ``remat`` (sharded specs only) rematerializes each worker's forward
     in the backward pass of the gather-free grad block — the big-model
@@ -133,8 +139,17 @@ def make_round_body(cfg, proto, store, *, sim=None, fleet=None,
 
         return _maybe_instrument(body, telemetry, proto, fleet=fleet)
 
+    if worker_mesh is not None and (sim is None or sharded or spec is None):
+        raise ValueError("worker_mesh requires the sim path with an "
+                         "unsharded flat spec")
+
     if sim is not None:
-        if sharded:
+        if worker_mesh is not None:
+            from repro.shard.worker import \
+                make_worker_sharded_dynamic_flat_train_step
+            step = make_worker_sharded_dynamic_flat_train_step(
+                cfg, proto, spec, mesh=worker_mesh, remat=remat)
+        elif sharded:
             from repro.shard.round import \
                 make_sharded_dynamic_flat_train_step
             step = make_sharded_dynamic_flat_train_step(

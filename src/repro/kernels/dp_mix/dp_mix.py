@@ -58,7 +58,7 @@ def _normal_from_bits(bits):
     return math.sqrt(2.0) * jax.lax.erf_inv(t)
 
 
-def _normal_pair_hash(shape, d_padded, col0, seed):
+def _normal_pair_hash(shape, d_padded, col0, seed, row0=0):
     """Two INDEPENDENT standard-normal fields from the counter-hash
     generator (CPU path / interpret mode): element (i, j) of block column
     offset ``col0`` draws from global counters 2·idx and 2·idx+1.
@@ -67,10 +67,15 @@ def _normal_pair_hash(shape, d_padded, col0, seed):
     When the flat buffer is sharded over a model axis (repro.shard), every
     shard passes the same canonical stride (ShardLayout.counter_width) and
     its own global ``col0``, so the per-shard streams tile the exact
-    single-device stream — CPU shardings stay bitwise-comparable."""
+    single-device stream — CPU shardings stay bitwise-comparable.
+    ``row0`` is the analogous GLOBAL ROW offset for worker-axis sharding
+    (repro.shard.worker): each worker shard generates noise only for its
+    own rows, addressed by global counters, so the sharded streams tile
+    the unsharded stream exactly as well."""
     rows = jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
     cols = jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
-    idx = (rows * jnp.asarray(d_padded).astype(jnp.uint32)
+    idx = ((jnp.asarray(row0).astype(jnp.uint32) + rows)
+           * jnp.asarray(d_padded).astype(jnp.uint32)
            + jnp.asarray(col0).astype(jnp.uint32) + cols)
     g1 = _normal_from_bits(_hash_bits(idx * jnp.uint32(2), seed))
     g2 = _normal_from_bits(_hash_bits(idx * jnp.uint32(2) + jnp.uint32(1),
@@ -109,6 +114,65 @@ def _round_math(p, g, normal_pair, c, sigma_m, amp, selfs, mscale, listen, w,
         return x + eta * listen * (upd_px - x)
     mixed = jnp.dot(w, x, preferred_element_type=jnp.float32)
     return x + eta * listen * (mixed - x)
+
+
+def _sparse_round_math(p, g, normal_pair, c, sigma_m, amp, selfs, mscale,
+                       listen, idx, w, self_w, *, gamma, eta, noisy):
+    """The fused-round arithmetic against a padded neighbor list
+    (repro.net.sparse.SparseW): algebraically the same update as
+    ``_round_math``'s dense block GEMM, with the [N,N]×[N,BD] contraction
+    replaced by k row-gathers of the noised buffer —
+
+        z   = x + n/c
+        mix = self_w·z + Σ_s w[:,s]·z[idx[:,s]]        (k static slots)
+        out = x + η·listen·[mix + m_scale·σ_m·𝒢_m − x − self·(n/c)]
+
+    O(N·k·d) flops and an O(N·d) transient (z is materialized ONCE as the
+    shared gather operand — the same forced-materialization role the dense
+    GEMM operand plays on the XLA CPU backend). Padded slots self-point
+    with zero weight, so they contribute exactly 0.0; summation runs in
+    slot order, hence results are ULP-close (not bitwise) to the dense
+    reference — the noise FIELDS themselves are bitwise identical (same
+    counters). Vector args are [N, 1] columns; idx/w are [N, k]."""
+    x = p - gamma * g
+
+    def gather_mix(z):
+        acc = self_w * z
+        for s in range(idx.shape[1]):
+            acc = acc + w[:, s:s + 1] * z[idx[:, s]]
+        return acc
+
+    if noisy:
+        g_n, g_m = normal_pair()
+        nf = (amp / c) * g_n
+        upd_px = gather_mix(x + nf) + (mscale * sigma_m) * g_m - selfs * nf
+        return x + eta * listen * (upd_px - x)
+    return x + eta * listen * (gather_mix(x) - x)
+
+
+def dp_mix_sparse_jnp(p2, g2, seed, off, scal, amp, selfs, mscale, listen,
+                      idx, w, self_w, *, gamma, eta, noisy,
+                      counter_width=None, row0=0):
+    """Sparse-mixing lowering of the fused round (all backends lower this
+    via XLA gathers; there is no separate Pallas body — the gather
+    accumulation is already memory-bound and shape-static). Draws the
+    SAME counter-hash noise as ``dp_mix_fused_jnp`` on the identically
+    padded [Np, Dp] window — bitwise-equal fields, so the dense path stays
+    the reference at small N. ``row0`` offsets the noise counters for
+    worker-axis shards (repro.shard.worker)."""
+    Np, Dp = p2.shape
+    p = p2.astype(jnp.float32)
+    g = g2.astype(jnp.float32)
+    col = lambda v: v.reshape(Np, 1)
+    normal_pair = lambda: _normal_pair_hash(
+        (Np, Dp), Dp if counter_width is None else counter_width,
+        off.reshape(-1)[0], seed.reshape(-1)[0], row0=row0)
+    out = _sparse_round_math(p, g, normal_pair, scal[0], scal[1], col(amp),
+                             col(selfs), col(mscale), col(listen),
+                             idx, jnp.asarray(w, jnp.float32),
+                             col(self_w.astype(jnp.float32)),
+                             gamma=gamma, eta=eta, noisy=noisy)
+    return out.astype(p2.dtype)
 
 
 def _dp_mix_kernel(seed_ref, off_ref, scal_ref, amp_ref, selfs_ref,

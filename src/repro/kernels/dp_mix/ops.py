@@ -126,9 +126,73 @@ def dp_mix_round(p, g, seed, W, amp, c, sigma_m, *, gamma: float, eta: float,
     return out2[:N, :d].astype(p.dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("gamma", "eta", "noisy",
+                                             "block_d", "impl",
+                                             "counter_width"))
+def dp_mix_round_sparse(p, g, seed, sw, amp, c, sigma_m, *, gamma: float,
+                        eta: float, self_scale=None, m_scale=None,
+                        listen=None, noisy: bool = True, block_d=None,
+                        impl=None, col0=0, counter_width=None):
+    """One fused DWFL round mixed through a padded neighbor list
+    (repro.net.sparse.SparseW) — O(N·k·d) instead of the dense O(N²·d).
+
+    Same contract as :func:`dp_mix_round` with ``sw`` replacing ``W``.
+    The [Np, Dp] padding, counter stride, ``col0``/``counter_width``
+    window hooks, and the seed→counter mapping are IDENTICAL to the dense
+    wrapper, so both paths draw bitwise-equal noise fields and the dense
+    round remains the small-N reference (sparse results differ only by
+    slot-order summation ULPs — tests/test_sparse.py). ``impl`` accepts
+    "jnp"/None; the gather accumulation lowers through XLA on every
+    backend (no Pallas body — see dp_mix.dp_mix_sparse_jnp).
+    """
+    N, d = p.shape
+    if impl not in (None, "jnp"):
+        raise NotImplementedError(
+            f"sparse dp_mix has no {impl!r} lowering; use impl=None")
+    Np = _roundup(N, K.SUBLANES)
+    if block_d is None:
+        block_d = _roundup(d, K.LANES)
+    Dp = _roundup(d, block_d)
+
+    p2 = jnp.pad(p, ((0, Np - N), (0, Dp - d)))
+    g2 = jnp.pad(g, ((0, Np - N), (0, Dp - d)))
+    # padded rows: self-pointing zero-weight slots, zero self weight —
+    # they neither listen (listen pads 0) nor perturb real rows (no real
+    # row gathers an index ≥ N)
+    idx2 = jnp.pad(jnp.asarray(sw.idx, jnp.int32), ((0, Np - N), (0, 0)),
+                   constant_values=0)
+    w2 = jnp.pad(jnp.asarray(sw.w, jnp.float32), ((0, Np - N), (0, 0)))
+    self_w2 = _pad_vec(sw.self_w, N, Np)
+    c = jnp.asarray(c, jnp.float32).reshape(())
+    scal = jnp.stack([c, jnp.asarray(sigma_m, jnp.float32).reshape(())])
+    amp2 = _pad_vec(amp, N, Np)
+    selfs = _pad_vec(1.0 if self_scale is None else self_scale, N, Np)
+    if m_scale is None:
+        m_scale = jnp.full((N,), 1.0, jnp.float32) / (c * max(N - 1, 1))
+    mscale = _pad_vec(m_scale, N, Np)
+    lst = _pad_vec(1.0 if listen is None else listen, N, Np)
+    seed = jnp.asarray(seed, jnp.int32).reshape(1)
+    off = jnp.asarray(col0, jnp.int32).reshape(1)
+
+    out2 = K.dp_mix_sparse_jnp(p2, g2, seed, off, scal, amp2, selfs, mscale,
+                               lst, idx2, w2, self_w2, gamma=gamma, eta=eta,
+                               noisy=noisy, counter_width=counter_width)
+    return out2[:N, :d].astype(p.dtype)
+
+
 def dp_mix_round_plan(p, g, seed, plan, *, gamma: float, eta: float,
                       impl=None, col0=0, counter_width=None):
-    """MixPlan front end (exchange.plan_* → one fused round)."""
+    """MixPlan front end (exchange.plan_* → one fused round). Dispatches
+    on the plan's W: a dense [N, N] array runs the dense kernel, a
+    repro.net.sparse.SparseW neighbor list runs the O(N·k) sparse round."""
+    from repro.net.sparse import SparseW
+    if isinstance(plan.W, SparseW):
+        return dp_mix_round_sparse(
+            p, g, seed, plan.W, plan.amp, plan.c, plan.sigma_m,
+            gamma=gamma, eta=eta, self_scale=plan.self_scale,
+            m_scale=plan.m_scale, listen=plan.listen, noisy=plan.noisy,
+            impl=None if impl in ("pallas", "pallas_interpret") else impl,
+            col0=col0, counter_width=counter_width)
     return dp_mix_round(
         p, g, seed, plan.W, plan.amp, plan.c, plan.sigma_m,
         gamma=gamma, eta=eta, self_scale=plan.self_scale,

@@ -51,6 +51,28 @@ def make_host_mesh(n_data: int = 1, n_model: int = 1):
     return _make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_worker_mesh(n_worker_shards: int, n_model: Optional[int] = None,
+                     n_replicas: Optional[int] = None):
+    """Mesh with a ``workers`` axis for row-sharding the DWFL worker
+    population (repro.shard.worker — N beyond one device). Optionally
+    composes with the fleet's ``replicas`` axis and/or the flat buffer's
+    ``model`` column axis into the full 3-D
+    ("replicas", "workers", "model") mesh; the worker-sharded step only
+    communicates along ``workers``, leaving the other axes to their own
+    engines. Requires the product of the sizes in devices (CPU:
+    XLA_FLAGS=--xla_force_host_platform_device_count)."""
+    shape, axes = [], []
+    if n_replicas is not None:
+        shape.append(n_replicas)
+        axes.append("replicas")
+    shape.append(int(n_worker_shards))
+    axes.append("workers")
+    if n_model is not None:
+        shape.append(n_model)
+        axes.append("model")
+    return _make_mesh(tuple(shape), tuple(axes))
+
+
 def make_shard_mesh(n_model: int, n_replicas: Optional[int] = None):
     """Mesh for the model-sharded flat-buffer round (repro.shard):
     1-axis ("model",) for a single network (n_replicas=None), 2-D

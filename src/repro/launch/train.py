@@ -56,6 +56,13 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch-size", type=int, default=32,
                     help="per-worker batch size")
+    ap.add_argument("--hidden", type=int, default=0,
+                    help="override the arch's d_model (worker-scale runs "
+                         "shrink the model as N grows; 0 = arch default)")
+    ap.add_argument("--dataset-size", type=int, default=20000,
+                    help="classification dataset size (mlp archs); raise "
+                         "with --workers so every worker keeps a "
+                         "non-trivial local shard")
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--gamma", type=float, default=0.01)
     ap.add_argument("--eta", type=float, default=0.4)
@@ -75,6 +82,24 @@ def main(argv=None):
                          "iot_dense, vehicular, drone_sparse")
     ap.add_argument("--coherence-rounds", type=int, default=0,
                     help="override the scenario's fading block length")
+    ap.add_argument("--sparse-neighbors", type=int, default=0,
+                    help="dynamic + unit-disk scenarios: emit the per-round "
+                         "mixing matrix as a padded [N, k] neighbor list "
+                         "(repro.net.sparse.SparseW, degree cap k) and mix "
+                         "O(N*k) instead of O(N^2) — the worker-scale path "
+                         "(pair with e.g. --scenario mesh_sparse)")
+    ap.add_argument("--graph-fallback", action="store_true",
+                    help="bridge radius-isolated workers to their nearest "
+                         "active neighbor (one listen-only edge) instead of "
+                         "letting them sit out the round")
+    ap.add_argument("--worker-shards", type=int, default=1,
+                    help="shard the WORKER axis of the flat buffer over a "
+                         "'workers' mesh axis (repro.shard.worker): each "
+                         "device runs the grad pass + sparse mix for its "
+                         "own N/S rows. Requires --flat-buffer, "
+                         "--sparse-neighbors > 0, the scan engine, and S "
+                         "devices (CPU: XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=S).")
     ap.add_argument("--replicates", type=int, default=1,
                     help="dynamic only: batch R independent network "
                          "realizations through one compiled step "
@@ -141,12 +166,18 @@ def main(argv=None):
     cfg = get_arch(args.arch)
     if args.reduced and args.arch != "dwfl-paper":
         cfg = cfg.reduced()
+    if args.hidden > 0:
+        cfg = dataclasses.replace(cfg, d_model=args.hidden)
     W = args.workers
 
     if args.replicates > 1 and args.channel_model != "dynamic":
         raise SystemExit("--replicates requires --channel-model dynamic "
                          "(the static channel is baked into the compiled "
                          "step; there is nothing to batch)")
+    if args.sparse_neighbors > 0 and args.channel_model != "dynamic":
+        raise SystemExit("--sparse-neighbors requires --channel-model "
+                         "dynamic (the sparse neighbor list is the "
+                         "per-round unit-disk graph)")
 
     proto = P.ProtocolConfig(
         scheme=args.scheme, n_workers=W, gamma=args.gamma, eta=args.eta,
@@ -154,7 +185,9 @@ def main(argv=None):
         p_dbm=args.p_dbm, seed=args.seed, target_epsilon=args.epsilon,
         channel_model=args.channel_model, scenario=args.scenario,
         coherence_rounds=args.coherence_rounds, replicates=args.replicates,
-        flat_buffer=args.flat_buffer)
+        flat_buffer=args.flat_buffer,
+        sparse_neighbors=args.sparse_neighbors,
+        graph_fallback=args.graph_fallback)
     if proto.flat_buffer and args.scheme not in ("dwfl", "gossip"):
         raise SystemExit("--flat-buffer supports the mixing-family schemes "
                          "only (dwfl/gossip)")
@@ -191,9 +224,35 @@ def main(argv=None):
     if max_chunk_cols is not None and n_shards <= 1:
         raise SystemExit("--max-chunk-cols caps the sharded round's "
                          "collective chunks; it requires --model-shards > 1")
-    if args.remat and n_shards <= 1:
+    if args.remat and n_shards <= 1 and args.worker_shards <= 1:
         raise SystemExit("--remat rematerializes the sharded grad block; "
-                         "it requires --model-shards > 1")
+                         "it requires --model-shards > 1 or "
+                         "--worker-shards > 1")
+    worker_mesh = None
+    if args.worker_shards > 1:
+        if not (proto.flat_buffer and proto.sparse_neighbors > 0
+                and args.channel_model == "dynamic"):
+            raise SystemExit("--worker-shards requires --flat-buffer and "
+                             "--sparse-neighbors > 0 (only the sparse "
+                             "neighbor-list round has a worker-sharded "
+                             "lowering)")
+        if n_shards > 1 or args.replicates > 1 or args.no_scan:
+            raise SystemExit("--worker-shards composes with neither "
+                             "--model-shards, --replicates nor --no-scan "
+                             "yet")
+        if W % args.worker_shards != 0:
+            raise SystemExit(f"--workers {W} must divide evenly over "
+                             f"--worker-shards {args.worker_shards}")
+        if jax.device_count() < args.worker_shards:
+            raise SystemExit(f"--worker-shards {args.worker_shards} needs "
+                             f"that many devices; have "
+                             f"{jax.device_count()} (CPU: XLA_FLAGS="
+                             f"--xla_force_host_platform_device_count="
+                             f"{args.worker_shards})")
+        from repro.launch import mesh as mesh_lib
+        worker_mesh = mesh_lib.make_worker_mesh(args.worker_shards)
+        print(f"[train] worker shards: {args.worker_shards} x "
+              f"{W // args.worker_shards} rows on a 'workers' mesh")
     sim, fleet = None, None
     if args.replicates > 1:
         from repro.fleet import FleetEngine
@@ -217,7 +276,7 @@ def main(argv=None):
 
     key = jax.random.PRNGKey(args.seed)
     if cfg.family == "mlp":
-        x, y = classification_dataset(20000, seed=args.seed)
+        x, y = classification_dataset(args.dataset_size, seed=args.seed)
         parts = dirichlet_partition(y, W, alpha=args.dirichlet_alpha,
                                     seed=args.seed)
         batcher = FederatedBatcher(x, y, parts, args.batch_size, seed=args.seed)
@@ -251,6 +310,11 @@ def main(argv=None):
                                     max_chunk_cols=max_chunk_cols)
             unravel, unravel_row = spec.unravel, spec.unravel_row
             wp = spec.flatten(wp)
+    if worker_mesh is not None:
+        from jax.sharding import NamedSharding
+        from repro.shard.worker import worker_partition_spec
+        wp = jax.device_put(
+            wp, NamedSharding(worker_mesh, worker_partition_spec()))
     if spec is not None and spec.n_shards > 1:
         # place the padded buffer on a real model mesh when the devices
         # exist; otherwise shard logically inside one device's program
@@ -299,13 +363,42 @@ def main(argv=None):
     else:
         evaluate = jax.jit(P.make_eval_fn(cfg))
 
+    if (fleet is None and sim is not None
+            and (sim.sparse_k > 0 or sim.scenario.geometry.comm_radius > 0)):
+        # one host-side probe of the FIRST graph draw: radius-isolated
+        # workers silently sit out their rounds (listen = 0), which looks
+        # like slow convergence rather than a connectivity problem —
+        # surface the count up front. The probe key is fold_in-derived, so
+        # the training key stream is untouched.
+        from repro.net.sparse import SparseW, isolated_count
+        _, _, mask0, W0 = jax.jit(sim.round)(
+            jax.random.fold_in(key, 0x150), net_state)
+        if isinstance(W0, SparseW):
+            iso = int(np.asarray(isolated_count(W0, mask0)))
+        else:
+            off = (jnp.asarray(W0) > 0) & ~jnp.eye(W0.shape[0], dtype=bool)
+            iso = int(np.asarray(jnp.sum(
+                (jnp.sum(off, axis=1) == 0) & (jnp.asarray(mask0) > 0))))
+        if iso:
+            msg = (f"{iso}/{W} active workers isolated in the first graph "
+                   f"draw (comm_radius="
+                   f"{sim.scenario.geometry.comm_radius:g})"
+                   + ("" if args.graph_fallback
+                      else " — consider --graph-fallback"))
+            if runlog is not None:
+                runlog.warn(msg, isolated=iso, n_workers=W,
+                            graph_fallback=args.graph_fallback)
+            print(f"[train] WARNING: {msg}")
+
     # The eval batch is pinned ONCE, device-resident, before the loop.
     # MLP: the fixed per-worker eval slice (broadcast to [R, ...] once for
     # the fleet — rebuilding + re-broadcasting it per eval call was a
     # per-eval host sync). LM: one pinned draw — evaluating on the live
     # training stream would both train on the eval data and make the
     # training-batch sequence depend on --eval-every.
-    if cfg.family == "mlp":
+    if args.eval_every <= 0:
+        eval_batch = None       # worker-scale runs: no eval boundaries
+    elif cfg.family == "mlp":
         eval_batch = jax.tree_util.tree_map(jnp.asarray, batcher.full(256))
         if fleet is not None:
             eval_batch = jax.tree_util.tree_map(
@@ -352,8 +445,8 @@ def main(argv=None):
         body = TJ.make_round_body(
             cfg, proto, store, sim=None if fleet is not None else sim,
             fleet=fleet, flat=proto.flat_buffer, unravel_row=unravel_row,
-            spec=spec, shard_mesh=shard_mesh, telemetry=tele,
-            remat=args.remat)
+            spec=spec, shard_mesh=shard_mesh, worker_mesh=worker_mesh,
+            telemetry=tele, remat=args.remat)
         coher = (sim.scenario.fading.coherence_rounds
                  if sim is not None else None)
         chunk = (args.chunk_rounds if args.chunk_rounds > 0
@@ -478,7 +571,7 @@ def main(argv=None):
                 batch = jax.device_put(batcher.next())
                 with obs.no_implicit_transfers(guard_on):
                     wp, metrics = step(wp, batch, sk)
-            if t % args.eval_every == 0:
+            if args.eval_every > 0 and t % args.eval_every == 0:
                 log_eval(t, metrics, wp)
 
     if fleet is not None:
@@ -537,6 +630,13 @@ def main(argv=None):
     if args.checkpoint:
         meta = {"arch": args.arch, "scheme": args.scheme,
                 "epsilon": rep["epsilon_worst"]}
+        if proto.sparse_neighbors > 0:
+            # record the padded neighbor-list contract so a restore knows
+            # how the run's Ws were laid out (DESIGN.md §15)
+            from repro.net.sparse import SparseW
+            meta["sparse_neighbors"] = proto.sparse_neighbors
+            if isinstance(Ws, SparseW):
+                meta["sparse_w"] = Ws.layout_meta()
         if spec is not None:
             # flat-buffer runs checkpoint the buffer itself, with the
             # shard-layout metadata — restorable under ANY shard count

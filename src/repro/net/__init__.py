@@ -13,14 +13,17 @@ Entry points: ``ProtocolConfig(channel_model="dynamic", scenario=...)`` +
 """
 from repro.net.churn import ChurnConfig, ChurnState
 from repro.net.fading import FadingConfig, FadingState, rho_from_doppler
-from repro.net.geometry import GeometryConfig, GeometryState
+from repro.net.geometry import (GeometryConfig, GeometryState,
+                                sparse_metropolis)
 from repro.net.scenarios import SCENARIOS, Scenario, get_scenario
 from repro.net.simulator import NetState, NetworkSimulator, complete_mixing
+from repro.net.sparse import SparseW, isolated_count, sparsify_dense
 from repro.net.state import TracedChannelState, stack_states
 
 __all__ = [
     "ChurnConfig", "ChurnState", "FadingConfig", "FadingState",
     "GeometryConfig", "GeometryState", "NetState", "NetworkSimulator",
-    "SCENARIOS", "Scenario", "TracedChannelState", "complete_mixing",
-    "get_scenario", "rho_from_doppler", "stack_states",
+    "SCENARIOS", "Scenario", "SparseW", "TracedChannelState",
+    "complete_mixing", "get_scenario", "isolated_count", "rho_from_doppler",
+    "sparse_metropolis", "sparsify_dense", "stack_states",
 ]

@@ -128,20 +128,34 @@ def path_gain(cfg: GeometryConfig, pos: jnp.ndarray) -> jnp.ndarray:
 
 
 def adjacency(cfg: GeometryConfig, pos: jnp.ndarray,
-              mask=None) -> jnp.ndarray:
+              mask=None, fallback: bool = False) -> jnp.ndarray:
     """Unit-disk interference graph (symmetric, zero diagonal) as float
     [N, N]. comm_radius<=0 ⇒ complete graph. ``mask`` [N] (bool/0-1)
-    removes churned-out workers: they neither transmit nor listen."""
+    removes churned-out workers: they neither transmit nor listen.
+    ``fallback=True`` bridges each radius-isolated active worker to its
+    nearest active neighbor (symmetrized), so low-density draws never
+    silently train disconnected identity rows — see DESIGN.md §15."""
     n = pos.shape[0]
     if cfg.comm_radius <= 0.0:
         adj = jnp.ones((n, n), jnp.float32)
+        d2 = None
     else:
         d2 = jnp.sum((pos[:, None, :] - pos[None, :, :]) ** 2, axis=-1)
         adj = (d2 <= cfg.comm_radius ** 2).astype(jnp.float32)
     adj = adj * (1.0 - jnp.eye(n, dtype=jnp.float32))
+    active = jnp.ones((n,), bool) if mask is None else jnp.asarray(mask) > 0
     if mask is not None:
-        p = jnp.asarray(mask, jnp.float32)
+        p = active.astype(jnp.float32)
         adj = adj * p[:, None] * p[None, :]
+    if fallback and d2 is not None:
+        blocked = (jnp.eye(n, dtype=bool)
+                   | ~active[None, :] | ~active[:, None])
+        d2m = jnp.where(blocked, jnp.inf, d2)
+        nn = jnp.argmin(d2m, axis=1)
+        need = active & (jnp.sum(adj, axis=1) <= 0) \
+            & jnp.isfinite(jnp.min(d2m, axis=1))
+        fb = jax.nn.one_hot(nn, n, dtype=jnp.float32) * need[:, None]
+        adj = jnp.maximum(adj, jnp.maximum(fb, fb.T))
     return adj
 
 
@@ -155,6 +169,82 @@ def metropolis_weights(adj: jnp.ndarray) -> jnp.ndarray:
     pair = 1.0 + jnp.maximum(deg[:, None], deg[None, :])
     W = jnp.where(adj > 0, adj / pair, 0.0)
     return W + jnp.diag(1.0 - jnp.sum(W, axis=1))
+
+
+def _block_topk(pos: jnp.ndarray, k: int, *, radius: float,
+                mask=None, block: int = 0):
+    """k nearest (active, in-radius when radius>0) neighbors per worker,
+    computed over row blocks so the peak transient is [block, N] — never
+    the full [N, N] distance matrix. Returns (idx [N,k] i32, valid [N,k]
+    bool); invalid slots carry an arbitrary index (sanitize downstream).
+    Deterministic: lax.top_k breaks distance ties toward the lower index."""
+    n = pos.shape[0]
+    if not (0 < k <= n):
+        raise ValueError(f"degree cap k={k} must be in [1, N={n}]")
+    r2 = radius ** 2 if radius > 0.0 else None
+    active = None if mask is None else (jnp.asarray(mask) > 0)
+    cols = jnp.arange(n, dtype=jnp.int32)
+
+    def rows_topk(rows):                      # rows: [B] i32
+        d2 = jnp.sum((pos[rows][:, None, :] - pos[None, :, :]) ** 2, axis=-1)
+        bad = rows[:, None] == cols[None, :]
+        if r2 is not None:
+            bad |= d2 > r2
+        if active is not None:
+            bad |= ~active[None, :] | ~active[rows][:, None]
+        vals, idx = jax.lax.top_k(jnp.where(bad, -jnp.inf, -d2), k)
+        return idx.astype(jnp.int32), jnp.isfinite(vals)
+
+    if block <= 0 or block >= n:
+        return rows_topk(jnp.arange(n, dtype=jnp.int32))
+    nb = -(-n // block)
+    starts = jnp.arange(nb, dtype=jnp.int32) * block
+    idx, valid = jax.lax.map(
+        lambda s: rows_topk(jnp.clip(s + jnp.arange(block, dtype=jnp.int32),
+                                     0, n - 1)), starts)
+    return idx.reshape(nb * block, k)[:n], valid.reshape(nb * block, k)[:n]
+
+
+def sparse_metropolis(cfg: GeometryConfig, pos: jnp.ndarray, k: int,
+                      mask=None, *, fallback: bool = False,
+                      block: int = 0):
+    """Capped sparse Metropolis mixing matrix: the mutual-kNN ∩ unit-disk
+    graph (edge kept iff BOTH endpoints rank each other among their k
+    nearest in-radius active neighbors — symmetric, degree ≤ k,
+    deterministic) with the same Metropolis-Hastings weights as the dense
+    ``metropolis_weights``. comm_radius<=0 ⇒ pure mutual-kNN graph. With
+    k ≥ the max realized disk degree the capped graph IS the disk graph.
+
+    ``fallback=True`` gives each active worker whose capped row came out
+    empty a single listen-only edge to its nearest active neighbor
+    (ignoring the radius). That edge is one-way — the partner's fixed-k
+    list is not reopened — so strict double stochasticity is traded for
+    connectivity; opt-in, documented in DESIGN.md §15.
+
+    Everything is traced jnp; ``block`` bounds the distance transient to
+    [block, N]. Returns a ``repro.net.sparse.SparseW``."""
+    from repro.net.sparse import SparseW
+    n = pos.shape[0]
+    rows = jnp.arange(n, dtype=jnp.int32)
+    idx, valid = _block_topk(pos, k, radius=cfg.comm_radius,
+                             mask=mask, block=block)
+    idx = jnp.where(valid, idx, rows[:, None])
+    cand, vc = idx[idx], valid[idx]           # [N,k,k]
+    adj = valid & ((cand == rows[:, None, None]) & vc).any(-1)
+    if fallback:
+        nn_idx, nn_ok = _block_topk(pos, 1, radius=0.0,
+                                    mask=mask, block=block)
+        active = (jnp.ones((n,), bool) if mask is None
+                  else jnp.asarray(mask) > 0)
+        need = active & ~adj.any(-1) & nn_ok[:, 0]
+        idx = idx.at[:, 0].set(jnp.where(need, nn_idx[:, 0], idx[:, 0]))
+        adj = adj.at[:, 0].set(adj[:, 0] | need)
+    deg = jnp.sum(adj, axis=-1).astype(jnp.float32)
+    pair = 1.0 + jnp.maximum(deg[:, None], deg[idx])
+    w = jnp.where(adj, 1.0 / pair, 0.0).astype(jnp.float32)
+    return SparseW(idx=jnp.where(adj, idx, rows[:, None]).astype(jnp.int32),
+                   w=w,
+                   self_w=(1.0 - jnp.sum(w, axis=-1)).astype(jnp.float32))
 
 
 def connectivity_fraction(adj) -> float:

@@ -21,6 +21,10 @@ a scenario describes the radio environment, not the transmit policy.
     drone_sparse  sparse aerial swarm with line of sight: Rician K=6,
                   wide area, fast 3-D-ish motion, battery churn (drops
                   AND rejoins), sparse connectivity.
+    mesh_sparse   city-scale static mesh (Salama et al. style): radio
+                  range far below the area, so degree stays O(k) while N
+                  grows into the thousands — the scenario the sparse
+                  neighbor-list mixing path (sparse_neighbors>0) targets.
 """
 from __future__ import annotations
 
@@ -79,6 +83,20 @@ SCENARIOS: Dict[str, Scenario] = {
         churn=ChurnConfig(p_drop=0.0, p_join=1.0, straggler_rate=0.1),
         description="street-speed mobility: a fresh fading block every "
                     "round, km-scale path loss, deadline stragglers",
+    ),
+    "mesh_sparse": Scenario(
+        name="mesh_sparse",
+        fading=FadingConfig(kind="rayleigh", rho=0.9, coherence_rounds=10),
+        geometry=GeometryConfig(area=1000.0, placement="uniform",
+                                pl_exponent=2.8, ref_distance=1.0,
+                                ref_gain_db=0.0, mobility="static",
+                                comm_radius=60.0),
+        churn=ChurnConfig(p_drop=0.01, p_join=0.5, straggler_rate=0.02),
+        description="city-scale static mesh: thousands of nodes, radio "
+                    "range far below the deployment area — the worker-"
+                    "scale O(N·k) sparse-mixing regime (degree stays "
+                    "geometry-limited as N grows; pair with "
+                    "sparse_neighbors>0)",
     ),
     "drone_sparse": Scenario(
         name="drone_sparse",

@@ -67,7 +67,9 @@ class NetworkSimulator:
                  sigma_m: float = 1.0, noise_policy: str = "surplus",
                  beta_slack: float = 1.0, coherence_rounds: int = 0,
                  target_epsilon: float = 0.0, gamma: float = 0.05,
-                 clip: float = 1.0, delta: float = 1e-5):
+                 clip: float = 1.0, delta: float = 1e-5,
+                 sparse_k: int = 0, graph_fallback: bool = False,
+                 graph_block: int = 0):
         if coherence_rounds > 0:
             scenario = scenario.with_coherence(coherence_rounds)
         self.scenario = scenario
@@ -79,6 +81,26 @@ class NetworkSimulator:
         self.beta_slack = float(beta_slack)
         self.target_epsilon = float(target_epsilon)
         self.gamma, self.clip, self.delta = float(gamma), float(clip), float(delta)
+        # sparse_k > 0: rounds emit a padded neighbor-list W
+        # (repro.net.sparse.SparseW, degree cap k) built by the blocked
+        # capped mutual-kNN ∩ unit-disk Metropolis construction — the
+        # worker-scale O(N·k) representation. graph_fallback bridges
+        # radius-isolated workers (geometry.sparse_metropolis / adjacency);
+        # graph_block bounds the graph build's distance transient to
+        # [block, N] rows (0: auto — min(1024, N)).
+        self.sparse_k = int(sparse_k)
+        self.graph_fallback = bool(graph_fallback)
+        if self.sparse_k > self.n_workers:
+            raise ValueError(f"sparse_k={sparse_k} exceeds n_workers={n_workers}")
+        if self.sparse_k > 0 and scenario.geometry.comm_radius <= 0:
+            # a complete graph has no k-sparse structure to exploit; the
+            # builder still works (pure mutual-kNN), but require the caller
+            # to opt into a geometry-limited scenario explicitly
+            raise ValueError(
+                "sparse_k requires a unit-disk scenario (comm_radius > 0); "
+                f"scenario {scenario.name!r} has no interference radius")
+        self.graph_block = (int(graph_block) if graph_block
+                            else min(1024, self.n_workers))
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -126,9 +148,14 @@ class NetworkSimulator:
             geometry=geometry_lib.advance(scn.geometry, k_g, state.geometry),
             churn=churn_lib.advance(scn.churn, k_c, state.churn))
         mask = churn_lib.participation_mask(scn.churn, k_s, state.churn)
-        if scn.geometry.comm_radius > 0:
+        if self.sparse_k > 0:
+            W = geometry_lib.sparse_metropolis(
+                scn.geometry, state.geometry.pos, self.sparse_k, mask=mask,
+                fallback=self.graph_fallback, block=self.graph_block)
+        elif scn.geometry.comm_radius > 0:
             adj = geometry_lib.adjacency(scn.geometry, state.geometry.pos,
-                                         mask=mask)
+                                         mask=mask,
+                                         fallback=self.graph_fallback)
             W = geometry_lib.metropolis_weights(adj)
         else:
             W = complete_mixing(mask)
@@ -141,7 +168,8 @@ class NetworkSimulator:
         """Roll the network forward T rounds (channel-level only — no model
         work) and return the stacked per-round TracedChannelState
         ([T, ...] leaves), the [T, N] participation masks, and the
-        [T, N, N] mixing matrices. Feeds protocol.epsilon_report(
+        [T, N, N] mixing matrices (a stacked [T, N, k]-leaved SparseW when
+        sparse_k > 0). Feeds protocol.epsilon_report(
         channel_model="dynamic") — pass the Ws so the accounting uses the
         actual per-round masking neighborhoods."""
         if state is None:

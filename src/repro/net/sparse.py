@@ -1,0 +1,120 @@
+"""repro.net.sparse — padded neighbor-list mixing matrices for O(N·k) DWFL.
+
+The dense dynamic path materializes W as [N, N] and mixes with an
+[N,N]×[N,d] contraction — O(N²) memory and compute per round, which caps
+the worker count long before the ROADMAP's scale target. Unit-disk /
+Metropolis graphs are geometry-limited to a handful of neighbors, so the
+realized W is k-sparse; this module gives it a *static-shape* compressed
+form that flows through jit/scan/vmap with zero retraces:
+
+  ``SparseW(idx [N,k] int32, w [N,k] f32, self_w [N] f32)``
+
+  * ``k`` is a deterministic degree cap fixed at trace time: every row has
+    exactly k slots. Realized neighbors occupy the leading slots; padded
+    slots carry ``idx = own row`` and ``w = 0`` so a gather through them is
+    a harmless self-read with zero weight. Adjacency is ``w > 0``.
+  * The capped graph is the **mutual-kNN ∩ unit-disk** graph: an edge
+    (i, j) survives iff each endpoint ranks the other among its k nearest
+    in-radius active neighbors. That intersection is symmetric and has
+    degree ≤ k by construction, so Metropolis weights on it
+    (w = 1/(1+max(deg_i, deg_j)), self_w = 1 − Σ w) stay symmetric and
+    doubly stochastic — the same contract as ``geometry.metropolis_weights``.
+    With k ≥ the maximum realized disk degree the capped graph IS the disk
+    graph and SparseW.dense() reproduces the dense W (up to summation-order
+    ULPs in self_w).
+  * Mixing with a SparseW is k gathers of the [N, d] buffer — O(N·k·d)
+    flops, O(N·d) transients (kernels/dp_mix), vs the dense O(N²·d) GEMM.
+
+See DESIGN.md §15 for the full contract (padding, noise-stream invariance,
+when the dense path remains the bitwise reference).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SparseW:
+    """Padded neighbor-list mixing matrix (see module docstring).
+
+    Registered as a pytree with all-data fields, so it stacks along scan
+    outputs, vmaps over fleet replicates, and rides through
+    TracedChannelState-style plumbing exactly like a dense [N, N] array —
+    leaves may therefore carry leading batch axes; all shape helpers index
+    from the trailing dims.
+    """
+    idx: jnp.ndarray      # [..., N, k] int32; padded slots point at own row
+    w: jnp.ndarray        # [..., N, k] f32; padded slots are exactly 0
+    self_w: jnp.ndarray   # [..., N] f32 diagonal weight
+
+    @property
+    def n_workers(self) -> int:
+        return int(self.idx.shape[-2])
+
+    @property
+    def k(self) -> int:
+        return int(self.idx.shape[-1])
+
+    def valid(self) -> jnp.ndarray:
+        """[..., N, k] bool — realized (non-padded) neighbor slots."""
+        return self.w > 0
+
+    def off_degree(self) -> jnp.ndarray:
+        """[..., N] f32 count of realized off-diagonal neighbors — the same
+        quantity the dense path derives as ``sum((W>0) & ~eye, axis=1)``."""
+        return jnp.sum(self.valid(), axis=-1).astype(jnp.float32)
+
+    def dense(self) -> jnp.ndarray:
+        """Scatter back to the dense [N, N] W (small-N reference/debug;
+        O(N²) — never call inside the worker-scale round)."""
+        n = self.n_workers
+        if self.idx.ndim != 2:
+            raise ValueError("dense() expects unbatched [N, k] leaves; "
+                             f"got idx shape {self.idx.shape}")
+        rows = jnp.arange(n, dtype=self.idx.dtype)[:, None]
+        W = jnp.zeros((n, n), self.w.dtype)
+        W = W.at[rows, self.idx].add(self.w)   # padded slots add 0 to diag
+        return W + jnp.diag(self.self_w)
+
+    def layout_meta(self) -> dict:
+        """JSON-able layout descriptor for checkpoint metadata round-trips."""
+        return {"format": "padded-neighbor-v1",
+                "n_workers": self.n_workers, "k": self.k,
+                "pad": "self-index-zero-weight"}
+
+
+jax.tree_util.register_dataclass(SparseW,
+                                 data_fields=["idx", "w", "self_w"],
+                                 meta_fields=[])
+
+
+def sparsify_dense(W: jnp.ndarray, k: int) -> SparseW:
+    """Compress a dense mixing matrix to SparseW by keeping each row's k
+    largest off-diagonal weights (traced; deterministic — lax.top_k breaks
+    ties toward the lower index). Lossless iff every row has ≤ k nonzero
+    off-diagonal entries; the dropped mass is NOT folded back into self_w,
+    so a lossy cap breaks stochasticity — prefer building the graph capped
+    (``geometry.sparse_metropolis``) over capping after the fact."""
+    n = W.shape[-1]
+    offd = W * (1.0 - jnp.eye(n, dtype=W.dtype))
+    vals, idx = jax.lax.top_k(offd, k)
+    valid = vals > 0
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+    return SparseW(idx=jnp.where(valid, idx, rows).astype(jnp.int32),
+                   w=jnp.where(valid, vals, 0.0).astype(jnp.float32),
+                   self_w=jnp.diagonal(W).astype(jnp.float32))
+
+
+def isolated_count(sw: SparseW, mask: Optional[jnp.ndarray] = None):
+    """[...,] i32 number of listening-isolated workers (off-degree 0).
+    ``mask`` [N] (bool/0-1) excludes churned-out workers from the count —
+    a worker that is merely offline this round is not "isolated".
+    Traced; call via host round-trip for runlog warnings."""
+    iso = sw.off_degree() <= 0
+    if mask is not None:
+        iso = iso & (jnp.asarray(mask) > 0)
+    return jnp.sum(iso.astype(jnp.int32), axis=-1)

@@ -149,20 +149,34 @@ def _active_adjacency(W, n: int):
     return (jnp.asarray(W) > 0) & ~eye
 
 
+def _degree_and_neighbor_sum(W, n: int, v):
+    """(off-degree [N] f32, Σ_{k∈N(i)} v_k [N]) of a realized mixing
+    matrix — densely via the adjacency, or O(N·k) via the neighbor list
+    when ``W`` is a repro.net.sparse.SparseW (worker-scale telemetry must
+    not materialize [N, N])."""
+    from repro.net.sparse import SparseW
+    if isinstance(W, SparseW):
+        valid = W.valid()
+        return W.off_degree(), jnp.sum(valid * v[W.idx], axis=-1)
+    adj = _active_adjacency(W, n).astype(jnp.float32)
+    return jnp.sum(adj, axis=1), adj @ v
+
+
 def channel_scalars(spec: TelemetrySpec, chan, W=None) -> Dict[str, jnp.ndarray]:
     """The channel-derived telemetry scalars of one round (all traced).
 
     ``chan`` is a TracedChannelState (or anything with its duck-typed
     surface); ``W`` the round's realized [N, N] mixing matrix (None: the
-    paper's complete graph). Returns only the scalars ``spec`` enables,
-    ``epsilon`` excluded (that one needs the protocol's γ/g_max/δ —
-    see trajectory's instrumentation / privacy.epsilon_dwfl_traced)."""
+    paper's complete graph; a repro.net.sparse.SparseW neighbor list is
+    consumed O(N·k) without densifying). Returns only the scalars ``spec``
+    enables, ``epsilon`` excluded (that one needs the protocol's γ/g_max/δ
+    — see trajectory's instrumentation / privacy.epsilon_dwfl_traced)."""
     out: Dict[str, jnp.ndarray] = {}
     n = chan.n_workers
-    adj = None
+    s2 = jnp.asarray(chan.noise_scale, jnp.float32) ** 2
     if spec.snr_db or spec.participation:
-        adj = _active_adjacency(W, n).astype(jnp.float32)
-        listening = jnp.sum(adj, axis=1) > 0
+        n_i, mask_sum = _degree_and_neighbor_sum(W, n, s2 * chan.sigma ** 2)
+        listening = n_i > 0
     if spec.deep_fade:
         h2 = jnp.asarray(chan.h, jnp.float32) ** 2
         floor = 10.0 ** (spec.deep_fade_rel_db / 10.0) * jnp.median(h2)
@@ -173,10 +187,8 @@ def channel_scalars(spec: TelemetrySpec, chan, W=None) -> Dict[str, jnp.ndarray]
         # aligned aggregate at receiver i: n_i neighbors, each contributing
         # signal amplitude c — power (n_i c)²; masked by the neighbors' DP
         # noise + receiver AWGN (the same aggregate Thm 4.1 accounts)
-        n_i = jnp.sum(adj, axis=1)
         sig = (n_i * chan.c) ** 2
-        s2 = jnp.asarray(chan.noise_scale, jnp.float32) ** 2
-        noise = adj @ (s2 * chan.sigma ** 2) + chan.sigma_m ** 2
+        noise = mask_sum + chan.sigma_m ** 2
         snr = jnp.where(listening, sig / noise, jnp.nan)
         out["snr_db"] = 10.0 * jnp.log10(
             jnp.nanmean(jnp.where(listening, snr, jnp.nan)) + 1e-30)

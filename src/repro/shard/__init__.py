@@ -17,12 +17,21 @@ _ROUND_EXPORTS = (
     "shard_window_round",
 )
 
+_WORKER_EXPORTS = (
+    "make_worker_sharded_dynamic_flat_train_step",
+    "worker_partition_spec",
+    "worker_window_round",
+)
+
 __all__ = ["LANES", "Chunk", "ChunkPlan", "ShardLayout", "plan_chunks",
-           *_ROUND_EXPORTS]
+           *_ROUND_EXPORTS, *_WORKER_EXPORTS]
 
 
 def __getattr__(name):
     if name in _ROUND_EXPORTS:
         from repro.shard import round as _round
         return getattr(_round, name)
+    if name in _WORKER_EXPORTS:
+        from repro.shard import worker as _worker
+        return getattr(_worker, name)
     raise AttributeError(f"module 'repro.shard' has no attribute {name!r}")

@@ -1,0 +1,160 @@
+"""Accountant comparison: the Rényi-DP ledger vs δ-split advanced
+composition over the training horizon, written to ``BENCH_accounting.json``
+at the repo root so the ε-tightening trajectory is versioned alongside
+the code (ISSUE 10).
+
+    PYTHONPATH=src python -m benchmarks.accounting_bench [--smoke]
+
+Two sweeps over T (full: 32 … 1024, doubling; smoke: 32/128/512), on the
+seeded static paper channel (N = 10, worst listening receiver):
+
+* ``eps_gap`` — FIXED σ on the default noise floor (σ_m = 1, per-round
+  ε in the small regime the calibrated runs occupy): compose the
+  constant per-round Thm 4.1 budget T rounds under both accountants at
+  the same total δ = 1e-5; report ε_advanced / ε_rdp (how much budget
+  the loose ledger was burning).
+* ``sigma_saving`` — MATCHED total budget (ε_total = 10, δ = 1e-5) on a
+  LOW receiver noise floor (σ_m = 0.1, so the budget genuinely has to
+  be bought with DP noise rather than coming free from σ_m): invert
+  each accountant for the σ that spends exactly the budget over T
+  rounds (accounting.sigma_for_total_epsilon); report
+  σ_composition / σ_rdp > 1 — less injected DP noise at the SAME quoted
+  privacy, the utility face of the same gap.
+
+Every case also times the fused-carry conversion path
+(privacy.compose_from_moments on a widened [4+A] accumulator) — the
+accountant the scan carry pays for is microseconds, not milliseconds.
+
+The run asserts the ISSUE 10 acceptance: ≥ 15% ε reduction (gap ratio
+≥ 1.15) at T = 512, and the matching ≥ 15% σ saving at matched ε.
+Measured: ε gap ~9x and σ saving ~7x at T = 512 (the gap grows past
+~50x when the per-round ε reaches the ~0.2 regime where advanced
+composition's Σε(e^ε−1) linear term bites — see
+tests/test_accounting.py::test_rdp_beats_advanced_composition_growth).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT = ROOT / "BENCH_accounting.json"
+# CI --smoke numbers go to the gitignored scratch dir (never committed)
+OUT_SMOKE = ROOT / "bench_out" / "BENCH_accounting_smoke.json"
+
+TS_FULL = (32, 64, 128, 256, 512, 1024)
+TS_SMOKE = (32, 128, 512)
+N = 10
+GAMMA, G_MAX = 0.05, 1.0
+DELTA = 1e-5
+EPS_TOTAL = 10.0
+SEED = 20260809
+
+
+def _chan(sigma_m: float):
+    from repro.core.channel import ChannelConfig
+    return ChannelConfig(n_workers=N, p_dbm=40.0, sigma=1.0,
+                         sigma_m=sigma_m, seed=SEED).realize()
+
+
+def _case(T: int, chan_gap, chan_sig) -> dict:
+    from repro.core import accounting, privacy
+
+    # -- fixed σ: both accountants on the same realized trajectory -------
+    eps_round = float(privacy.epsilon_dwfl(GAMMA, G_MAX, chan_gap,
+                                           DELTA).max())
+    both = accounting.compose_trajectory(np.full(T, eps_round), DELTA)
+
+    # -- matched budget: σ each accountant needs for (ε_total, δ, T) -----
+    kw = dict(gamma=GAMMA, g_max=G_MAX, chan=chan_sig, delta_total=DELTA,
+              T=T)
+    s_rdp = accounting.sigma_for_total_epsilon(
+        EPS_TOTAL, accountant="rdp", **kw)
+    s_adv = accounting.sigma_for_total_epsilon(
+        EPS_TOTAL, accountant="composition", **kw)
+
+    # -- fused-carry conversion cost (the path train.py's watchdog pays) -
+    m = np.zeros(4 + accounting.N_ORDERS)
+    m[0] = T * eps_round
+    m[1] = T * eps_round ** 2
+    m[2] = T * eps_round * np.expm1(eps_round)
+    m[3] = T
+    m[4:] = T * np.asarray(accounting.ORDER_GRID) \
+        * accounting.rho_from_epsilon(eps_round, DELTA)
+    t0 = time.perf_counter()
+    reps = 200
+    for _ in range(reps):
+        privacy.compose_from_moments(m, DELTA, accountant="min")
+    convert_us = (time.perf_counter() - t0) / reps * 1e6
+
+    return {
+        "T": T,
+        "eps_round": eps_round,
+        "eps_advanced": both["epsilon_advanced"],
+        "eps_rdp": both["epsilon_rdp"],
+        "eps_gap": both["gap_ratio"],
+        "rdp_order": both["rdp_order"],
+        "sigma_composition": s_adv,
+        "sigma_rdp": s_rdp,
+        "sigma_saving": (s_adv / s_rdp if s_rdp > 0 else float("inf")),
+        "convert_us": convert_us,
+    }
+
+
+def main(smoke: bool = False):
+    from benchmarks.common import provenance
+    ts = TS_SMOKE if smoke else TS_FULL
+    chan_gap, chan_sig = _chan(sigma_m=1.0), _chan(sigma_m=0.1)
+    cases, rows = [], []
+    for T in ts:
+        c = _case(T, chan_gap, chan_sig)
+        cases.append(c)
+        rows.append(f"accounting/T{c['T']},{c['convert_us']:.1f},"
+                    f"{c['eps_gap']:.3f}")
+    # the ISSUE 10 acceptance, asserted where the artifact is made
+    # (smoke gates it too — the gap is analytic, not timing-noisy)
+    by_t = {c["T"]: c for c in cases}
+    if 512 in by_t:
+        assert by_t[512]["eps_gap"] >= 1.15, \
+            f"rdp < 15% tighter than advanced at T=512: {by_t[512]}"
+        assert by_t[512]["sigma_saving"] >= 1.15, \
+            f"rdp σ saving < 15% at matched ε, T=512: {by_t[512]}"
+    # rdp must never be looser at ANY horizon. (In this small-per-round-ε
+    # regime both totals scale ~sqrt(T), so the gap is a near-constant
+    # ~9x rather than widening — the widening regime is ε_round ≈ 0.2+,
+    # pinned in tests/test_accounting.py.)
+    gaps = [c["eps_gap"] for c in cases]
+    assert all(g >= 1.0 for g in gaps), f"rdp looser than advanced: {gaps}"
+    report = {
+        "bench": "accounting",
+        "n_workers": N,
+        "gamma": GAMMA,
+        "g_max": G_MAX,
+        "delta": DELTA,
+        "eps_total_matched": EPS_TOTAL,
+        "smoke": smoke,
+        "provenance": provenance(smoke),
+        "estimator": ("eps_gap = advanced/rdp at fixed sigma, same total "
+                      "delta (compose_trajectory); sigma_saving = "
+                      "composition/rdp calibrated sigma at matched "
+                      "(eps_total, delta, T); convert_us = mean host time "
+                      "of the fused-carry min-accountant conversion"),
+        "cases": cases,
+    }
+    out = OUT_SMOKE if smoke else OUT
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="T in {32, 128, 512} only; writes bench_out/"
+                         "BENCH_accounting_smoke.json")
+    args = ap.parse_args()
+    print("\n".join(main(smoke=args.smoke)))

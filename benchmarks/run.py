@@ -20,8 +20,9 @@ def main() -> None:
     from benchmarks import (fig2_power, fig3_workers, fig4_epsilon,
                             fig5_orthogonal, fig6_centralized,
                             privacy_table, kernel_bench, sampling_ablation,
-                            coherence_sweep, exchange_bench, fleet_sweep,
-                            trajectory_bench, workers_bench)
+                            accounting_bench, coherence_sweep,
+                            exchange_bench, fleet_sweep, trajectory_bench,
+                            workers_bench)
 
     suites = [
         ("fig2_power", lambda: fig2_power.main(args.steps)),
@@ -41,6 +42,10 @@ def main() -> None:
         # dp_mix round over N in 64..8192; asserts the >= 3x acceptance
         # at N >= 2048 and sub-quadratic sparse peak-memory growth)
         ("workers_bench", workers_bench.main),
+        # emits BENCH_accounting.json at the repo root (RDP vs advanced-
+        # composition ε gap and matched-ε σ saving over T in 32..1024;
+        # asserts the >= 15% acceptance at T = 512)
+        ("accounting_bench", accounting_bench.main),
         ("sampling_ablation", lambda: sampling_ablation.main(args.steps)),
         ("fleet_sweep", lambda: fleet_sweep.main(args.steps)),
         ("coherence_sweep", lambda: coherence_sweep.main(args.steps)),

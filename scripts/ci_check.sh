@@ -309,4 +309,58 @@ echo "== ISSUE 9 regression tests: sparse engine + worker sharding =="
 python -m pytest -q -m "not slow" tests/test_sparse.py
 fi
 
+echo "== ISSUE 10 smoke: fused RDP accountant (train 3 rounds, rdp <= composition) =="
+ACCT_RUNDIR="bench_out/runlogs_accounting"
+rm -rf "$ACCT_RUNDIR" && mkdir -p "$ACCT_RUNDIR"
+python -m repro.launch.train \
+    --arch dwfl-paper --steps 3 --workers 6 --batch-size 8 \
+    --channel-model dynamic --scenario iot_dense --flat-buffer \
+    --chunk-rounds 2 --eval-every 0 --accountant rdp \
+    --runlog-dir "$ACCT_RUNDIR"
+python - "$ACCT_RUNDIR" <<'EOF'
+import json, pathlib, sys
+run = next(pathlib.Path(sys.argv[1]).iterdir())
+reps = [json.loads(l) for l in (run / "events.jsonl").open()
+        if json.loads(l)["type"] == "epsilon_report"]
+assert len(reps) == 1, reps
+r = reps[0]
+# the fused Rényi ledger must quote a budget <= the legacy composition
+# quote, and the headline min-quote must spend exactly the protocol δ
+assert r["eps_rdp"] <= r["eps_composed"], r
+assert r["eps_total"] <= r["eps_rdp"] + 1e-12, r
+assert r["accountant"] == "rdp" and not r["saturated"], r
+print(f"{run.name}: rdp={r['eps_rdp']:.3g} <= "
+      f"composition={r['eps_composed']:.3g} "
+      f"(gap {r['accountant_gap']:.2g}x)")
+EOF
+
+echo "== ISSUE 10 smoke: rdp total-budget sigma calibration =="
+python -m repro.launch.train \
+    --arch dwfl-paper --steps 3 --workers 6 --batch-size 8 \
+    --channel-model dynamic --scenario iot_dense --flat-buffer \
+    --chunk-rounds 2 --eval-every 0 --accountant rdp --total-epsilon 4.0
+
+echo "== ISSUE 10 smoke: accountant gap artifact (T in 32/128/512) =="
+# asserts the >= 15% acceptance at T = 512 itself (the gap is analytic)
+python -m benchmarks.accounting_bench --smoke
+python - <<'EOF'
+import json
+rep = json.load(open("bench_out/BENCH_accounting_smoke.json"))
+cases = {c["T"]: c for c in rep["cases"]}
+assert set(cases) == {32, 128, 512}, rep
+assert cases[512]["eps_gap"] >= 1.15, cases[512]
+assert cases[512]["sigma_saving"] >= 1.15, cases[512]
+print("bench_out/BENCH_accounting_smoke.json:",
+      ", ".join(f"T={t}: eps gap {cases[t]['eps_gap']:.1f}x, "
+                f"sigma saving {cases[t]['sigma_saving']:.1f}x"
+                for t in (32, 128, 512)))
+EOF
+
+if [[ "$RUN_REGRESSION" == 1 ]]; then
+echo "== ISSUE 10 regression tests: accountant + calibration guard =="
+python -m pytest -q tests/test_accounting.py
+python -m pytest -q tests/test_obs.py::test_eps_moments_compose_like_heterogeneous \
+    tests/test_privacy.py::test_property_calibration_roundtrip
+fi
+
 echo "ci_check: OK"

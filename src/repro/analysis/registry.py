@@ -153,6 +153,9 @@ def _dynamic(name: str, flat: bool, telemetry: bool = False,
         from repro import obs
         tele = obs.TelemetrySpec()
         if getattr(tele, "epsilon", False):
+            # widened [4+A] accountant carry (advanced-composition moments
+            # + the per-order RDP ledger, core.accounting.ORDER_GRID) —
+            # the lint programs exercise the fused-accountant epilogue
             eps0 = obs.init_eps_moments(None)
     body = TJ.make_round_body(cfg, proto, store, sim=sim, spec=spec,
                               telemetry=tele)

@@ -1,0 +1,443 @@
+"""Rényi-DP (moments) accounting for the DWFL Gaussian mechanism.
+
+core.privacy quotes the paper's Theorem 4.1 per-round budgets and their
+Dwork-Roth advanced composition — a worst-case ledger that is loose by
+ORDERS of magnitude over long horizons (Chen et al., PAPERS.md). Every
+round of the over-the-air exchange is a Gaussian mechanism: sensitivity
+Δ = 2 γ g_max c (privacy.l2_sensitivity) masked by the per-receiver
+aggregate noise power agg² = Σ_{k∈N(i)} s_k² σ² + σ_m². Its Rényi
+divergence is exactly
+
+    ε(α) = α · ρ,      ρ = Δ² / (2 agg²)        (worst receiver)
+
+at EVERY order α, RDP composes ADDITIVELY over rounds, and the optimized
+RDP→(ε,δ) conversion (Canonne-Kamath-Steinke form)
+
+    ε(δ) = min_α [ ε_rdp(α) + log((α−1)/α) − (log δ + log α)/(α−1) ]
+
+turns the accumulated per-order ledger into a final budget that is far
+tighter than advanced composition at the same δ (BENCH_accounting.json
+measures the gap). Because composition is a per-order SUM, the whole
+accountant folds into the scan carry as one extra [A] accumulator next
+to the classic moments (obs.telemetry / core.trajectory) — ε trajectories
+under BOTH accountants come out of the compiled chunk for free.
+
+δ-split rule (DESIGN.md §16): advanced composition spends the requested
+total budget δ as δ_round = δ/(2T) per round plus δ' = δ/2 for the
+composition slack (split_delta); the Gaussian RDP ledger is PURE in δ —
+the conversion spends the whole δ directly, which is one of the two
+places the win comes from (the other: no per-round sqrt(log) constant).
+
+This module also carries the exact analytic Gaussian-mechanism curve
+(Balle & Wang 2018): the classic σ = sqrt(2 ln(1.25/δ)) Δ/ε constant is
+only a valid mechanism for ε ≤ 1, so calibration for ε > 1 routes
+through ``analytic_gaussian_sigma`` (privacy.gaussian_mechanism_sigma
+guards on this; the regression test pins the ε = 4 under-noising).
+
+Host math is float64 numpy; the traced per-round path
+(``rdp_dwfl_traced``) mirrors privacy.epsilon_dwfl_traced — jnp in, jnp
+out, SparseW/W=None/dense all supported through privacy._masking_sums.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+# Fixed RDP order grid. 25 orders spanning α ∈ [1.25, 512]: dense at the
+# low end (small per-round ρ over long horizons optimizes at large α,
+# large ρ at small α), geometric above 2. The grid length is part of the
+# telemetry-carry contract (obs.telemetry.init_eps_moments widens the
+# moment accumulator by exactly N_ORDERS) — and is deliberately NOT a
+# plausible worker count, so the baked [A] constant never pattern-matches
+# the weak-closure checker's realization heuristic (analysis/constants).
+ORDER_GRID: Tuple[float, ...] = (
+    1.25, 1.5, 1.75, 2.0, 2.5, 3.0, 3.5, 4.0, 5.0, 6.0, 8.0, 10.0,
+    12.0, 16.0, 20.0, 24.0, 32.0, 48.0, 64.0, 96.0, 128.0, 192.0,
+    256.0, 384.0, 512.0)
+N_ORDERS = len(ORDER_GRID)
+
+# classic-constant validity bound (Dwork-Roth Thm 3.22 requires ε < 1;
+# we allow the closed boundary where the constant is still standard)
+CLASSIC_EPS_MAX = 1.0
+
+
+def _orders(orders: Optional[Sequence[float]]) -> np.ndarray:
+    return np.asarray(ORDER_GRID if orders is None else orders, np.float64)
+
+
+# ---------------------------------------------------------------------------
+# exact analytic Gaussian mechanism (Balle & Wang 2018, Thm 8)
+# ---------------------------------------------------------------------------
+
+
+def _phi(x: float) -> float:
+    return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+
+
+def gaussian_delta(sensitivity: float, sigma: float, epsilon: float) -> float:
+    """EXACT δ(ε) of the Gaussian mechanism N(0, σ²) at sensitivity Δ
+    (Balle-Wang Thm 8):
+
+        δ = Φ(Δ/2σ − εσ/Δ) − e^ε Φ(−Δ/2σ − εσ/Δ)
+
+    This is the ground-truth curve the classic sqrt(2 ln(1.25/δ))/ε
+    constant approximates (validly only for ε ≤ 1) — the regression
+    tests for the old calibration evaluate it at ε = 4 (certificate gap)
+    and ε = 10 (outright under-noising at δ = 1e-5)."""
+    if sigma <= 0:
+        return 1.0
+    a = sensitivity / (2.0 * sigma)
+    b = epsilon * sigma / sensitivity
+    # second term in a stable form: e^ε · Φ(−(a+b)) via erfc
+    t2 = 0.5 * math.erfc((a + b) / math.sqrt(2.0))
+    t2 = math.exp(epsilon) * t2 if t2 > 0.0 else 0.0
+    return max(_phi(a - b) - t2, 0.0)
+
+
+def gaussian_epsilon(sensitivity: float, sigma: float, delta: float) -> float:
+    """Invert the exact curve: the TRUE ε the mechanism N(0, σ²) delivers
+    at δ (bisection on gaussian_delta, which is decreasing in ε)."""
+    lo, hi = 0.0, 1.0
+    while gaussian_delta(sensitivity, sigma, hi) > delta:
+        hi *= 2.0
+        if hi > 1e6:
+            return hi
+    for _ in range(80):
+        mid = 0.5 * (lo + hi)
+        if gaussian_delta(sensitivity, sigma, mid) > delta:
+            lo = mid
+        else:
+            hi = mid
+    return hi
+
+
+def analytic_gaussian_sigma(sensitivity: float, epsilon: float,
+                            delta: float) -> float:
+    """Smallest σ with gaussian_delta(Δ, σ, ε) ≤ δ — the EXACT calibration,
+    valid at every ε > 0 (the classic constant is not; see
+    privacy.gaussian_mechanism_sigma)."""
+    if epsilon <= 0:
+        raise ValueError(f"epsilon must be > 0, got {epsilon}")
+    if not (0.0 < delta < 1.0):
+        raise ValueError(f"delta must be in (0, 1), got {delta}")
+    # classic σ at ε' = min(ε, 1) is a valid mechanism for ε' ≤ 1, hence
+    # an upper bracket: for ε ≤ 1 directly, for ε > 1 because δ(ε) is
+    # decreasing in ε (classic-at-1 already meets the looser target)
+    hi = (math.sqrt(2.0 * math.log(1.25 / delta)) * sensitivity
+          / min(epsilon, 1.0))
+    lo = 1e-9 * sensitivity
+    for _ in range(80):
+        mid = 0.5 * (lo + hi)
+        if gaussian_delta(sensitivity, mid, epsilon) > delta:
+            lo = mid
+        else:
+            hi = mid
+    return hi
+
+
+def noise_multiplier(epsilon: float, delta: float) -> float:
+    """σ/Δ achieving (ε, δ)-DP: the classic sqrt(2 ln(1.25/δ))/ε constant
+    inside its ε ≤ 1 validity regime, the exact analytic calibration
+    beyond it. Every σ-calibration site in core.privacy routes its
+    constant through here (the ε > 1 bugfix)."""
+    if epsilon <= 0:
+        raise ValueError(f"epsilon must be > 0, got {epsilon}")
+    if epsilon <= CLASSIC_EPS_MAX:
+        return math.sqrt(2.0 * math.log(1.25 / delta)) / epsilon
+    return analytic_gaussian_sigma(1.0, epsilon, delta)
+
+
+# ---------------------------------------------------------------------------
+# per-round RDP (traced + host)
+# ---------------------------------------------------------------------------
+
+
+def rho_from_epsilon(eps, delta: float):
+    """Per-round Gaussian RDP rate ρ from the Thm 4.1 / Eqt. (11) budget
+    quoted at per-round δ: ε = (Δ/agg) sqrt(2 ln(1.25/δ)) and
+    ρ = Δ²/(2 agg²), so ρ = ε² / (4 ln(1.25/δ)) — exact, δ cancels out
+    of the ledger (ρ is a property of Δ/agg alone). Works on scalars and
+    arrays (host np or traced jnp)."""
+    return eps ** 2 / (4.0 * math.log(1.25 / delta))
+
+
+def rdp_dwfl_traced(gamma: float, g_max: float, chan, W=None):
+    """Worst-receiver per-round RDP vector ε(α) on the order grid — the
+    traced mirror of privacy.epsilon_dwfl_traced: jnp in, jnp [A] out,
+    consuming the round's realized TracedChannelState and mixing matrix
+    (None = complete graph; SparseW neighbor lists stay O(N·k) through
+    privacy._masking_sums). The worst receiver is the same at every order
+    (ε(α) = α Δ²/(2 agg²) is monotone in 1/agg²), so one max suffices;
+    a receiver that hears nothing contributes ρ = 0."""
+    import jax.numpy as jnp
+    from repro.core.privacy import _masking_sums
+    num = 2.0 * gamma * g_max * chan.c
+    mask_sum, listening = _masking_sums(chan, W)
+    agg2 = mask_sum * chan.sigma ** 2 + chan.sigma_m ** 2
+    rho = jnp.where(listening, num ** 2 / (2.0 * agg2), 0.0)
+    orders = jnp.asarray(ORDER_GRID, jnp.float32)
+    return orders * jnp.max(rho)
+
+
+def rdp_subsampled_gaussian(rho: float, q: float,
+                            orders: Optional[Sequence[float]] = None
+                            ) -> np.ndarray:
+    """Per-round RDP of the q-SUBSAMPLED Gaussian mechanism (rate ρ),
+    Mironov-Talwar-Zhang sampled-Gaussian moments at integer orders:
+
+        ε(α) = log( Σ_j C(α,j) q^j (1−q)^{α−j} e^{j(j−1)ρ} ) / (α−1)
+
+    evaluated in log-space. Fractional grid orders take the value at
+    ⌈α⌉ — valid since Rényi divergence is non-decreasing in the order —
+    so the bound stays conservative on the whole grid. q = 1 recovers
+    the unamplified α·ρ exactly; q is the WORST-CASE effective rate
+    (protocol.effective_participation), not the nominal one."""
+    al = _orders(orders)
+    if not (0.0 < q <= 1.0):
+        raise ValueError(f"participation rate q must be in (0, 1], got {q}")
+    if q == 1.0:
+        return al * rho
+    out = np.empty_like(al)
+    lq, l1q = math.log(q), math.log1p(-q)
+    for i, a in enumerate(al):
+        n = int(math.ceil(a))
+        terms = [math.lgamma(n + 1) - math.lgamma(j + 1)
+                 - math.lgamma(n - j + 1) + j * lq + (n - j) * l1q
+                 + j * (j - 1) * rho for j in range(n + 1)]
+        m = max(terms)
+        log_a = m + math.log(sum(math.exp(t - m) for t in terms))
+        out[i] = log_a / (n - 1) if n > 1 else log_a
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RDP -> (ε, δ) conversion and composition helpers
+# ---------------------------------------------------------------------------
+
+
+def rdp_to_epsilon(rdp_total, delta,
+                   orders: Optional[Sequence[float]] = None):
+    """Optimized RDP→(ε,δ) conversion, Canonne-Kamath-Steinke form:
+
+        ε(δ) = min_α [ ε_rdp(α) + log((α−1)/α) − (log δ + log α)/(α−1) ]
+
+    ``rdp_total`` is [..., A] (accumulated per-order budgets, e.g. the
+    widened telemetry carry's RDP block); ``delta`` a scalar or an array
+    broadcastable to the leading dims. Returns (ε [...], best order
+    [...]); an all-zero ledger converts to ε = 0 exactly (no rounds, no
+    loss). The classic log(1/δ)/(α−1) conversion is uniformly looser —
+    this form is what the reports and the σ calibration invert."""
+    al = _orders(orders)
+    r = np.asarray(rdp_total, np.float64)
+    if r.shape[-1] != al.shape[0]:
+        raise ValueError(f"rdp last axis must match the order grid "
+                         f"({al.shape[0]}), got shape {r.shape}")
+    d = np.asarray(delta, np.float64)
+    if np.any(d <= 0.0) or np.any(d >= 1.0):
+        raise ValueError(f"delta must be in (0, 1), got {delta}")
+    conv = (r + np.log1p(-1.0 / al)
+            - (np.log(d)[..., None] + np.log(al)) / (al - 1.0))
+    best = np.argmin(conv, axis=-1)
+    eps = np.maximum(np.min(conv, axis=-1), 0.0)
+    eps = np.where(np.sum(r, axis=-1) > 0.0, eps, 0.0)
+    order = al[best]
+    if eps.ndim == 0:
+        return float(eps), float(order)
+    return eps, order
+
+
+def split_delta(delta_total: float, T: int) -> Tuple[float, float]:
+    """δ-split rule for advanced composition against a TOTAL budget:
+    δ_round = δ/(2T) and δ' = δ/2, so T δ_round + δ' == δ exactly —
+    instead of the old fixed δ' = 1e-6 whose total T δ + δ' silently
+    overshoots the requested δ at large T. Raises when the requested
+    budget is infeasible (non-positive, δ ≥ 1, T < 1, or a per-round
+    share that underflows f64)."""
+    if not (0.0 < delta_total < 1.0):
+        raise ValueError(f"total delta budget must be in (0, 1), "
+                         f"got {delta_total}")
+    if T < 1:
+        raise ValueError(f"composition needs T >= 1 rounds, got {T}")
+    d_round = delta_total / (2.0 * T)
+    if d_round <= 0.0:
+        raise ValueError(f"delta budget {delta_total} infeasible at "
+                         f"T={T}: per-round share underflows")
+    return d_round, delta_total / 2.0
+
+
+def rescale_epsilon_delta(eps, delta_from: float, delta_to: float):
+    """Re-quote a Thm 4.1 Gaussian budget at a different per-round δ:
+    ε ∝ sqrt(ln(1.25/δ)) at fixed σ, so the exchange rate is exact."""
+    return eps * math.sqrt(math.log(1.25 / delta_to)
+                           / math.log(1.25 / delta_from))
+
+
+def compose_trajectory(eps_rounds, delta_total: float,
+                       delta_ref: Optional[float] = None,
+                       orders: Optional[Sequence[float]] = None) -> dict:
+    """Both accountants over a realized per-round worst-receiver ε
+    trajectory, quoted at the SAME total δ budget (apples to apples).
+
+    ``eps_rounds`` is [..., T] (composition along the last axis), with
+    the per-round budgets measured at per-round δ = ``delta_ref``
+    (default: delta_total — the protocol's configured δ). Advanced
+    composition spends the budget per the δ-split rule (split_delta,
+    re-quoting the per-round ε at its δ share); the Gaussian RDP ledger
+    is pure in δ and spends all of it in the conversion. Returns a dict
+    with both totals, their min, the winning order, and the gap."""
+    from repro.core import privacy
+    e = np.asarray(eps_rounds, np.float64)
+    T = e.shape[-1]
+    d_round, d_prime = split_delta(delta_total, T)
+    ref = delta_total if delta_ref is None else delta_ref
+    e_split = rescale_epsilon_delta(e, ref, d_round)
+    eps_adv, _ = privacy.compose_heterogeneous_batched(
+        e_split, d_round, d_prime)
+    rho = rho_from_epsilon(e, ref)                       # [..., T]
+    rdp_total = np.sum(rho, axis=-1)[..., None] * _orders(orders)
+    eps_rdp, order = rdp_to_epsilon(rdp_total, delta_total, orders)
+    eps_min = np.minimum(eps_adv, eps_rdp)
+    out = {
+        "epsilon_advanced": eps_adv,
+        "epsilon_rdp": eps_rdp,
+        "epsilon": eps_min,
+        "rdp_order": order,
+        "delta": delta_total,
+        "delta_round": d_round,
+        "delta_prime": d_prime,
+        "gap_ratio": np.where(eps_rdp > 0.0, eps_adv / np.maximum(
+            eps_rdp, 1e-300), 1.0),
+        "saturated": eps_adv >= privacy.EPS_SATURATION,
+    }
+    if np.ndim(eps_adv) == 0:
+        out = {k: (float(v) if isinstance(v, np.ndarray) and v.ndim == 0
+                   else v) for k, v in out.items()}
+        out["saturated"] = bool(out["saturated"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# σ calibration against a T-round TOTAL budget
+# ---------------------------------------------------------------------------
+
+
+def rho_total_for_epsilon(eps_total: float, delta: float,
+                          orders: Optional[Sequence[float]] = None) -> float:
+    """Largest total Gaussian-RDP rate Σ_t ρ_t whose converted budget
+    stays within (eps_total, δ) — bisection against rdp_to_epsilon
+    (monotone increasing in ρ)."""
+    if eps_total <= 0:
+        raise ValueError(f"epsilon budget must be > 0, got {eps_total}")
+    al = _orders(orders)
+
+    def conv(rho: float) -> float:
+        return rdp_to_epsilon(rho * al, delta, al)[0]
+
+    lo, hi = 0.0, 1.0
+    while conv(hi) < eps_total:
+        hi *= 2.0
+        if hi > 1e12:
+            break
+    for _ in range(80):
+        mid = 0.5 * (lo + hi)
+        if conv(mid) < eps_total:
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+def epsilon_round_for_total_advanced(eps_total: float, delta_total: float,
+                                     T: int) -> Tuple[float, float]:
+    """Invert δ-split advanced composition: the largest per-round ε
+    (quoted at its δ_round share) whose T-round composed total stays
+    within eps_total. Returns (ε_round, δ_round)."""
+    from repro.core import privacy
+    d_round, d_prime = split_delta(delta_total, T)
+
+    def total(e: float) -> float:
+        return privacy.compose_advanced(e, d_round, T, d_prime)[0]
+
+    lo, hi = 0.0, 1.0
+    while total(hi) < eps_total:
+        hi *= 2.0
+        if hi > 1e4:
+            break
+    for _ in range(80):
+        mid = 0.5 * (lo + hi)
+        if total(mid) < eps_total:
+            lo = mid
+        else:
+            hi = mid
+    return lo, d_round
+
+
+def _worst_masking_sum(chan, W=None) -> float:
+    """Smallest per-receiver masking power Σ_{k∈N(i)} s_k² over listening
+    receivers of a STATIC ChannelState (host mirror of the traced
+    privacy._masking_sums worst case; W=None is the complete graph)."""
+    s2 = np.asarray(chan.noise_scale, np.float64) ** 2
+    if W is None:
+        return float((s2.sum() - s2).min())
+    adj = (np.asarray(W) > 0).astype(np.float64)
+    np.fill_diagonal(adj, 0.0)
+    mask_sum = adj @ s2
+    listening = adj.sum(1) > 0
+    if not listening.any():
+        raise ValueError("no receiver hears anyone — total-budget "
+                         "calibration is undefined on an empty topology")
+    return float(mask_sum[listening].min())
+
+
+def sigma_for_total_epsilon(eps_total: float, gamma: float, g_max: float,
+                            chan, delta_total: float, T: int,
+                            accountant: str = "rdp", W=None,
+                            orders: Optional[Sequence[float]] = None
+                            ) -> float:
+    """Calibrate the DP noise std σ so the WORST receiver's T-round
+    composed budget equals (eps_total, delta_total) — the accountant-
+    aware inversion of the whole horizon, not the per-round Eqt. (11).
+
+    accountant="rdp": invert the CKS conversion for the total RDP rate,
+    spread it uniformly over T rounds (ρ_round = ρ_total/T — the static
+    channel is round-iid so uniform is optimal), and solve
+    Δ²/(2 ρ_round) = mask σ² + σ_m² for σ. accountant="composition":
+    invert δ-split advanced composition for the per-round ε and reuse
+    the (guarded) classic/analytic constant. Same matched budget, two
+    ledgers — the σ gap is the accountant's headline win
+    (BENCH_accounting.json)."""
+    if accountant not in ("rdp", "composition"):
+        raise ValueError(f"accountant must be 'rdp' or 'composition', "
+                         f"got {accountant!r}")
+    num = 2.0 * gamma * g_max * float(chan.c)
+    sigma_m2 = float(chan.cfg.sigma_m) ** 2
+    min_sum = _worst_masking_sum(chan, W)
+    if accountant == "rdp":
+        rho_round = rho_total_for_epsilon(eps_total, delta_total, orders) / T
+        agg2_req = num ** 2 / (2.0 * rho_round)
+    else:
+        e_round, d_round = epsilon_round_for_total_advanced(
+            eps_total, delta_total, T)
+        agg2_req = (num * noise_multiplier(e_round, d_round)) ** 2
+    need = agg2_req - sigma_m2
+    if need <= 0:
+        return 0.0  # receiver AWGN alone already meets the budget
+    return math.sqrt(need / min_sum)
+
+
+def sigma_for_rho_traced(rho_round, gamma: float, g_max: float, chan,
+                         W=None):
+    """Traced mirror of the rdp branch of sigma_for_total_epsilon: solve
+    the worst listening receiver's Δ²/(2 agg²) = ρ_round for σ on-device
+    (the dynamic-channel per-round re-calibration under --accountant rdp;
+    ρ_round is a host float — rho_total_for_epsilon(...)/T)."""
+    import jax.numpy as jnp
+    from repro.core.privacy import _masking_sums
+    num = 2.0 * gamma * g_max * chan.c
+    mask_sum, listening = _masking_sums(chan, W)
+    min_sum = jnp.min(jnp.where(listening, mask_sum, jnp.inf))
+    min_sum = jnp.where(jnp.isfinite(min_sum), min_sum, 1.0)
+    need = num ** 2 / (2.0 * rho_round) - chan.sigma_m ** 2
+    return jnp.sqrt(jnp.maximum(need, 0.0) / jnp.maximum(min_sum, 1e-30))

@@ -10,15 +10,38 @@ budgets; composition is provided for completeness.
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Optional
 
 import numpy as np
 
 from repro.core.channel import ChannelState
 
+# composition saturation ceiling: per-round budgets past ~700 overflow
+# e^ε − 1 in float64; any composed total at or beyond this value means
+# "privacy is gone" and is quoted as exactly EPS_SATURATION (with a
+# warning) instead of a silent inf — callers test `eps >= EPS_SATURATION`
+EPS_SATURATION = 1e6
+_EXPM1_MAX = 700.0  # e^x finite in f64 up to ~709
+
 
 def gaussian_mechanism_sigma(sensitivity: float, epsilon: float, delta: float) -> float:
-    """Lemma 4.1: σ >= sqrt(2 ln(1.25/δ)) Δ₂f / ε gives (ε, δ)-DP (ε < 1)."""
+    """σ achieving (ε, δ)-DP for a sensitivity-Δ Gaussian mechanism.
+
+    Lemma 4.1 / Dwork-Roth Thm 3.22: σ >= sqrt(2 ln(1.25/δ)) Δ₂f / ε —
+    a constant whose proof requires ε <= 1. Beyond that the formula
+    carries NO certificate, and since it shrinks as 1/ε while the exact
+    requirement plateaus at ~Δ/(2 sqrt(2 ln(1/δ))), it eventually
+    UNDER-noises outright — at δ = 1e-5 the crossover sits near ε ≈ 9,
+    and at ε = 10 the classic σ's true δ already exceeds the promise
+    (both regression-pinned in tests/test_accounting.py, along with the
+    ε = 4 certificate gap). ε > 1 therefore routes through the exact
+    analytic calibration (accounting.analytic_gaussian_sigma)."""
+    from repro.core import accounting
+    if epsilon <= 0:
+        raise ValueError(f"epsilon must be > 0, got {epsilon}")
+    if epsilon > accounting.CLASSIC_EPS_MAX:
+        return accounting.analytic_gaussian_sigma(sensitivity, epsilon, delta)
     return math.sqrt(2.0 * math.log(1.25 / delta)) * sensitivity / epsilon
 
 
@@ -73,11 +96,15 @@ def sigma_for_epsilon(epsilon: float, gamma: float, g_max: float,
     — which implies exactly this calibration.) Solves Eqt. (11) for σ using
     the worst-case receiver (largest ε_i == smallest aggregate noise).
     """
-    num = 2.0 * gamma * g_max * chan.c * math.sqrt(2.0 * math.log(1.25 / delta))
-    # need: num / sqrt(min_i Σ_{k≠i} s_k² σ² + σ_m²) <= ε
+    from repro.core import accounting
+    # need: aggregate noise std >= Δ · nm(ε, δ) at the worst receiver —
+    # nm is the classic sqrt(2 ln(1.25/δ))/ε inside its ε <= 1 validity
+    # regime and the exact analytic constant beyond it (ε > 1 bugfix)
+    agg_req = (2.0 * gamma * g_max * chan.c
+               * accounting.noise_multiplier(epsilon, delta))
     s2 = chan.noise_scale ** 2
     min_sum = (s2.sum() - s2).min()
-    need = (num / epsilon) ** 2 - chan.cfg.sigma_m ** 2
+    need = agg_req ** 2 - chan.cfg.sigma_m ** 2
     if need <= 0:
         return 0.0  # channel noise alone already provides ε
     return math.sqrt(need / min_sum)
@@ -94,10 +121,11 @@ def sigma_for_epsilon_orthogonal(epsilon: float, gamma: float, g_max: float,
     N−1 workers' noises). Calibrating the orthogonal run with the DWFL
     formula (the old behaviour) silently granted it a much weaker privacy
     level — and an unfair accuracy advantage."""
-    K2 = 2.0 * math.log(1.25 / delta)
-    num2 = (2.0 * gamma * g_max) ** 2 * (chan.h ** 2 * chan.P) * K2   # [N]
+    from repro.core import accounting
+    nm2 = accounting.noise_multiplier(epsilon, delta) ** 2
+    num2 = (2.0 * gamma * g_max) ** 2 * (chan.h ** 2 * chan.P) * nm2  # [N]
     s2 = chan.noise_scale ** 2                                        # [N]
-    need = (num2 / epsilon ** 2 - chan.cfg.sigma_m ** 2) / s2
+    need = (num2 - chan.cfg.sigma_m ** 2) / s2
     worst = float(np.max(need))
     if worst <= 0:
         return 0.0  # per-link AWGN alone already provides ε
@@ -119,9 +147,10 @@ def sigma_for_epsilon_topology(epsilon: float, gamma: float, g_max: float,
     listening = adj.sum(1) > 0
     if not listening.any():
         return 0.0                            # nobody receives anything
-    num = (2.0 * gamma * g_max * chan.c
-           * math.sqrt(2.0 * math.log(1.25 / delta)))
-    need = (num / epsilon) ** 2 - chan.cfg.sigma_m ** 2
+    from repro.core import accounting
+    agg_req = (2.0 * gamma * g_max * chan.c
+               * accounting.noise_multiplier(epsilon, delta))
+    need = agg_req ** 2 - chan.cfg.sigma_m ** 2
     if need <= 0:
         return 0.0
     return math.sqrt(need / float(mask_sum[listening].min()))
@@ -202,13 +231,17 @@ def sigma_for_epsilon_traced(epsilon: float, gamma: float, g_max: float,
     neighborhoods (fewer maskers ⇒ more σ than the complete-graph
     calibration)."""
     import jax.numpy as jnp
-    num = (2.0 * gamma * g_max * chan.c
-           * jnp.sqrt(2.0 * jnp.log(1.25 / delta)))
+    from repro.core import accounting
+    # ε and δ are static Python floats here, so the guarded classic/
+    # analytic constant is host-computed once and closes over the trace
+    # as a scalar — the ε > 1 fix applies to the traced path too
+    agg_req = (2.0 * gamma * g_max * chan.c
+               * accounting.noise_multiplier(epsilon, delta))
     mask_sum, listening = _masking_sums(chan, W)
     # worst listening receiver = smallest masking power among listeners
     min_sum = jnp.min(jnp.where(listening, mask_sum, jnp.inf))
     min_sum = jnp.where(jnp.isfinite(min_sum), min_sum, 1.0)  # nobody listens
-    need = (num / epsilon) ** 2 - chan.sigma_m ** 2
+    need = agg_req ** 2 - chan.sigma_m ** 2
     return jnp.sqrt(jnp.maximum(need, 0.0) / jnp.maximum(min_sum, 1e-30))
 
 
@@ -272,37 +305,94 @@ def compose_heterogeneous_batched(eps_rounds, delta_round: float,
     """Vectorized heterogeneous composition: ``eps_rounds`` is [..., T]
     (e.g. [R, T] per-replicate worst-receiver trajectories) and composition
     runs along the LAST axis, returning (ε_total [...], δ_total [...]) with
-    no Python loop — the accounting analogue of the fleet's batched step."""
+    no Python loop — the accounting analogue of the fleet's batched step.
+
+    Per-round budgets past ~700 (a deep-fade round with the masking noise
+    collapsed) overflow e^ε − 1 in float64; the composed total then
+    saturates at EPS_SATURATION — quoted exactly, with a warning — rather
+    than propagating a silent inf (values below the ceiling are exact)."""
     e = np.asarray(eps_rounds, np.float64)
     T = e.shape[-1]
-    eps = (np.sqrt(2.0 * math.log(1.0 / delta_prime) * np.sum(e ** 2, axis=-1))
-           + np.sum(e * np.expm1(e), axis=-1))
+    with np.errstate(over="ignore"):
+        lin = np.sum(e * np.expm1(np.minimum(e, _EXPM1_MAX)), axis=-1)
+        eps = (np.sqrt(2.0 * math.log(1.0 / delta_prime)
+                       * np.sum(e ** 2, axis=-1)) + lin)
+    sat = ~np.isfinite(eps) | (eps >= EPS_SATURATION)
+    if np.any(sat):
+        warnings.warn(
+            f"composed epsilon saturated at {EPS_SATURATION:g} "
+            f"(per-round budget overflow — privacy is exhausted)",
+            RuntimeWarning, stacklevel=2)
+        eps = np.where(sat, EPS_SATURATION, eps)
     delta = np.broadcast_to(
         np.float64(T * delta_round + delta_prime), eps.shape).copy()
     return eps, delta
 
 
 def compose_from_moments(moments, delta_round: float,
-                         delta_prime: float = 1e-6):
-    """Heterogeneous composition from the scan-carry moment accumulator.
+                         delta_prime: float = 1e-6,
+                         accountant: str = "composition", orders=None):
+    """Trajectory budget from the scan-carry moment accumulator.
 
-    ``moments`` is [..., 4] = [Σε, Σε², Σε(e^ε−1), T] (obs.telemetry's
-    TrajCarry.eps accumulator — the sufficient statistics of
-    compose_heterogeneous, folded round by round INSIDE the compiled
-    chunk). Returns (ε_total [...], δ_total [...]):
+    ``moments`` is [..., 4] = [Σε, Σε², Σε(e^ε−1), T] or the WIDENED
+    [..., 4+A] layout with the per-order RDP ledger appended
+    (obs.telemetry's TrajCarry.eps accumulator — the sufficient
+    statistics of BOTH accountants, folded round by round INSIDE the
+    compiled chunk). Returns (ε_total [...], δ_total [...]) under the
+    selected ``accountant``:
 
-        ε_total = sqrt(2 ln(1/δ') Σε²) + Σε(e^ε−1),
-        δ_total = T δ + δ'.
+    * "composition": ε = sqrt(2 ln(1/δ') Σε²) + Σε(e^ε−1) and
+      δ = T δ_round + δ' — matches compose_heterogeneous(_batched) on
+      the stacked per-round trajectory to float accumulation order
+      (tests/test_obs.py), saturating at EPS_SATURATION on overflow.
+    * "rdp": the Canonne-style conversion of the accumulated per-order
+      ledger (accounting.rdp_to_epsilon), quoted at the SAME total
+      δ = T δ_round + δ' so the two ledgers are comparable. Needs the
+      widened layout.
+    * "min": elementwise min of both — the quote reports always print.
 
-    Matches compose_heterogeneous(_batched) on the stacked per-round
-    trajectory to float accumulation order (tests/test_obs.py)."""
+    The exact δ-SPLIT composition against a total δ target needs the
+    per-round trajectory (the Σε(e^ε−1) moment cannot be re-quoted at a
+    different per-round δ after the fold) — that path lives in
+    accounting.compose_trajectory / protocol.epsilon_report."""
+    from repro.core import accounting
     m = np.asarray(moments, np.float64)
-    if m.shape[-1] != 4:
+    a = len(accounting.ORDER_GRID if orders is None else orders)
+    if m.shape[-1] not in (4, 4 + a):
         raise ValueError(f"moments last axis must be 4 "
-                         f"[Σε, Σε², Σε(e^ε−1), T], got shape {m.shape}")
-    eps = (np.sqrt(2.0 * math.log(1.0 / delta_prime) * m[..., 1])
-           + m[..., 2])
+                         f"[Σε, Σε², Σε(e^ε−1), T] or {4 + a} (with the "
+                         f"[{a}] RDP-order ledger), got shape {m.shape}")
     delta = m[..., 3] * delta_round + delta_prime
+
+    def _composition():
+        eps = (np.sqrt(2.0 * math.log(1.0 / delta_prime) * m[..., 1])
+               + m[..., 2])
+        sat = ~np.isfinite(eps) | (eps >= EPS_SATURATION)
+        if np.any(sat):
+            warnings.warn(
+                f"composed epsilon saturated at {EPS_SATURATION:g} "
+                f"(per-round budget overflow — privacy is exhausted)",
+                RuntimeWarning, stacklevel=3)
+            eps = np.where(sat, EPS_SATURATION, eps)
+        return eps
+
+    def _rdp():
+        if m.shape[-1] == 4:
+            raise ValueError("accountant='rdp' needs the widened "
+                             "[..., 4+A] moment layout "
+                             "(obs.init_eps_moments default)")
+        eps, _ = accounting.rdp_to_epsilon(m[..., 4:], delta, orders)
+        return np.asarray(eps, np.float64)
+
+    if accountant == "composition":
+        eps = _composition()
+    elif accountant == "rdp":
+        eps = _rdp()
+    elif accountant == "min":
+        eps = np.minimum(_composition(), _rdp())
+    else:
+        raise ValueError(f"accountant must be 'composition', 'rdp' or "
+                         f"'min', got {accountant!r}")
     if eps.ndim == 0:
         return float(eps), float(delta)
     return eps, delta
@@ -312,7 +402,8 @@ def epsilon_sampled(eps_round: float, delta_round: float, q: float):
     """Beyond-paper: privacy amplification by worker subsampling (a worker's
     data only enters rounds it transmits, rate q). Standard subsampling
     bound: ε' = ln(1 + q(e^ε − 1)), δ' = qδ."""
-    return math.log(1.0 + q * (math.exp(eps_round) - 1.0)), q * delta_round
+    return (math.log1p(q * math.expm1(min(eps_round, _EXPM1_MAX))),
+            q * delta_round)
 
 
 def compose_naive(eps_round: float, delta_round: float, T: int):
@@ -321,9 +412,17 @@ def compose_naive(eps_round: float, delta_round: float, T: int):
 
 def compose_advanced(eps_round: float, delta_round: float, T: int,
                      delta_prime: float = 1e-6):
-    """Dwork-Roth advanced composition (Thm 3.20)."""
+    """Dwork-Roth advanced composition (Thm 3.20). Saturates at
+    EPS_SATURATION (with a warning) instead of overflowing to inf when
+    the per-round budget exceeds the f64 e^ε range (~700)."""
     eps = (math.sqrt(2.0 * T * math.log(1.0 / delta_prime)) * eps_round
-           + T * eps_round * (math.exp(eps_round) - 1.0))
+           + T * eps_round * math.expm1(min(eps_round, _EXPM1_MAX)))
+    if not math.isfinite(eps) or eps >= EPS_SATURATION:
+        warnings.warn(
+            f"composed epsilon saturated at {EPS_SATURATION:g} "
+            f"(per-round budget overflow — privacy is exhausted)",
+            RuntimeWarning, stacklevel=2)
+        eps = EPS_SATURATION
     return eps, T * delta_round + delta_prime
 
 

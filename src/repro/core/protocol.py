@@ -94,6 +94,16 @@ class ProtocolConfig:
                                  # nearest active neighbor instead of
                                  # silently training identity rows
                                  # (net.geometry; DESIGN.md §15)
+    accountant: str = "composition"  # trajectory ledger for σ calibration
+                                 # and report headlines: composition
+                                 # (Dwork-Roth advanced) | rdp (Rényi
+                                 # moments; core.accounting, DESIGN §16)
+    target_total_epsilon: float = 0.0  # >0: calibrate σ once against the
+                                 # FULL ``horizon``-round budget under
+                                 # ``accountant`` (mutually exclusive
+                                 # with target_epsilon)
+    horizon: int = 0             # T for total-budget calibration (the
+                                 # planned number of training rounds)
 
     def mixing_matrix(self):
         from repro.core import topology as topo
@@ -125,6 +135,28 @@ class ProtocolConfig:
                     self.target_epsilon, self.gamma, self.clip, chan,
                     self.delta)
             chan = chan.with_sigma(max(sig, 1e-12))
+        if self.target_total_epsilon > 0:
+            # accountant-aware calibration against the FULL horizon: the
+            # rdp ledger needs materially less σ than inverted advanced
+            # composition at the same (ε_total, δ) — the end-to-end win
+            # BENCH_accounting measures (core.accounting, DESIGN §16)
+            from repro.core import accounting
+            if self.target_epsilon > 0:
+                raise ValueError("target_epsilon (per-round) and "
+                                 "target_total_epsilon (horizon) are "
+                                 "mutually exclusive")
+            if self.horizon < 1:
+                raise ValueError("target_total_epsilon needs horizon >= 1 "
+                                 "(the planned number of rounds)")
+            if self.scheme == "orthogonal":
+                raise ValueError("total-budget calibration covers the "
+                                 "mixing-family schemes only")
+            W = (None if self.topology == "complete"
+                 else self.mixing_matrix())
+            sig = accounting.sigma_for_total_epsilon(
+                self.target_total_epsilon, self.gamma, self.clip, chan,
+                self.delta, self.horizon, accountant=self.accountant, W=W)
+            chan = chan.with_sigma(max(sig, 1e-12))
         return chan
 
     def simulator(self):
@@ -142,7 +174,9 @@ class ProtocolConfig:
             target_epsilon=self.target_epsilon, gamma=self.gamma,
             clip=self.clip, delta=self.delta,
             sparse_k=self.sparse_neighbors,
-            graph_fallback=self.graph_fallback)
+            graph_fallback=self.graph_fallback,
+            target_total_epsilon=self.target_total_epsilon,
+            horizon=self.horizon, accountant=self.accountant)
 
 
 def sample_participation(key, n_workers: int, q: float) -> jnp.ndarray:
@@ -192,17 +226,32 @@ def epsilon_report(proto: ProtocolConfig, chan,
     matching per-round mixing matrices ``Ws`` ([T, N, N]) whenever the
     scenario has limited range or churn — each receiver is then credited
     only with the masking noise of workers it actually heard."""
+    from repro.core import accounting
     if proto.channel_model == "dynamic":
         eps_tn = np.asarray(privacy.epsilon_trajectory(
             proto.gamma, proto.clip, chan, proto.delta, Ws))  # [T, N]
         per_round = eps_tn.max(axis=1)                        # worst receiver
         ea, da = privacy.compose_heterogeneous(per_round, proto.delta)
+        # both accountants at the SAME total δ budget (= proto.delta,
+        # δ-split rule): the headline keys — epsilon_total is
+        # min(rdp, advanced) and never overshoots the requested δ the way
+        # the legacy fixed-δ' composition above does (kept for b/c)
+        both = accounting.compose_trajectory(per_round, proto.delta,
+                                             delta_ref=proto.delta)
         return {
             "epsilon_per_round": per_round,
             "epsilon_worst": float(per_round.max()),
             "epsilon_mean": float(per_round.mean()),
             "epsilon_trajectory_composed": ea,
             "delta_trajectory_composed": da,
+            "epsilon_advanced": float(both["epsilon_advanced"]),
+            "epsilon_rdp": float(both["epsilon_rdp"]),
+            "epsilon_total": float(both["epsilon"]),
+            "rdp_order": float(both["rdp_order"]),
+            "accountant_gap": float(both["gap_ratio"]),
+            "delta_total": float(both["delta"]),
+            "accountant": proto.accountant,
+            "saturated": bool(both["saturated"]),
             "sigma": np.asarray(chan.sigma),
             "rounds": int(per_round.shape[0]),
         }
@@ -250,6 +299,35 @@ def epsilon_report(proto: ProtocolConfig, chan,
     if T:
         ea, da = privacy.compose_advanced(e_round, d_round, T)
         rep["epsilon_T_advanced"], rep["delta_T_advanced"] = ea, da
+        # accountant-aware T-round quotes at the SAME total δ budget
+        # (= proto.delta, δ-split rule — the legacy keys above keep the
+        # old fixed-δ' semantics, whose T δ + δ' total silently
+        # overshoots the configured δ at large T). The RDP ledger is
+        # pure in δ; with sampling it uses the subsampled-Gaussian
+        # moments at the worst-case effective rate.
+        d_r, d_p = accounting.split_delta(proto.delta, T)
+        rho_r = accounting.rho_from_epsilon(
+            float(eps_scheme.max()), proto.delta)
+        if samples:
+            rdp_round = accounting.rdp_subsampled_gaussian(rho_r, q_eff)
+            e_split, d_split = privacy.epsilon_sampled(
+                accounting.rescale_epsilon_delta(
+                    float(eps_scheme.max()), proto.delta, d_r),
+                d_r, q_eff)
+        else:
+            rdp_round = np.asarray(accounting.ORDER_GRID) * rho_r
+            e_split, d_split = accounting.rescale_epsilon_delta(
+                float(eps_scheme.max()), proto.delta, d_r), d_r
+        ea_split, _ = privacy.compose_advanced(e_split, d_split, T, d_p)
+        er, order = accounting.rdp_to_epsilon(T * rdp_round, proto.delta)
+        rep["epsilon_T_advanced_split"] = ea_split
+        rep["epsilon_T_rdp"] = er
+        rep["epsilon_T_total"] = min(er, ea_split)
+        rep["rdp_order"] = order
+        rep["accountant_gap"] = ea_split / max(er, 1e-300)
+        rep["delta_T_total"] = proto.delta
+        rep["accountant"] = proto.accountant
+        rep["saturated"] = ea_split >= privacy.EPS_SATURATION
     return rep
 
 

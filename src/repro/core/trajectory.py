@@ -52,12 +52,14 @@ class TrajCarry(NamedTuple):
     ``params`` is the worker-stacked pytree ([W, ...] leaves; [R, W, ...]
     for the fleet) or the persistent flat buffer ([W, d] / [R, W, d]) in
     flat mode. ``net`` is the repro.net NetState (stacked for the fleet),
-    or None on the static-channel path. ``eps`` is the running ε
-    composition-moment accumulator ([Σε, Σε², Σε(e^ε−1), T] — [4] f32,
-    [R, 4] for the fleet; obs.telemetry.init_eps_moments) when telemetry
-    with ε accounting is enabled, else None — the composed trajectory
-    budget then comes out of the compiled chunk for free
-    (privacy.compose_from_moments)."""
+    or None on the static-channel path. ``eps`` is the running accountant
+    accumulator ([Σε, Σε², Σε(e^ε−1), T | Σε(α₁..α_A)] — [4+A] f32 with
+    the per-order RDP ledger appended (A = accounting.N_ORDERS; the
+    legacy [4] layout still composes), [R, 4+A] for the fleet;
+    obs.telemetry.init_eps_moments) when telemetry with ε accounting is
+    enabled, else None — the composed trajectory budget under BOTH
+    accountants then comes out of the compiled chunk for free
+    (privacy.compose_from_moments ``accountant=`` dispatch)."""
     key: jnp.ndarray
     params: Any
     net: Any = None
@@ -241,7 +243,7 @@ def _maybe_instrument(body: Callable, tele, proto, *, fleet=None) -> Callable:
     # evaluate them HERE, eagerly, so the compiled epilogue only embeds
     # the resulting constants (zero per-round work for those fields)
     static_vals: dict = {}
-    static_eps = None
+    static_eps = static_rdp = None
     if needs_chan and proto.channel_model != "dynamic":
         from repro.net.state import TracedChannelState
         static_chan = TracedChannelState.from_static(proto.channel())
@@ -252,6 +254,9 @@ def _maybe_instrument(body: Callable, tele, proto, *, fleet=None) -> Callable:
         if tele.epsilon:
             static_eps = jnp.asarray(
                 tele_lib.epsilon_round(proto, static_chan, static_W),
+                jnp.float32)
+            static_rdp = jnp.asarray(
+                tele_lib.rdp_round(proto, static_chan, static_W),
                 jnp.float32)
 
     def instrumented(carry: TrajCarry):
@@ -273,7 +278,11 @@ def _maybe_instrument(body: Callable, tele, proto, *, fleet=None) -> Callable:
         k = jax.tree_util.tree_leaves(ys)[0].shape[0]
         lead = (k,) if R is None else (k, R)
         parts = [ys["telemetry"]] if in_fields else []
-        eps = None
+        eps = rdp = None
+        acc = carry.eps
+        # carry width is static per program: [4] folds composition
+        # moments only, [4+A] also folds the per-order RDP ledger
+        wide = acc is not None and acc.shape[-1] > 4
         if needs_chan:
             chans, Ws = ys.get("chan"), ys.get("W")
             if chans is None:                     # static: constants
@@ -281,15 +290,21 @@ def _maybe_instrument(body: Callable, tele, proto, *, fleet=None) -> Callable:
                         for f, v in static_vals.items()}
                 if static_eps is not None:
                     eps = jnp.broadcast_to(static_eps, lead)
+                    if wide:
+                        rdp = jnp.broadcast_to(static_rdp,
+                                               lead + static_rdp.shape)
             else:
                 def one(ch, w):
                     v = tele_lib.channel_scalars(tele, ch, w)
                     if tele.epsilon:
                         v["epsilon"] = tele_lib.epsilon_round(proto, ch, w)
+                        if wide:
+                            v["_rdp"] = tele_lib.rdp_round(proto, ch, w)
                     return v
                 fn = jax.vmap(one) if R is None else jax.vmap(jax.vmap(one))
                 vals = fn(chans, Ws)
                 eps = vals.get("epsilon")
+                rdp = vals.pop("_rdp", None)      # [K, A] / [K, R, A]
             if eps is not None:
                 vals["epsilon"] = eps
             parts.extend(jnp.asarray(vals[f], jnp.float32)[..., None]
@@ -298,11 +313,13 @@ def _maybe_instrument(body: Callable, tele, proto, *, fleet=None) -> Callable:
             tele_cols = (parts[0] if len(parts) == 1
                          else jnp.concatenate(parts, axis=-1))
             ys = dict(ys, telemetry=tele_cols)
-        acc = carry.eps
         if acc is not None and eps is not None:
             e = jnp.asarray(eps, jnp.float32)
             upd = jnp.stack([e, e ** 2, e * jnp.expm1(e),
                              jnp.ones_like(e)], axis=-1)
+            if wide:
+                upd = jnp.concatenate(
+                    [upd, jnp.asarray(rdp, jnp.float32)], axis=-1)
             carry = TrajCarry(carry.key, carry.params, carry.net,
                               acc + jnp.sum(upd, axis=0))
         return carry, ys

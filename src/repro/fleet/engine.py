@@ -287,13 +287,21 @@ def fleet_epsilon_report(proto, chans, Ws=None) -> dict:
     worst receiver per round, heterogeneous composition per replicate, and
     across-replicate mean/CI of the composed budget. ``chans`` leaves are
     [R, T, ...] (FleetEngine.trajectory or stack_rounds of logged rounds)."""
-    from repro.core import privacy
+    from repro.core import accounting, privacy
     eps_rtn = np.asarray(privacy.epsilon_trajectory_batched(
         proto.gamma, proto.clip, chans, proto.delta, Ws))      # [R, T, N]
     per_round = eps_rtn.max(axis=2)                            # [R, T]
     eps_c, delta_c = privacy.compose_heterogeneous_batched(
         per_round, proto.delta)                                # [R], [R]
     mean, ci = mean_ci(eps_c)
+    # both accountants per replicate at the SAME total δ budget
+    # (δ-split rule; core.accounting) — epsilon_total is min(rdp,
+    # advanced), the quote the fleet reports lead with
+    both = accounting.compose_trajectory(per_round, proto.delta,
+                                         delta_ref=proto.delta)
+    adv_mean, adv_ci = mean_ci(both["epsilon_advanced"])
+    rdp_mean, rdp_ci = mean_ci(both["epsilon_rdp"])
+    tot_mean, tot_ci = mean_ci(both["epsilon"])
     return {
         "replicates": int(eps_rtn.shape[0]),
         "rounds": int(eps_rtn.shape[1]),
@@ -303,4 +311,17 @@ def fleet_epsilon_report(proto, chans, Ws=None) -> dict:
         "delta_composed": float(delta_c.reshape(-1)[0]),
         "epsilon_composed_mean": mean,
         "epsilon_composed_ci95": ci,
+        "epsilon_advanced_per_replicate": both["epsilon_advanced"],  # [R]
+        "epsilon_rdp_per_replicate": both["epsilon_rdp"],      # [R]
+        "epsilon_total_per_replicate": both["epsilon"],        # [R]
+        "epsilon_advanced_mean": adv_mean,
+        "epsilon_advanced_ci95": adv_ci,
+        "epsilon_rdp_mean": rdp_mean,
+        "epsilon_rdp_ci95": rdp_ci,
+        "epsilon_total_mean": tot_mean,
+        "epsilon_total_ci95": tot_ci,
+        "accountant_gap": float(np.mean(both["gap_ratio"])),
+        "delta_total": float(both["delta"]),
+        "accountant": proto.accountant,
+        "saturated": bool(np.any(both["saturated"])),
     }

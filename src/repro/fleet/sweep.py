@@ -58,6 +58,9 @@ class ScenarioGrid:
     clip: float = 1.0
     coherence_rounds: int = 0
     seed: int = 0
+    # privacy ledger used for the quoted per-cell budget ("composition" |
+    # "rdp"); the fleet report computes both, rows carry both plus the gap
+    accountant: str = "composition"
 
     def points(self):
         for scn, n, p, eps in itertools.product(
@@ -139,7 +142,7 @@ def run_point(grid: ScenarioGrid, point: Dict, seed: int = 0,
         eta=grid.eta, clip=grid.clip, p_dbm=point["p_dbm"], seed=seed,
         target_epsilon=point["target_epsilon"], channel_model="dynamic",
         scenario=point["scenario"], coherence_rounds=grid.coherence_rounds,
-        replicates=grid.replicates)
+        replicates=grid.replicates, accountant=grid.accountant)
     fleet = FleetEngine(proto)
     cfg, next_batch, full_batch, init_params = _setup_fleet_task(fleet, seed)
 
@@ -192,6 +195,12 @@ def run_point(grid: ScenarioGrid, point: Dict, seed: int = 0,
         "epsilon_composed_ci95": eps_rep["epsilon_composed_ci95"],
         "epsilon_round_worst": eps_rep["epsilon_worst"],
         "delta_composed": eps_rep["delta_composed"],
+        "epsilon_rdp_mean": eps_rep["epsilon_rdp_mean"],
+        "epsilon_total_mean": eps_rep["epsilon_total_mean"],
+        "epsilon_total_ci95": eps_rep["epsilon_total_ci95"],
+        "delta_total": eps_rep["delta_total"],
+        "accountant": grid.accountant,
+        "accountant_gap": eps_rep["accountant_gap"],
     }
 
 
@@ -220,6 +229,7 @@ def run_grid(grid: ScenarioGrid, seed: Optional[int] = None,
                 f"acc={row['acc_mean']:.3f}±{row['acc_ci95']:.3f} "
                 f"eps_T={row['epsilon_composed_mean']:.3g}"
                 f"±{row['epsilon_composed_ci95']:.2g} "
+                f"rdp={row['epsilon_rdp_mean']:.3g} "
                 f"({row['us_per_round']:.0f}us/round x R={row['replicates']})")
     out = {"grid": asdict(grid), "rows": rows}
     if json_path:
@@ -239,6 +249,10 @@ def main(argv=None):
     ap.add_argument("--replicates", type=int, default=8)
     ap.add_argument("--steps", type=int, default=40)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--accountant", default="composition",
+                    choices=["composition", "rdp"],
+                    help="ledger quoted per cell (rows always carry "
+                         "both composed and rdp budgets + the gap)")
     ap.add_argument("--no-transfer-guard", action="store_true",
                     help="disable jax.transfer_guard('disallow') around "
                          "the timed per-cell loops")
@@ -252,7 +266,8 @@ def main(argv=None):
         n_workers=tuple(int(v) for v in args.workers.split(",")),
         p_dbm=tuple(float(v) for v in args.p_dbm.split(",")),
         target_epsilon=tuple(float(v) for v in args.epsilon.split(",")),
-        replicates=args.replicates, steps=args.steps, seed=args.seed)
+        replicates=args.replicates, steps=args.steps, seed=args.seed,
+        accountant=args.accountant)
     runlog = None
     if args.runlog_dir is not None:
         runlog = obs.RunLog.open_under(args.runlog_dir, kind="sweep",

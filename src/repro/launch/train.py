@@ -69,6 +69,19 @@ def main(argv=None):
     ap.add_argument("--clip", type=float, default=1.0)
     ap.add_argument("--epsilon", type=float, default=1.0,
                     help="per-round target epsilon (0 = fixed sigma)")
+    ap.add_argument("--total-epsilon", type=float, default=0.0,
+                    help="whole-run (eps, delta) budget over all "
+                         "--steps + 1 rounds; sigma is calibrated per "
+                         "round against it under --accountant "
+                         "(overrides --epsilon; dynamic channel only)")
+    ap.add_argument("--accountant", default="composition",
+                    choices=["composition", "rdp"],
+                    help="privacy ledger: 'composition' = delta-split "
+                         "advanced composition; 'rdp' = Renyi-DP moments "
+                         "on core.accounting's order grid (tighter; "
+                         "DESIGN.md §16). Picks both the watchdog/"
+                         "report quote and the --total-epsilon sigma "
+                         "calibration")
     ap.add_argument("--sigma", type=float, default=1.0)
     ap.add_argument("--sigma-m", type=float, default=1.0)
     ap.add_argument("--p-dbm", type=float, default=60.0)
@@ -179,15 +192,28 @@ def main(argv=None):
                          "dynamic (the sparse neighbor list is the "
                          "per-round unit-disk graph)")
 
+    if args.total_epsilon > 0 and args.channel_model != "dynamic":
+        raise SystemExit("--total-epsilon calibrates sigma against the "
+                         "realized per-round neighborhoods; it requires "
+                         "--channel-model dynamic (static runs: invert "
+                         "accounting.sigma_for_total_epsilon by hand)")
     proto = P.ProtocolConfig(
         scheme=args.scheme, n_workers=W, gamma=args.gamma, eta=args.eta,
         clip=args.clip, sigma=args.sigma, sigma_m=args.sigma_m,
-        p_dbm=args.p_dbm, seed=args.seed, target_epsilon=args.epsilon,
+        p_dbm=args.p_dbm, seed=args.seed,
+        target_epsilon=0.0 if args.total_epsilon > 0 else args.epsilon,
         channel_model=args.channel_model, scenario=args.scenario,
         coherence_rounds=args.coherence_rounds, replicates=args.replicates,
         flat_buffer=args.flat_buffer,
         sparse_neighbors=args.sparse_neighbors,
-        graph_fallback=args.graph_fallback)
+        graph_fallback=args.graph_fallback,
+        accountant=args.accountant,
+        target_total_epsilon=args.total_epsilon,
+        horizon=args.steps + 1 if args.total_epsilon > 0 else 0)
+    if args.total_epsilon > 0:
+        print(f"[train] total budget: eps={args.total_epsilon} "
+              f"delta={proto.delta} over {args.steps + 1} rounds "
+              f"(accountant={args.accountant})")
     if proto.flat_buffer and args.scheme not in ("dwfl", "gossip"):
         raise SystemExit("--flat-buffer supports the mixing-family schemes "
                          "only (dwfl/gossip)")
@@ -494,9 +520,22 @@ def main(argv=None):
                 e_c, d_c = privacy.compose_from_moments(m, proto.delta)
                 # fleet: worst replicate is the binding budget
                 e_worst = float(np.max(e_c))
+                # the widened carry also holds the per-order RDP ledger —
+                # quote the tighter budget and let the watchdog track
+                # whichever accountant the run selected
+                e_rdp = None
+                if m.shape[-1] > 4:
+                    e_r, _ = privacy.compose_from_moments(
+                        m, proto.delta, accountant="rdp")
+                    e_rdp = float(np.max(e_r))
+                e_track = (e_rdp if args.accountant == "rdp"
+                           and e_rdp is not None else e_worst)
                 if eps_dog is not None:
-                    eps_dog.check(e_worst, step=t - 1)
+                    eps_dog.check(e_track, step=t - 1)
                 if do_eval and runlog is not None:
+                    extra = ({"eps_rdp": e_rdp,
+                              "accountant": args.accountant}
+                             if e_rdp is not None else {})
                     runlog.epsilon(
                         step=t - 1, eps_composed=e_worst,
                         delta_composed=float(np.max(d_c)),
@@ -504,7 +543,8 @@ def main(argv=None):
                         eps_round=float(np.asarray(
                             out["telemetry"])[-1, ...,
                                               tele.fields.index("epsilon")]
-                            .max()))
+                            .max()),
+                        **extra)
             if do_eval:
                 metrics = jax.tree_util.tree_map(lambda a: a[-1],
                                                  out["metrics"])
@@ -593,6 +633,13 @@ def main(argv=None):
               f"{rep['epsilon_composed_mean']:.3g}"
               f"±{rep['epsilon_composed_ci95']:.2g} "
               f"(delta={rep['delta_composed']:.2g})")
+        print(f"[train] accountant[{rep['accountant']}]: "
+              f"rdp={rep['epsilon_rdp_mean']:.3g} vs "
+              f"advanced={rep['epsilon_advanced_mean']:.3g} "
+              f"-> quoting {rep['epsilon_total_mean']:.3g}"
+              f"±{rep['epsilon_total_ci95']:.2g} "
+              f"(delta={rep['delta_total']:.2g}, "
+              f"gap {rep['accountant_gap']:.2g}x)")
         if runlog is not None:
             runlog.event("epsilon_report", rounds=rep["rounds"],
                          replicates=rep["replicates"],
@@ -601,7 +648,14 @@ def main(argv=None):
                              rep["epsilon_composed_mean"]),
                          eps_composed_ci95=float(
                              rep["epsilon_composed_ci95"]),
-                         delta_composed=float(rep["delta_composed"]))
+                         delta_composed=float(rep["delta_composed"]),
+                         eps_rdp_mean=float(rep["epsilon_rdp_mean"]),
+                         eps_total_mean=float(rep["epsilon_total_mean"]),
+                         eps_total_ci95=float(rep["epsilon_total_ci95"]),
+                         delta_total=float(rep["delta_total"]),
+                         accountant_gap=float(rep["accountant_gap"]),
+                         accountant=rep["accountant"],
+                         saturated=bool(rep["saturated"]))
     elif sim is not None:
         # per-round privacy over the REALIZED fading trajectory (not a
         # scalar): Thm 4.1 on each round's channel + worst-case
@@ -619,6 +673,13 @@ def main(argv=None):
               f"max={rep['epsilon_worst']:.3g}  "
               f"composed(eps,delta)=({rep['epsilon_trajectory_composed']:.3g}, "
               f"{rep['delta_trajectory_composed']:.2g})")
+        print(f"[train] accountant[{rep['accountant']}]: "
+              f"rdp={rep['epsilon_rdp']:.3g} vs "
+              f"advanced={rep['epsilon_advanced']:.3g} "
+              f"-> quoting {rep['epsilon_total']:.3g} "
+              f"(delta={rep['delta_total']:.2g}, "
+              f"gap {rep['accountant_gap']:.2g}x, "
+              f"order={rep['rdp_order']:.3g})")
         if runlog is not None:
             runlog.event("epsilon_report", rounds=rep["rounds"],
                          eps_worst_round=float(rep["epsilon_worst"]),
@@ -626,7 +687,14 @@ def main(argv=None):
                          eps_composed=float(
                              rep["epsilon_trajectory_composed"]),
                          delta_composed=float(
-                             rep["delta_trajectory_composed"]))
+                             rep["delta_trajectory_composed"]),
+                         eps_rdp=float(rep["epsilon_rdp"]),
+                         eps_total=float(rep["epsilon_total"]),
+                         delta_total=float(rep["delta_total"]),
+                         accountant_gap=float(rep["accountant_gap"]),
+                         rdp_order=float(rep["rdp_order"]),
+                         accountant=rep["accountant"],
+                         saturated=bool(rep["saturated"]))
     if args.checkpoint:
         meta = {"arch": args.arch, "scheme": args.scheme,
                 "epsilon": rep["epsilon_worst"]}

@@ -69,7 +69,8 @@ class NetworkSimulator:
                  target_epsilon: float = 0.0, gamma: float = 0.05,
                  clip: float = 1.0, delta: float = 1e-5,
                  sparse_k: int = 0, graph_fallback: bool = False,
-                 graph_block: int = 0):
+                 graph_block: int = 0, target_total_epsilon: float = 0.0,
+                 horizon: int = 0, accountant: str = "composition"):
         if coherence_rounds > 0:
             scenario = scenario.with_coherence(coherence_rounds)
         self.scenario = scenario
@@ -81,6 +82,30 @@ class NetworkSimulator:
         self.beta_slack = float(beta_slack)
         self.target_epsilon = float(target_epsilon)
         self.gamma, self.clip, self.delta = float(gamma), float(clip), float(delta)
+        # total-budget calibration (core.accounting, DESIGN §16): the
+        # per-round target — an RDP rate ρ or a δ-split advanced-
+        # composition ε share — is a HOST float derived once here, so the
+        # traced per-round re-calibration stays a closed-over scalar
+        self.target_total_epsilon = float(target_total_epsilon)
+        self.accountant = accountant
+        self._rho_round = self._eps_round_split = self._delta_round = None
+        if self.target_total_epsilon > 0:
+            from repro.core import accounting
+            if self.target_epsilon > 0:
+                raise ValueError("target_epsilon and target_total_epsilon "
+                                 "are mutually exclusive")
+            if horizon < 1:
+                raise ValueError("target_total_epsilon needs horizon >= 1")
+            if accountant == "rdp":
+                self._rho_round = accounting.rho_total_for_epsilon(
+                    self.target_total_epsilon, self.delta) / horizon
+            elif accountant == "composition":
+                self._eps_round_split, self._delta_round = (
+                    accounting.epsilon_round_for_total_advanced(
+                        self.target_total_epsilon, self.delta, horizon))
+            else:
+                raise ValueError(f"accountant must be 'rdp' or "
+                                 f"'composition', got {accountant!r}")
         # sparse_k > 0: rounds emit a padded neighbor-list W
         # (repro.net.sparse.SparseW, degree cap k) built by the blocked
         # capped mutual-kNN ∩ unit-disk Metropolis construction — the
@@ -129,6 +154,21 @@ class NetworkSimulator:
             sig = privacy.sigma_for_epsilon_traced(
                 self.target_epsilon, self.gamma, self.clip, chan, self.delta,
                 W)
+            chan = chan.with_sigma(jnp.maximum(sig, 1e-12))
+        elif self._rho_round is not None:
+            # rdp total-budget calibration: hold the round at its uniform
+            # RDP-rate share ρ_total/T on the realized neighborhoods
+            from repro.core import accounting
+            sig = accounting.sigma_for_rho_traced(
+                self._rho_round, self.gamma, self.clip, chan, W)
+            chan = chan.with_sigma(jnp.maximum(sig, 1e-12))
+        elif self._eps_round_split is not None:
+            # composition total-budget calibration: the inverted δ-split
+            # advanced-composition per-round share
+            from repro.core import privacy
+            sig = privacy.sigma_for_epsilon_traced(
+                self._eps_round_split, self.gamma, self.clip, chan,
+                self._delta_round, W)
             chan = chan.with_sigma(jnp.maximum(sig, 1e-12))
         return chan
 

@@ -48,7 +48,8 @@ def summarize_run(run_dir) -> Dict[str, Any]:
     if eps_events:
         last = eps_events[-1]
         eps = {k: last.get(k) for k in ("step", "eps_round", "eps_composed",
-                                        "delta_composed", "rounds")
+                                        "delta_composed", "rounds",
+                                        "eps_rdp", "accountant")
                if k in last}
         eps["per_round"] = _stats([e.get("eps_round") for e in eps_events])
     return {
@@ -111,6 +112,9 @@ def print_run(summary: Dict[str, Any]) -> None:
             console(f"    composed    eps={ep['eps_composed']:.4g} "
                     f"delta={ep.get('delta_composed', float('nan')):.3g} "
                     f"over {ep.get('rounds', '?')} rounds")
+        if ep.get("eps_rdp") is not None:
+            console(f"    rdp         eps={ep['eps_rdp']:.4g} "
+                    f"(accountant={ep.get('accountant', 'composition')})")
 
     if summary["warnings"]:
         console(f"  warnings ({len(summary['warnings'])})")

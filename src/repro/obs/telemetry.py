@@ -27,10 +27,14 @@ already has in registers/VMEM):
                        formula ``epsilon_report`` applies host-side)
 
 With ``epsilon`` enabled the scan carry also accumulates the running
-composition moments ``[Σε, Σε², Σε(e^ε−1), T]`` (TrajCarry.eps), so the
-composed trajectory budget comes out of the compiled chunk for free
-(privacy.compose_from_moments) instead of being recomputed host-side from
-the stacked channel log.
+accountant moments ``[Σε, Σε², Σε(e^ε−1), T, Σε(α₁), …, Σε(α_A)]``
+(TrajCarry.eps): the first four are the advanced-composition sufficient
+statistics, the appended [A] block is the per-order Rényi-DP ledger on
+core.accounting's fixed order grid (RDP composes additively, so the
+ledger is just a per-order running sum). The composed trajectory budget
+under BOTH accountants then comes out of the compiled chunk for free
+(privacy.compose_from_moments ``accountant=`` dispatch) instead of being
+recomputed host-side from the stacked channel log.
 
 Telemetry NEVER consumes PRNG keys and never touches the carry params —
 the realized training trajectory with telemetry on is bitwise the
@@ -206,17 +210,45 @@ def epsilon_round(proto, chan, W=None) -> jnp.ndarray:
     return jnp.max(eps)
 
 
-def init_eps_moments(replicates: Optional[int] = None) -> jnp.ndarray:
-    """Zeroed composition-moment accumulator for TrajCarry.eps:
-    [Σε, Σε², Σε(e^ε−1), T] — [4] f32, or [R, 4] for the fleet."""
-    z = jnp.zeros((4,), jnp.float32)
+def rdp_round(proto, chan, W=None) -> jnp.ndarray:
+    """Worst-receiver per-round RDP vector [A] on the accounting order
+    grid, evaluated on the round's realized channel + masking
+    neighborhood — the Rényi companion of ``epsilon_round``, folded into
+    the widened carry by the chunk epilogue."""
+    from repro.core import accounting
+    return accounting.rdp_dwfl_traced(proto.gamma, proto.clip, chan, W)
+
+
+def init_eps_moments(replicates: Optional[int] = None,
+                     n_orders: Optional[int] = None) -> jnp.ndarray:
+    """Zeroed accountant accumulator for TrajCarry.eps:
+    [Σε, Σε², Σε(e^ε−1), T | Σε(α₁..α_A)] — [4+A] f32, or [R, 4+A] for
+    the fleet. ``n_orders`` defaults to the accounting order grid (the
+    shipped carry layout); pass 0 for the legacy composition-only [4]."""
+    from repro.core import accounting
+    a = accounting.N_ORDERS if n_orders is None else int(n_orders)
+    z = jnp.zeros((4 + a,), jnp.float32)
     if replicates is not None:
-        z = jnp.broadcast_to(z[None], (replicates, 4)) + 0.0
+        z = jnp.broadcast_to(z[None], (replicates, 4 + a)) + 0.0
     return z
 
 
-def accumulate_eps(acc: jnp.ndarray, eps: jnp.ndarray) -> jnp.ndarray:
-    """One round's moment update (eps scalar or [R]; acc [4] or [R, 4])."""
+def accumulate_eps(acc: jnp.ndarray, eps: jnp.ndarray,
+                   rdp: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """One round's accountant update (eps scalar or [R]; acc [4+A] or
+    [R, 4+A]). ``rdp`` is the round's per-order RDP vector ([A] or
+    [R, A], e.g. ``rdp_round``) — required exactly when the accumulator
+    carries the RDP ledger."""
     e = jnp.asarray(eps, jnp.float32)
     upd = jnp.stack([e, e ** 2, e * jnp.expm1(e), jnp.ones_like(e)], axis=-1)
-    return acc + upd
+    if acc.shape[-1] == 4:
+        if rdp is not None:
+            raise ValueError("rdp update passed to a legacy [4] "
+                             "accumulator — widen it with "
+                             "init_eps_moments()")
+        return acc + upd
+    if rdp is None:
+        raise ValueError(f"accumulator shape {acc.shape} carries an RDP "
+                         f"ledger; pass rdp= (see rdp_round)")
+    return acc + jnp.concatenate(
+        [upd, jnp.asarray(rdp, jnp.float32)], axis=-1)

@@ -115,23 +115,59 @@ def test_epsilon_round_matches_privacy_traced():
 
 def test_eps_moments_compose_like_heterogeneous():
     """compose_from_moments(Σ moments) == compose_heterogeneous(eps list),
-    the scan-carry accumulator's contract."""
+    the scan-carry accumulator's contract — now on the WIDENED [4+A]
+    layout carrying the per-order RDP ledger (ISSUE 10)."""
+    from repro.core import accounting
     rng = np.random.default_rng(2)
     eps_list = rng.uniform(0.01, 0.4, size=37)
+    rho_list = accounting.rho_from_epsilon(eps_list, 1e-5)
+    orders = np.asarray(accounting.ORDER_GRID)
     acc = tl.init_eps_moments()
-    for e in eps_list:
-        acc = tl.accumulate_eps(acc, jnp.float32(e))
-    assert np.asarray(acc).shape == (4,)
+    for e, r in zip(eps_list, rho_list):
+        acc = tl.accumulate_eps(acc, jnp.float32(e),
+                                rdp=jnp.asarray(orders * r, jnp.float32))
+    assert np.asarray(acc).shape == (4 + accounting.N_ORDERS,)
     assert int(np.asarray(acc)[3]) == 37
     e_m, d_m = privacy.compose_from_moments(np.asarray(acc), 1e-5)
     e_ref, d_ref = privacy.compose_heterogeneous(eps_list, 1e-5)
     np.testing.assert_allclose(e_m, e_ref, rtol=1e-4)
     np.testing.assert_allclose(d_m, d_ref, rtol=1e-8)
+    # the appended ledger block converts through the rdp dispatch and is
+    # tighter than the composition quote on this trajectory
+    e_r, d_r = privacy.compose_from_moments(np.asarray(acc), 1e-5,
+                                            accountant="rdp")
+    e_want, _ = accounting.rdp_to_epsilon(orders * rho_list.sum(), d_r)
+    np.testing.assert_allclose(e_r, e_want, rtol=1e-4)
+    assert e_r < e_m and d_r == pytest.approx(37 * 1e-5 + 1e-6)
+    e_min, _ = privacy.compose_from_moments(np.asarray(acc), 1e-5,
+                                           accountant="min")
+    assert e_min == pytest.approx(min(e_m, e_r))
+    # legacy narrow [4] accumulators still work, and the layouts guard
+    # each other: rdp into [4] / missing rdp on [4+A] / rdp dispatch on [4]
+    acc4 = tl.init_eps_moments(n_orders=0)
+    acc4 = tl.accumulate_eps(acc4, jnp.float32(0.2))
+    assert np.asarray(acc4).shape == (4,)
+    with pytest.raises(ValueError):
+        tl.accumulate_eps(acc4, jnp.float32(0.2),
+                          rdp=jnp.asarray(orders, jnp.float32))
+    with pytest.raises(ValueError):
+        tl.accumulate_eps(acc, jnp.float32(0.2))
+    with pytest.raises(ValueError):
+        privacy.compose_from_moments(np.asarray(acc4), 1e-5,
+                                     accountant="rdp")
     # batched (fleet) accumulators compose per replicate
     accR = tl.init_eps_moments(replicates=3)
-    accR = tl.accumulate_eps(accR, jnp.asarray([0.1, 0.2, 0.3], jnp.float32))
+    accR = tl.accumulate_eps(
+        accR, jnp.asarray([0.1, 0.2, 0.3], jnp.float32),
+        rdp=jnp.asarray(orders[None]
+                        * np.asarray(accounting.rho_from_epsilon(
+                            np.asarray([0.1, 0.2, 0.3]), 1e-5))[:, None],
+                        jnp.float32))
     e_b, d_b = privacy.compose_from_moments(np.asarray(accR), 1e-5)
     assert e_b.shape == (3,) and (np.diff(e_b) > 0).all()
+    e_bR, _ = privacy.compose_from_moments(np.asarray(accR), 1e-5,
+                                           accountant="rdp")
+    assert e_bR.shape == (3,) and (np.diff(e_bR) > 0).all()
     with pytest.raises(ValueError):
         privacy.compose_from_moments(np.zeros((3,)), 1e-5)
 

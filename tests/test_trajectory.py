@@ -392,12 +392,14 @@ def test_static_telemetry_bitwise_invisible_and_consistent():
     for name in ("snr_db", "deep_fade", "participation", "epsilon"):
         np.testing.assert_allclose(cols[name], ref[name], rtol=1e-6,
                                    err_msg=name)
-    # eps moments: T identical rounds of the constant per-round eps
+    # eps moments: T identical rounds of the constant per-round eps (the
+    # widened carry also folds the constant per-round RDP ledger)
     e = ref["epsilon"]
+    rdp1 = tl.rdp_round(proto, chan, W_mat)
     np.testing.assert_allclose(
         np.asarray(c_on.eps),
         np.asarray(tl.accumulate_eps(tl.init_eps_moments(),
-                                     jnp.float32(e)) * T),
+                                     jnp.float32(e), rdp=rdp1) * T),
         rtol=1e-5)
 
 
@@ -464,10 +466,12 @@ def test_dynamic_telemetry_matches_host_recompute():
                                rtol=1e-5)
     # carry moments == sum of the per-round moment updates, and their
     # composition agrees with the host-side heterogeneous composition
-    from repro.core import privacy
+    from repro.core import accounting, privacy
+    rdp_ref = jax.vmap(lambda ch, w: tl.rdp_round(proto, ch, w))(
+        out_on["chan"], out_on["W"])
     acc = tl.init_eps_moments()
-    for e in np.asarray(eps_ref):
-        acc = tl.accumulate_eps(acc, jnp.float32(e))
+    for e, r in zip(np.asarray(eps_ref), np.asarray(rdp_ref)):
+        acc = tl.accumulate_eps(acc, jnp.float32(e), rdp=jnp.asarray(r))
     np.testing.assert_allclose(np.asarray(c_on.eps), np.asarray(acc),
                                rtol=1e-5)
     e_m, d_m = privacy.compose_from_moments(np.asarray(c_on.eps),
@@ -476,6 +480,17 @@ def test_dynamic_telemetry_matches_host_recompute():
         np.asarray(eps_ref, np.float64), proto.delta)
     np.testing.assert_allclose(e_m, e_ref, rtol=1e-4)
     np.testing.assert_allclose(d_m, d_ref, rtol=1e-6)
+    # in-scan RDP ledger == host-side recomputation from the logged
+    # channel trajectory, through BOTH the raw per-order sums and the
+    # converted budget (ISSUE 10 acceptance: rtol 1e-4)
+    np.testing.assert_allclose(
+        np.asarray(c_on.eps)[4:], np.asarray(rdp_ref).sum(0), rtol=1e-4)
+    e_r, d_r = privacy.compose_from_moments(np.asarray(c_on.eps),
+                                            proto.delta, accountant="rdp")
+    e_host, _ = accounting.rdp_to_epsilon(
+        np.asarray(rdp_ref, np.float64).sum(0), d_r)
+    np.testing.assert_allclose(e_r, e_host, rtol=1e-4)
+    assert e_r < e_m  # the Rényi ledger is the tighter quote here
 
 
 def test_fleet_telemetry_shape_and_host_recompute():
@@ -507,7 +522,8 @@ def test_fleet_telemetry_shape_and_host_recompute():
 
     rows = np.asarray(out_on["telemetry"])
     assert rows.shape == (T, R, tele.n_fields)
-    assert np.asarray(c_on.eps).shape == (R, 4)
+    from repro.core import accounting
+    assert np.asarray(c_on.eps).shape == (R, 4 + accounting.N_ORDERS)
     ref = fleet_round_telemetry(proto, TJ.replicate_major(out_on["chan"]),
                                 TJ.replicate_major(out_on["W"]),
                                 spec=tele)                       # [R, T]
@@ -518,6 +534,13 @@ def test_fleet_telemetry_shape_and_host_recompute():
     np.testing.assert_allclose(
         np.asarray(c_on.eps)[:, 0],
         np.asarray(ref["epsilon"]).sum(axis=1), rtol=1e-5)
+    # per-replicate RDP ledger == host recompute on the [R, T] channel log
+    from repro.obs import telemetry as tl
+    rdp_ref = jax.vmap(jax.vmap(
+        lambda ch, w: tl.rdp_round(proto, ch, w)))(
+        TJ.replicate_major(out_on["chan"]), TJ.replicate_major(out_on["W"]))
+    np.testing.assert_allclose(np.asarray(c_on.eps)[:, 4:],
+                               np.asarray(rdp_ref).sum(axis=1), rtol=1e-4)
 
 
 def test_telemetry_field_subset_layout():
